@@ -1,0 +1,70 @@
+"""Kernel functional-verification matrix (paper §IV-D analogue).
+
+For each Pallas kernel: interpret-mode output vs the jnp oracle across a
+shape sweep -- the FPGA-vs-simulator-vs-Python triangle of the paper, with
+interpret-mode standing in for the FPGA bitstream.  us_per_call times the
+jit'd oracle path (the CPU-executable surrogate; TPU timings come from the
+roofline, not this container).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.formats import bcsr_from_csr, ell_from_csr
+from repro.data.matrices import random_spd
+from repro.kernels import ops, ref
+
+
+def _t(f, *a, reps=20):
+    out = f(*a)
+    jnp.asarray(out[0] if isinstance(out, tuple) else out).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*a)
+    jnp.asarray(out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    m = random_spd(512, 0.02, 3)
+    x = jnp.asarray(rng.standard_normal(512), jnp.float32)
+
+    ell = ell_from_csr(m, row_pad=8, width_pad=8)
+    ops.backend_mode("interpret")
+    y_k = ops.ell_spmv(ell.cols, ell.vals, x, tm=8, tw=8)
+    ops.backend_mode("never")
+    y_r = ref.ell_spmv_ref(ell.cols, ell.vals, x)
+    err = float(jnp.abs(y_k - y_r).max())
+    dt = _t(lambda: ref.ell_spmv_ref(ell.cols, ell.vals, x))
+    rows.append(("kernel_ell_spmv", dt * 1e6, f"interpret_vs_ref_maxerr={err:.2e}"))
+
+    b = bcsr_from_csr(m, bm=8, bn=128)
+    xm = jnp.asarray(rng.standard_normal((b.blocks.shape[0] and ((512 + 127) // 128) * 128, 8)), jnp.float32)
+    ops.backend_mode("interpret")
+    y_k = ops.bcsr_spmm(b.block_cols, b.blocks, xm)
+    ops.backend_mode("never")
+    y_r = ref.bcsr_spmm_ref(b.block_cols, b.blocks, xm)
+    err = float(jnp.abs(y_k - y_r).max())
+    dt = _t(lambda: ref.bcsr_spmm_ref(b.block_cols, b.blocks, xm))
+    rows.append(("kernel_bcsr_spmm", dt * 1e6, f"interpret_vs_ref_maxerr={err:.2e}"))
+
+    z_r, zz_r = ref.axpy_dot_ref(0.3, x, x)
+    ops.backend_mode("interpret")
+    z_k, zz_k = ops.axpy_dot(0.3, jnp.pad(x, (0, 512 % 1024)), jnp.pad(x, (0, 512 % 1024)))
+    ops.backend_mode("never")
+    err = float(jnp.abs(z_k[:512] - z_r).max())
+    dt = _t(lambda: ref.axpy_dot_ref(0.3, x, x))
+    rows.append(("kernel_axpy_dot", dt * 1e6, f"interpret_vs_ref_maxerr={err:.2e}"))
+    ops.backend_mode("auto")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,39 @@
+"""Benchmark harness -- one module per paper table/figure:
+
+  bench_spmv     Fig. 1  (fraction of peak; interconnect-traffic reduction)
+  bench_sptrsv   Fig. 2  (available parallelism per level + solve timing)
+  bench_pcg      §IV     (end-to-end PCG convergence/throughput/verify)
+  bench_kernels  §IV-D   (kernel functional verification matrix)
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline tables (dry-run derived)
+live in EXPERIMENTS.md and are produced by repro.roofline, not here.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # solver benches verify at f64
+
+
+def main() -> None:
+    from . import bench_kernels, bench_pcg, bench_spmv, bench_sptrsv
+
+    ok = True
+    print("name,us_per_call,derived")
+    for mod in (bench_spmv, bench_sptrsv, bench_pcg, bench_kernels):
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            ok = False
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

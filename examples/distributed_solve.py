@@ -1,0 +1,64 @@
+"""Distributed Azul engine on a (forced-host) 2x2 mesh: 2D-partitioned
+SpMV/PCG plus the block-stage distributed SpTRSV.
+
+    PYTHONPATH=src python examples/distributed_solve.py
+
+The engine pins matrix blocks device-resident and moves only vector shards
+over the mesh (ppermute transpose + row all-gather + col reduce-scatter per
+SpMV) -- Azul's NoC dataflow on the ICI analogue.  Verifies distributed ==
+single-device == numpy.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import sys
+
+import numpy as np
+import scipy.sparse as sp
+
+sys.path.insert(0, "src")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)   # solver oracles compare at f64
+
+from repro.core.engine import AzulEngine
+from repro.core.formats import csr_from_scipy
+from repro.data.matrices import laplacian_2d
+
+
+def main():
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2), ("data", "model"))
+    m = laplacian_2d(32)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    rng = np.random.default_rng(0)
+    x_true = rng.standard_normal(m.shape[0])
+    b = a @ x_true
+
+    eng = AzulEngine(m, mesh=mesh, mode="2d", precond="block_ic0", dtype=np.float64)
+    y = eng.spmv(x_true)
+    assert np.allclose(y, b, atol=1e-8)
+    print("distributed SpMV == numpy  (matrix blocks never crossed the mesh)")
+
+    x, norms = eng.solve(b, method="pcg", iters=120)
+    print(f"distributed PCG: rel res {norms[-1]/np.linalg.norm(b):.2e}, "
+          f"max err {np.abs(x - x_true).max():.2e}")
+
+    l = sp.tril(a).tocsr()
+    trsv = eng.build_sptrsv(csr_from_scipy(l))
+    from scipy.sparse.linalg import spsolve_triangular
+    xs = trsv(b)
+    ref = spsolve_triangular(l, b, lower=True)
+    print(f"distributed SpTRSV (block-stage wavefronts): max err "
+          f"{np.abs(xs - ref).max():.2e}")
+
+    eng1 = AzulEngine(m, mesh=mesh, mode="1d", precond="jacobi", dtype=np.float64)
+    x1, _ = eng1.solve(b, method="pcg", iters=120)
+    assert np.allclose(x1, x, atol=1e-6)
+    print("1D (bandwidth-hungry baseline) == 2D (Azul plan): OK")
+
+
+if __name__ == "__main__":
+    main()

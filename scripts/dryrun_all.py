@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Drive the full (arch x shape x mesh) dry-run matrix, one subprocess per
+cell (fresh XLA each time; the device-count flag must precede jax init).
+Resumable: cells whose JSON already exists are skipped.
+
+    PYTHONPATH=src python scripts/dryrun_all.py [--mesh single multi] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"])
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--timeout", type=int, default=1200)
+    args = ap.parse_args()
+
+    from repro.configs import cells, get, names
+
+    archs = args.archs or names()
+    todo = []
+    for arch in archs:
+        cfg = get(arch)
+        for shape in cells(cfg):
+            for mesh in args.mesh:
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh}.json"
+                )
+                if not os.path.exists(path):
+                    todo.append((arch, shape, mesh, path))
+
+    print(f"{len(todo)} cells to run")
+    failures = []
+    for i, (arch, shape, mesh, path) in enumerate(todo):
+        t0 = time.time()
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", arch, "--shape", shape, "--mesh", mesh,
+             "--out", args.out],
+            capture_output=True, text=True, timeout=args.timeout,
+            env={**os.environ, "PYTHONPATH": "src"},
+        )
+        dt = time.time() - t0
+        status = "OK" if r.returncode == 0 and os.path.exists(path) else "FAIL"
+        print(f"[{i+1}/{len(todo)}] {arch} {shape} {mesh}: {status} ({dt:.0f}s)",
+              flush=True)
+        if status == "FAIL":
+            failures.append((arch, shape, mesh))
+            err_path = path.replace(".json", ".err")
+            with open(err_path, "w") as f:
+                f.write(r.stdout[-4000:] + "\n---\n" + r.stderr[-8000:])
+            print(f"    stderr tail: {r.stderr[-400:]}", flush=True)
+
+    print(f"done: {len(todo) - len(failures)} ok, {len(failures)} failed")
+    if failures:
+        print(json.dumps(failures, indent=1))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

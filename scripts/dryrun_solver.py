@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Dry-run the Azul solver engine itself on the production meshes -- the
+paper-technique cells of the roofline table.
+
+Workload: PCG (50 iterations, Jacobi + block-IC(0)) on a 512x512 2D Poisson
+system (n = 262,144; the paper's canonical SuiteSparse family), partitioned
+2D over the 16x16 pod (Azul plan) and 1D (bandwidth-hungry baseline = what
+a cacheless GPU effectively does), plus the 2x16x16 multi-pod 2D variant.
+
+    PYTHONPATH=src python scripts/dryrun_solver.py [--out experiments/dryrun_solver]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def run(out_dir: str, n_grid: int = 512, iters: int = 50):
+    import jax
+    import numpy as np
+    from repro.core.engine import AzulEngine
+    from repro.data.matrices import laplacian_2d
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.collect import analyze_compiled
+
+    os.makedirs(out_dir, exist_ok=True)
+    m = laplacian_2d(n_grid)
+    n = m.shape[0]
+    results = {}
+
+    cases = [
+        ("pcg2d_jacobi", dict(mode="2d", precond="jacobi"), False, "pcg"),
+        ("pcg2d_blockic0", dict(mode="2d", precond="block_ic0"), False, "pcg"),
+        ("pcg1d_jacobi", dict(mode="1d", precond="jacobi"), False, "pcg"),
+        ("pcg2d_jacobi_multipod", dict(mode="2d", precond="jacobi"), True, "pcg"),
+        # beyond-paper: Chronopoulos-Gear pipelined CG, 1 reduction/iter
+        ("pipecg2d_jacobi", dict(mode="2d", precond="jacobi"), False, "pcg_pipe"),
+    ]
+    for name, kw, multi, method in cases:
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=multi)
+        row_axes = ("pod", "data") if multi else ("data",)
+        eng = AzulEngine(m, mesh=mesh, row_axes=row_axes, dtype=np.float32, **kw)
+        fn = eng._solve_compiled(method, iters)
+        b_sds = jax.ShapeDtypeStruct((eng.n_pad,), np.float32)
+        lowered = fn.lower(b_sds, b_sds)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = analyze_compiled(compiled)
+        rec = {
+            "arch": f"azul-solver-{name}",
+            "shape": f"lap2d_{n_grid}x{n_grid}_pcg{iters}",
+            "mesh": "multi" if multi else "single",
+            "kind": "solve",
+            "n": n, "nnz": m.nnz, "iters": iters,
+            "devices": 512 if multi else 256,
+            "compile_s": round(time.time() - t0, 1),
+            "memory_analysis": {
+                k: getattr(mem, k)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            "cost_analysis": {k: float(cost[k]) for k in ("flops", "bytes accessed") if k in cost},
+            "collectives": coll,
+        }
+        results[name] = rec
+        with open(os.path.join(out_dir, f"solver__{name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        per_iter = coll["total_bytes"] / iters
+        print(f"{name:24s} compile {rec['compile_s']:6.1f}s  "
+              f"coll/iter/dev {per_iter/1e6:8.2f} MB  by_op "
+              f"{ {k: round(v/iters/1e6, 2) for k, v in coll['by_op'].items()} }",
+              flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun_solver")
+    ap.add_argument("--n-grid", type=int, default=512)
+    ap.add_argument("--iters", type=int, default=50)
+    a = ap.parse_args()
+    run(a.out, a.n_grid, a.iters)

@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Build the EXPERIMENTS.md §Roofline table from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/make_roofline.py [--dir experiments/dryrun]
+                                                   [--mesh single]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None, help="filter: single|multi")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get
+    from repro.roofline.analyze import load_cells, markdown_table, roofline_row
+
+    cells = load_cells(args.dir)
+    if args.mesh:
+        cells = [c for c in cells if c["mesh"] == args.mesh]
+    rows = []
+    for c in cells:
+        try:
+            rows.append(roofline_row(c, get(c["arch"])))
+        except Exception as e:  # noqa
+            print(f"skip {c.get('arch')}/{c.get('shape')}: {e}", file=sys.stderr)
+    rows.sort(key=lambda r: (r.arch, r.shape, r.mesh))
+    print(markdown_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([r.__dict__ | {"frac": r.frac_of_roofline()} for r in rows], f, indent=1)
+    # summary
+    doms = {}
+    for r in rows:
+        doms[r.dominant] = doms.get(r.dominant, 0) + 1
+    print(f"\ncells: {len(rows)}; dominant terms: {doms}; "
+          f"fits-HBM: {sum(r.fits_hbm for r in rows)}/{len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

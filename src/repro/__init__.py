@@ -1,0 +1,5 @@
+"""repro: TPU-native distributed sparse iterative solver framework (Azul
+reproduction, Parthasarathy 2025 / Feldmann et al. MICRO'24) plus the
+assigned LM architecture zoo, distribution runtime, and launchers."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+"""Checkpoint substrate: sharded atomic async save/restore."""
+from .manager import CheckpointManager, save, restore, latest_step  # noqa: F401

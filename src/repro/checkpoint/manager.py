@@ -1,0 +1,170 @@
+"""Sharded, atomic, async checkpointing (no tensorstore in this container).
+
+Layout:  <dir>/step_<N>/
+             manifest.json      -- tree structure, shapes, dtypes, checksum
+             <flat_key>.npy     -- one file per leaf (full, unsharded array)
+
+Guarantees:
+  * atomic: written to ``step_<N>.tmp`` then os.rename'd -- a crash mid-save
+    never corrupts the latest checkpoint (restore scans for the newest
+    directory with a valid manifest);
+  * async: ``save_async`` snapshots device arrays to host then writes on a
+    background thread, so the train loop overlaps checkpoint I/O with
+    compute (the v5e-scale pattern; on multi-host each host would write its
+    address_space shards -- here single-process writes the full array);
+  * reshardable: leaves are full arrays, so ``restore(..., sharding_tree=)``
+    can place them onto any mesh -- this is the elastic-scaling path
+    (ft/remesh.py).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+
+import numpy as np
+import jax
+
+__all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(tree, directory: str, step: int, keep: int | None = 3) -> str:
+    flat, _ = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "sum": float(np.sum(arr.astype(np.float64))) if arr.size else 0.0,
+        }
+    manifest["checksum"] = hashlib.sha256(
+        json.dumps(manifest["leaves"], sort_keys=True).encode()
+    ).hexdigest()
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    if keep:
+        _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(_all_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+def _all_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(directory, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return out
+
+
+def latest_step(directory: str) -> int | None:
+    steps = _all_steps(directory)
+    for s in sorted(steps, reverse=True):
+        try:
+            with open(os.path.join(directory, f"step_{s:08d}", "manifest.json")) as f:
+                man = json.load(f)
+            chk = hashlib.sha256(
+                json.dumps(man["leaves"], sort_keys=True).encode()
+            ).hexdigest()
+            if chk == man["checksum"]:
+                return s
+        except (json.JSONDecodeError, KeyError, OSError):
+            continue  # partial/corrupt -- fall back to an older step
+    return None
+
+
+def restore(tree_like, directory: str, step: int | None = None,
+            sharding_tree=None):
+    """Restore into the structure of ``tree_like`` (shapes/dtypes may be
+    ShapeDtypeStructs).  ``sharding_tree``: optional matching tree of
+    NamedShardings for direct sharded placement (elastic remesh)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no valid checkpoint under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+
+    flat, treedef = _flatten(tree_like)
+    flat_sh = None
+    if sharding_tree is not None:
+        flat_sh, _ = _flatten(sharding_tree)
+    out = {}
+    for key in flat:
+        meta = man["leaves"][key]
+        arr = np.load(os.path.join(d, meta["file"]))
+        if flat_sh is not None:
+            arr = jax.device_put(arr, flat_sh[key])
+        out[key] = arr
+    leaves = [out[k] for k in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+class CheckpointManager:
+    """Async wrapper with a single in-flight writer thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, tree, step: int):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before mutation
+
+        def work():
+            save(host_tree, self.dir, step, self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, tree_like, sharding_tree=None, step=None):
+        return restore(tree_like, self.dir, step, sharding_tree)
+
+    def latest_step(self):
+        return latest_step(self.dir)

@@ -1,0 +1,2 @@
+"""Architecture configs (exact published dims) + shape registry."""
+from .base import SHAPES, cells, get, get_smoke, names, subquadratic  # noqa: F401

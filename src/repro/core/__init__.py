@@ -1,0 +1,10 @@
+"""The paper's primary contribution: the Azul sparse-solver engine in JAX.
+
+formats / partition / levels  -- static "task compiler" (host side)
+spops                          -- per-tile sparse math (jnp contracts)
+noc                            -- shard_map NoC: torus collectives, halos
+precond / solvers              -- Jacobi, block-Jacobi, IC(0); CG / PCG
+engine                         -- AzulEngine: pins blocks, runs solves
+"""
+
+from .formats import CSR, ELL, BCSR  # noqa: F401

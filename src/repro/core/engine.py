@@ -1,0 +1,635 @@
+"""AzulEngine: the paper's accelerator as a distributed JAX program.
+
+The engine is the public API of the reproduction.  Given a sparse SPD (or
+lower-triangular) matrix, it
+
+  1. runs the static "task compiler" (partition + ELL packing + level
+     schedules + preconditioner factorization) on the host -- the paper's
+     one-time preprocessing that Azul offloads to a compiler;
+  2. pins the resulting blocks *device-resident* on the mesh (the analogue
+     of Azul's SRAM-pinned matrix blocks: after ``device_put`` the matrix
+     never crosses ICI again -- verified by the roofline collective parse:
+     only vector shards move);
+  3. exposes ``spmv`` / ``build_sptrsv`` / ``solve`` as jit-compiled
+     ``shard_map`` programs whose only cross-device traffic is the vector
+     halo exchange.
+
+Layouts (2D mode, the default -- see partition.plan_2d):
+  * matrix blocks: stacked (pr*pc, br, w) ELL, sharded on the leading axis
+    over all mesh axes -> tile (i, j) owns block A[I=i, J=j];
+  * vectors: (n_pad,) contiguously sharded over all mesh axes ("L_row":
+    tile (i, j) holds subsegment q = i*pc + j of length u);
+  * SpMV = mesh_transpose (L_row -> L_col, one u-shard ppermute)
+         + all_gather of x_J along the row axes (bc bytes in)
+         + local ELL kernel
+         + psum_scatter of y partials along the col axis (br bytes).
+    Per-tile traffic ~ n/pc, vs. the full-n all_gather of the 1D plan.
+
+1D mode is the bandwidth-hungry baseline (what a cache-less GPU run looks
+like): vectors fully sharded, SpMV all-gathers the whole x on every tile.
+It exists so benchmarks can report the paper's "Azul vs. naive" delta.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import noc, solvers
+from .formats import CSR, pad_to
+from .levels import build_schedule
+from .partition import plan_1d, plan_2d, tile_csr
+from .precond import ic0 as host_ic0
+from .spops import spmv_ell_padded
+
+__all__ = ["AzulEngine", "local_sptrsv"]
+
+
+# ---------------------------------------------------------------------------
+# local (per-tile) triangular solve on raw stacked arrays
+# ---------------------------------------------------------------------------
+
+
+def local_sptrsv(cols, vals, diag_inv, b, sched_rows):
+    """Level-scheduled lower solve on one tile's (rows_p, w) ELL block.
+
+    cols/vals: (rows_p, w); diag_inv: (rows_p,) (1.0 in padded rows);
+    b: (rows_p,); sched_rows: (n_levels, W) row ids padded with >= rows_p.
+    Returns x: (rows_p,).  Runs identically on every tile (SPMD) -- tiles
+    holding a dummy schedule produce zeros, which the caller masks.
+    """
+    rows_p = cols.shape[0]
+    x0 = jnp.zeros((rows_p + 1,), vals.dtype)
+    sched_rows = jnp.minimum(sched_rows, rows_p)  # sentinel -> absorber slot
+
+    def level_step(x, level_rows):
+        lr = jnp.minimum(level_rows, rows_p - 1)
+        c = cols[lr]
+        v = vals[lr]
+        off = jnp.where(c != lr[:, None], v, jnp.zeros_like(v))
+        contrib = jnp.sum(off * x[jnp.minimum(c, rows_p)], axis=1)
+        xr = (b[lr] - contrib) * diag_inv[lr]
+        return x.at[level_rows].set(xr, mode="drop"), None
+
+    x, _ = lax.scan(level_step, x0, sched_rows)
+    return x[:rows_p]
+
+
+def _host_diag(m: CSR, r0: int, r1: int) -> np.ndarray:
+    d = np.zeros(r1 - r0, dtype=np.float64)
+    for r in range(r0, r1):
+        s, e = int(m.indptr[r]), int(m.indptr[r + 1])
+        for p in range(s, e):
+            if int(m.indices[p]) == r:
+                d[r - r0] = m.data[p]
+    return d
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+class AzulEngine:
+    """Distributed sparse iterative-solver engine (see module docstring).
+
+    Parameters
+    ----------
+    a : CSR                      square sparse matrix (host side)
+    mesh : jax.sharding.Mesh | None
+        None -> single-device mode (plain jnp ops; oracle/test path).
+    mode : "2d" | "1d"           partition layout (2d = Azul NoC pattern)
+    row_axes / col_axes :        mesh axis names of the tile grid; default
+                                 ("data",) x ("model",); multi-pod solvers
+                                 pass row_axes=("pod", "data").
+    precond : "jacobi" | "block_ic0" | "none"
+    """
+
+    def __init__(
+        self,
+        a: CSR,
+        mesh: Mesh | None = None,
+        mode: str = "2d",
+        row_axes=("data",),
+        col_axes=("model",),
+        precond: str = "jacobi",
+        balance: str = "nnz",
+        dtype=np.float32,
+        row_pad: int = 8,
+        width_pad: int = 8,
+    ):
+        if a.shape[0] != a.shape[1]:
+            raise ValueError("engine expects a square matrix")
+        self.a = a
+        self.n = a.shape[0]
+        self.mesh = mesh
+        self.mode = mode if mesh is not None else "local"
+        self.row_axes = (row_axes,) if isinstance(row_axes, str) else tuple(row_axes)
+        self.col_axes = (col_axes,) if isinstance(col_axes, str) else tuple(col_axes)
+        self.precond = precond
+        self.dtype = dtype
+        self._row_pad = row_pad
+        self._width_pad = width_pad
+        self._compiled: dict = {}
+        self._trsv_cache: dict = {}
+
+        if self.mode == "local":
+            self._build_local()
+        else:
+            self.pr = int(np.prod([mesh.shape[ax] for ax in self.row_axes]))
+            self.pc = int(np.prod([mesh.shape[ax] for ax in self.col_axes]))
+            self._all_axes = self.row_axes + self.col_axes
+            self._vec_spec = P(self._all_axes)
+            self._blk_spec = P(self._all_axes, None, None)
+            if self.mode == "2d":
+                self._build_2d(balance)
+            elif self.mode == "1d":
+                self._build_1d(balance)
+            else:
+                raise ValueError(f"unknown mode {mode!r}")
+
+    # -- construction -------------------------------------------------------
+
+    def _build_local(self):
+        from .formats import ell_from_csr
+        from .spops import extract_diag_ell
+
+        self.ell = ell_from_csr(
+            self.a, width_pad=self._width_pad, row_pad=self._row_pad, dtype=self.dtype
+        )
+        self.n_pad = self.ell.rows_padded
+        dg = _host_diag(self.a, 0, self.n)
+        dg[dg == 0] = 1.0
+        di = np.zeros(self.n_pad, self.dtype)
+        di[: self.n] = 1.0 / dg
+        self._dinv_pad = jnp.asarray(di)
+        if self.precond == "block_ic0":
+            self._ic0 = host_ic0(self.a, dtype=self.dtype)
+
+    def _put(self, x, spec):
+        return jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, spec))
+
+    def _build_2d(self, balance):
+        plan = plan_2d(
+            self.a, self.pr, self.pc, width_pad=self._width_pad,
+            row_pad=self._row_pad, dtype=self.dtype,
+        )
+        self.plan = plan
+        self.n_pad = plan.n_padded
+        self.br = plan.block_rows
+        self.bc = plan.block_cols
+        self.u = self.n_pad // (self.pr * self.pc)
+
+        self.cols = self._put(plan.cols, self._blk_spec)
+        self.vals = self._put(plan.vals, self._blk_spec)
+        self._setup_diag_and_precond(
+            seg_ranges=[
+                (min(q * self.u, self.n), min((q + 1) * self.u, self.n))
+                for q in range(self.pr * self.pc)
+            ],
+            pad2g=None,
+        )
+
+    def _build_1d(self, balance):
+        parts = self.pr * self.pc
+        plan = plan_1d(
+            self.a, parts, balance=balance, width_pad=self._width_pad,
+            row_pad=self._row_pad, dtype=self.dtype,
+        )
+        self.plan = plan
+        self.n_pad = plan.n_padded
+        self.u = plan.rows_per_tile
+
+        # remap global cols -> padded tile layout (tile t, local r) = t*u + r
+        offs = plan.row_offsets
+        cols = np.asarray(plan.cols)
+        owner = np.clip(np.searchsorted(offs, cols, side="right") - 1, 0, parts - 1)
+        cols_pad = (owner * self.u + (cols - offs[owner])).astype(np.int32)
+        pad2g = np.full(self.n_pad, self.n, np.int64)
+        for t in range(parts):
+            cnt = int(offs[t + 1] - offs[t])
+            pad2g[t * self.u : t * self.u + cnt] = np.arange(offs[t], offs[t + 1])
+        self._pad2g = pad2g
+
+        self.cols = self._put(cols_pad, self._blk_spec)
+        self.vals = self._put(plan.vals, self._blk_spec)
+        segs = [(int(offs[t]), int(offs[t + 1])) for t in range(parts)]
+        self._setup_diag_and_precond(seg_ranges=segs, pad2g=pad2g)
+
+    def _setup_diag_and_precond(self, seg_ranges, pad2g):
+        dg_g = _host_diag(self.a, 0, self.n)
+        dg_g[dg_g == 0] = 1.0
+        di = np.zeros(self.n_pad, self.dtype)
+        if pad2g is None:
+            di[: self.n] = 1.0 / dg_g
+        else:
+            valid = pad2g < self.n
+            di[valid] = 1.0 / dg_g[pad2g[valid]]
+        self._dinv_pad = self._put(di, self._vec_spec)
+
+        if self.precond == "block_ic0":
+            rows_p, l_pack, u_pack = self._prep_precond_blocks(seg_ranges)
+            s3 = P(self._all_axes, None, None)
+            s2 = P(self._all_axes, None)
+            self._pc_rows_p = rows_p
+            self._pc_l = tuple(
+                self._put(x, s) for x, s in zip(l_pack, (s3, s3, s2, s3))
+            )
+            self._pc_u = tuple(
+                self._put(x, s) for x, s in zip(u_pack, (s3, s3, s2, s3))
+            )
+            ks = np.asarray([max(r1 - r0, 1) for r0, r1 in seg_ranges], np.int32)
+            self._pc_k = self._put(ks, P(self._all_axes))
+
+    def _prep_precond_blocks(self, seg_ranges):
+        """Factor every vector segment's diagonal block (block-Jacobi IC(0));
+        falls back to point-Jacobi (L = sqrt(D)) for blocks whose IC(0)
+        pivots fail.  Returns stacked, commonly-padded factor arrays."""
+        segs = len(seg_ranges)
+        facs = []
+        for (r0, r1) in seg_ranges:
+            if r1 <= r0:
+                facs.append(None)
+                continue
+            blk = tile_csr(self.a, r0, r1, r0, r1)
+            try:
+                facs.append(host_ic0(blk, dtype=self.dtype))
+            except ValueError:
+                facs.append(None)
+        max_seg = max((r1 - r0 for r0, r1 in seg_ranges), default=1)
+        rows_p = max(
+            [pad_to(max(max_seg, 1), self._row_pad)]
+            + [max(f.ell_l.rows_padded, f.ell_u_rev.rows_padded) for f in facs if f]
+        )
+        w = max([max(f.ell_l.width, f.ell_u_rev.width) for f in facs if f] + [1])
+        nl = max([max(f.sched_l.n_levels, f.sched_u_rev.n_levels) for f in facs if f] + [1])
+        wl = max([max(f.sched_l.max_width, f.sched_u_rev.max_width) for f in facs if f] + [8])
+
+        def pack(get_ell, get_sched):
+            cols = np.zeros((segs, rows_p, w), np.int32)
+            vals = np.zeros((segs, rows_p, w), self.dtype)
+            dinv = np.ones((segs, rows_p), self.dtype)
+            rows = np.full((segs, nl, wl), rows_p, np.int32)
+            for s, f in enumerate(facs):
+                r0, r1 = seg_ranges[s]
+                k = r1 - r0
+                if f is None:
+                    if k <= 0:
+                        continue
+                    dsqrt = np.sqrt(np.maximum(_host_diag(self.a, r0, r1), 1e-30))
+                    cols[s, :k, 0] = np.arange(k)
+                    vals[s, :k, 0] = dsqrt
+                    dinv[s, :k] = 1.0 / dsqrt
+                    # schedule: all rows in one level (diagonal solve)
+                    nrows_lv = min(k, nl * wl)
+                    flat = rows[s].reshape(-1)
+                    flat[:nrows_lv] = np.arange(nrows_lv)
+                    rows[s] = flat.reshape(nl, wl)
+                    continue
+                e, sc = get_ell(f), get_sched(f)
+                rp, ww = e.cols.shape
+                cols[s, :rp, :ww] = np.asarray(e.cols)
+                vals[s, :rp, :ww] = np.asarray(e.vals)
+                dd = np.zeros(rows_p, np.float64)
+                ee_cols = np.asarray(e.cols)
+                ee_vals = np.asarray(e.vals)
+                for r in range(min(rp, rows_p)):
+                    sel = (ee_cols[r] == r) & (ee_vals[r] != 0)
+                    if sel.any():
+                        dd[r] = ee_vals[r][sel][0]
+                dinv[s] = np.where(dd == 0, 1.0, 1.0 / np.where(dd == 0, 1.0, dd))
+                sr = np.asarray(sc.rows)
+                sr = np.where(sr >= sc.n, rows_p, sr)
+                rows[s, : sr.shape[0], : sr.shape[1]] = sr
+            return cols, vals, dinv, rows
+
+        return (
+            rows_p,
+            pack(lambda f: f.ell_l, lambda f: f.sched_l),
+            pack(lambda f: f.ell_u_rev, lambda f: f.sched_u_rev),
+        )
+
+    # -- vector embedding ---------------------------------------------------
+
+    def to_device_vec(self, v: np.ndarray) -> jnp.ndarray:
+        """Embed a global (n,) vector into the padded device layout."""
+        out = np.zeros(self.n_pad, self.dtype)
+        v = np.asarray(v)
+        if self.mode == "1d":
+            valid = self._pad2g < self.n
+            out[valid] = v[self._pad2g[valid]]
+        else:
+            out[: self.n] = v
+        if self.mesh is None:
+            return jnp.asarray(out)
+        return self._put(out, self._vec_spec)
+
+    def from_device_vec(self, v: jnp.ndarray) -> np.ndarray:
+        """Extract the global (n,) vector from the padded device layout."""
+        v = np.asarray(v)
+        if self.mode == "1d":
+            out = np.zeros(self.n, self.dtype)
+            valid = self._pad2g < self.n
+            out[self._pad2g[valid]] = v[valid]
+            return out
+        return v[: self.n]
+
+    # -- distributed program builders ---------------------------------------
+
+    def _mk_matvec(self) -> Callable:
+        """Returns mv(x_loc, cols_loc, vals_loc) -> y_loc with collectives
+        inside; cols/vals arrive as the (1, rows, w) local shard."""
+        row_axes, col_axes, mode = self.row_axes, self.col_axes, self.mode
+        col_axis = col_axes[0] if len(col_axes) == 1 else col_axes
+
+        if mode == "2d":
+            def mv(x_loc, cols_loc, vals_loc):
+                xc = noc.mesh_transpose(x_loc, row_axes, col_axes)
+                xj = noc.gather_along(xc, row_axes)          # (bc,)
+                yp = spmv_ell_padded(cols_loc[0], vals_loc[0], xj)  # (br,)
+                return noc.reduce_scatter_along(yp, col_axis)       # (u,)
+            return mv
+
+        all_axes = self._all_axes
+
+        def mv1d(x_loc, cols_loc, vals_loc):
+            xg = noc.gather_along(x_loc, all_axes)           # (n_pad,)
+            return spmv_ell_padded(cols_loc[0], vals_loc[0], xg)  # (u,)
+        return mv1d
+
+    def _dot(self):
+        axes = self._all_axes
+
+        def dot(u, v):
+            return lax.psum(jnp.sum(u * v), axes)
+        return dot
+
+    def _dot2(self):
+        """Two dots, ONE collective (pipelined-CG reduction fusion)."""
+        axes = self._all_axes
+
+        def dot2(a1, b1, a2, b2):
+            return lax.psum(jnp.stack([jnp.sum(a1 * b1), jnp.sum(a2 * b2)]), axes)
+        return dot2
+
+    # -- public ops ---------------------------------------------------------
+
+    def spmv(self, x) -> np.ndarray:
+        """y = A @ x on *global* vectors (host convenience wrapper)."""
+        if self.mode == "local":
+            from .spops import spmv_ell
+            return np.asarray(spmv_ell(self.ell, jnp.asarray(np.asarray(x), self.dtype)))
+        if "spmv" not in self._compiled:
+            mv = self._mk_matvec()
+            vec, blk = self._vec_spec, self._blk_spec
+            f = jax.shard_map(
+                mv, mesh=self.mesh, in_specs=(vec, blk, blk),
+                out_specs=vec, check_vma=False,
+            )
+            self._compiled["spmv"] = jax.jit(f)
+        y = self._compiled["spmv"](self.to_device_vec(np.asarray(x)), self.cols, self.vals)
+        return self.from_device_vec(y)
+
+    def solve(self, b, method: str = "pcg", iters: int = 200, x0=None):
+        """Solve A x = b; returns (x_global numpy, res_norms numpy)."""
+        if self.mode == "local":
+            res = self._solve_local(method, iters, b, x0)
+            return np.asarray(res.x)[: self.n], np.asarray(res.res_norms)
+        fn = self._solve_compiled(method, iters)
+        bd = self.to_device_vec(np.asarray(b))
+        x0d = self.to_device_vec(
+            np.zeros(self.n) if x0 is None else np.asarray(x0)
+        )
+        x, norms = fn(bd, x0d)
+        return self.from_device_vec(x), np.asarray(norms)
+
+    def _solve_local(self, method, iters, b, x0):
+        b = jnp.asarray(np.asarray(b), self.dtype)
+        b_pad = jnp.zeros(self.n_pad, self.dtype).at[: self.n].set(b)
+        x0_pad = None
+        if x0 is not None:
+            x0_pad = jnp.zeros(self.n_pad, self.dtype).at[: self.n].set(
+                jnp.asarray(np.asarray(x0), self.dtype)
+            )
+        ell = self.ell
+        mv = lambda x: spmv_ell_padded(ell.cols, ell.vals, x)
+        dinv = self._dinv_pad
+        if method == "jacobi":
+            return solvers.jacobi(mv, dinv, b_pad, x0=x0_pad, iters=iters)
+        if method == "cg":
+            return solvers.cg(mv, b_pad, x0=x0_pad, iters=iters)
+        if method == "pcg_pipe":
+            ps = (lambda r: r * dinv) if self.precond == "jacobi" else (lambda r: r)
+            return solvers.pcg_pipelined(mv, b_pad, psolve=ps, x0=x0_pad, iters=iters)
+        if method == "pcg":
+            if self.precond == "block_ic0":
+                from .precond import apply_ic0
+                f = self._ic0
+                n, n_pad = self.n, self.n_pad
+
+                def ps(r):
+                    z = apply_ic0(f, r[:n])
+                    return jnp.zeros(n_pad, r.dtype).at[:n].set(z)
+            elif self.precond == "jacobi":
+                ps = lambda r: r * dinv
+            else:
+                ps = lambda r: r
+            return solvers.pcg(mv, b_pad, psolve=ps, x0=x0_pad, iters=iters)
+        raise ValueError(method)
+
+    def _solve_compiled(self, method, iters):
+        key = (method, iters, self.precond)
+        if key in self._compiled:
+            return self._compiled[key]
+
+        mv = self._mk_matvec()
+        dot = self._dot()
+        mesh = self.mesh
+        vec, blk = self._vec_spec, self._blk_spec
+        s3 = P(self._all_axes, None, None)
+        s2 = P(self._all_axes, None)
+        cols, vals = self.cols, self.vals
+        precond = self.precond if method in ("pcg", "pcg_pipe") else "none"
+        if method == "jacobi":
+            precond = "jacobi"
+        if method == "pcg_pipe" and precond == "block_ic0":
+            precond = "jacobi"  # pipelined variant: local preconditioners only
+
+        extra_args: tuple = ()
+        extra_specs: tuple = ()
+        if precond == "jacobi":
+            extra_args = (self._dinv_pad,)
+            extra_specs = (vec,)
+        elif precond == "block_ic0":
+            extra_args = self._pc_l + self._pc_u + (self._pc_k,)
+            extra_specs = (s3, s3, s2, s3, s3, s3, s2, s3, vec)
+
+        dot2 = self._dot2()
+
+        def prog(b_loc, x0_loc, cols_loc, vals_loc, *extra):
+            amv = lambda x: mv(x, cols_loc, vals_loc)
+            if method == "jacobi":
+                res = solvers.jacobi(amv, extra[0], b_loc, x0=x0_loc,
+                                     iters=iters, dot=dot)
+            elif method == "pcg_pipe":
+                if precond == "jacobi":
+                    dinv_loc = extra[0]
+                    ps = lambda r: r * dinv_loc
+                else:
+                    ps = lambda r: r
+                res = solvers.pcg_pipelined(amv, b_loc, psolve=ps, x0=x0_loc,
+                                            iters=iters, dot2=dot2, dot=dot)
+            else:
+                if precond == "jacobi":
+                    dinv_loc = extra[0]
+                    ps = lambda r: r * dinv_loc
+                elif precond == "block_ic0":
+                    lc, lv, ldi, lr, uc, uv, udi, ur = (a[0] for a in extra[:8])
+                    k = extra[8][0]  # true block size of this tile
+
+                    def flip_k(z):
+                        # reverse the first k entries in-place (padded tail
+                        # stays zero): z_rev[i] = z[k-1-i] for i < k.
+                        idx = k - 1 - jnp.arange(z.shape[0])
+                        ok = idx >= 0
+                        return jnp.where(
+                            ok, z[jnp.clip(idx, 0, z.shape[0] - 1)], 0.0
+                        )
+
+                    def ps(r_loc):
+                        rows_p = lc.shape[0]
+                        bb = jnp.zeros((rows_p,), r_loc.dtype)
+                        bb = bb.at[: r_loc.shape[0]].set(r_loc)
+                        zp = local_sptrsv(lc, lv, ldi, bb, lr)
+                        z = local_sptrsv(uc, uv, udi, flip_k(zp), ur)
+                        return flip_k(z)[: r_loc.shape[0]]
+                else:
+                    ps = lambda r: r
+                res = solvers.pcg(amv, b_loc, psolve=ps, x0=x0_loc,
+                                  iters=iters, dot=dot)
+            return res.x, res.res_norms
+
+        f = jax.shard_map(
+            prog, mesh=mesh,
+            in_specs=(vec, vec, blk, blk) + extra_specs,
+            out_specs=(vec, P()), check_vma=False,
+        )
+        fn = jax.jit(lambda b, x0: f(b, x0, cols, vals, *extra_args))
+        self._compiled[key] = fn
+        return fn
+
+    # -- distributed SpTRSV (2D block-stage forward substitution) -----------
+
+    def build_sptrsv(self, l_csr: CSR):
+        """Compile a distributed lower-triangular solve for ``l_csr`` on this
+        engine's mesh (square 2D grids).  Returns fn: b_global -> x_global.
+
+        Execution = pr block stages of Azul-style wavefronts: at stage I the
+        tiles of block-row I apply their pinned L_IJ against already-solved
+        x_J fragments (local SpMV + psum across the row), the diagonal tile
+        runs its *local level-scheduled* solve (fine-grained wavefronts
+        inside the block), and the solved x_I is broadcast down column I --
+        three NoC messages per stage, the paper's task dataflow made static.
+        """
+        if self.mode != "2d" or self.pr != self.pc:
+            raise ValueError("distributed SpTRSV needs a square 2d engine")
+        key = id(l_csr)
+        if key in self._trsv_cache:
+            return self._trsv_cache[key]
+
+        mesh = self.mesh
+        pr, pc, u = self.pr, self.pc, self.u
+        plan = plan_2d(l_csr, pr, pc, width_pad=self._width_pad,
+                       row_pad=self._row_pad, dtype=self.dtype)
+        if plan.n_padded != self.n_pad:
+            raise ValueError("triangular matrix padding mismatch with engine")
+        br = plan.block_rows
+
+        # per-tile level schedule of its own block (real only on diagonal)
+        scheds = []
+        nl_max, wl_max = 1, 8
+        nl = l_csr.shape[0]
+        for i in range(pr):
+            for j in range(pc):
+                if i == j:
+                    r0, r1 = min(i * br, nl), min((i + 1) * br, nl)
+                    if r1 > r0:
+                        blk = tile_csr(l_csr, r0, r1, r0, r1)
+                        sc = build_schedule(blk)
+                        scheds.append(sc)
+                        nl_max = max(nl_max, sc.n_levels)
+                        wl_max = max(wl_max, sc.max_width)
+                        continue
+                scheds.append(None)
+        rows = np.full((pr * pc, nl_max, wl_max), br, np.int32)
+        for t, sc in enumerate(scheds):
+            if sc is None:
+                continue
+            sr = np.asarray(sc.rows)
+            sr = np.where(sr >= sc.n, br, sr)
+            rows[t, : sr.shape[0], : sr.shape[1]] = sr
+
+        # per-tile diag inverse of its own block (meaningful on diagonal)
+        dloc = np.ones((pr * pc, br), self.dtype)
+        dg = np.ones(self.n_pad, np.float64)
+        dg[: nl] = _host_diag(l_csr, 0, nl)
+        dg[dg == 0] = 1.0
+        for i in range(pr):
+            dloc[i * pc + i] = (1.0 / dg[i * br : (i + 1) * br]).astype(self.dtype)
+
+        s3 = P(self._all_axes, None, None)
+        s2 = P(self._all_axes, None)
+        cols_d = self._put(plan.cols, s3)
+        vals_d = self._put(plan.vals, s3)
+        rows_d = self._put(rows, s3)
+        dinv_d = self._put(dloc, s2)
+
+        row_axes, col_axes = self.row_axes, self.col_axes
+        all_axes = self._all_axes
+
+        def prog(b_loc, cols, vals, rows, dinv):
+            cols, vals, rows, dinv = cols[0], vals[0], rows[0], dinv[0]
+            ri = lax.axis_index(row_axes)
+            ci = lax.axis_index(col_axes)
+            b_row = noc.gather_along(b_loc, col_axes)        # (br,) = b_I
+            x_col = jnp.zeros((br,), vals.dtype)             # known x_J (ours)
+            out = jnp.zeros((u,), vals.dtype)
+
+            def stage(carry, i_stage):
+                x_col, out = carry
+                part = spmv_ell_padded(cols, vals, x_col)    # L_iJ x_J
+                s = lax.psum(part, col_axes)                 # row-combine
+                rhs = b_row - s
+                xi = local_sptrsv(cols, vals, dinv, rhs, rows)
+                mine = (ri == i_stage) & (ci == i_stage)
+                x_i = lax.psum(
+                    jnp.where(mine, xi, jnp.zeros_like(xi)), all_axes
+                )
+                x_col = jnp.where(ci == i_stage, x_i, x_col)
+                seg = lax.dynamic_slice(x_i, (ci * u,), (u,))
+                out = jnp.where(ri == i_stage, seg, out)
+                return (x_col, out), None
+
+            (x_col, out), _ = lax.scan(stage, (x_col, out), jnp.arange(pr))
+            return out
+
+        vec = self._vec_spec
+        f = jax.shard_map(
+            prog, mesh=mesh,
+            in_specs=(vec, s3, s3, s3, s2),
+            out_specs=vec, check_vma=False,
+        )
+        fn_dev = jax.jit(lambda b: f(b, cols_d, vals_d, rows_d, dinv_d))
+
+        def solve(b_global):
+            bd = self.to_device_vec(np.asarray(b_global))
+            return self.from_device_vec(fn_dev(bd))
+
+        solve.device_fn = fn_dev
+        self._trsv_cache[key] = solve
+        return solve

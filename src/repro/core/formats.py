@@ -1,0 +1,260 @@
+"""Sparse matrix storage formats used by the Azul engine.
+
+Azul pins blocks of the sparse matrix ``A`` into per-tile SRAM and never
+moves them again (inter-iteration reuse).  On TPU the analogous requirement
+is that per-device blocks be stored in a *regular*, densely-strided layout so
+that the Pallas kernels stream them HBM->VMEM with contiguous loads and the
+MXU/VPU see aligned tiles.  We therefore support three formats:
+
+* ``CSR``      -- the interchange format (scipy-compatible) used on the host.
+* ``ELL``      -- ELLPACK: every row padded to a common nnz width.  The TPU
+                  SpMV hot loop is a gather + multiply-add over a dense
+                  (rows, width) array; rows/width are padded to hardware
+                  tiles (8 x 128 for f32).
+* ``BCSR``     -- block-compressed rows of dense (bm, bn) blocks; SpMV over
+                  BCSR is a sequence of small dense matmuls -> MXU path.
+
+All device-side containers are NamedTuples of arrays so they are pytrees and
+can be donated / sharded with jax.jit + shard_map.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "CSR",
+    "ELL",
+    "BCSR",
+    "csr_from_dense",
+    "csr_to_dense",
+    "csr_from_scipy",
+    "ell_from_csr",
+    "ell_to_dense",
+    "bcsr_from_csr",
+    "bcsr_to_dense",
+    "pad_to",
+]
+
+
+def pad_to(x: int, mult: int) -> int:
+    """Round ``x`` up to a multiple of ``mult``."""
+    if mult <= 0:
+        raise ValueError(f"padding multiple must be positive, got {mult}")
+    return ((x + mult - 1) // mult) * mult
+
+
+class CSR(NamedTuple):
+    """Compressed sparse row.  Host-side interchange format.
+
+    ``indptr``:  (n_rows + 1,) int32
+    ``indices``: (nnz,)      int32 column ids, sorted within each row
+    ``data``:    (nnz,)      float
+    ``shape``:   static (n_rows, n_cols)
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    data: np.ndarray
+    shape: tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+class ELL(NamedTuple):
+    """ELLPACK, padded.  Device-side SpMV format.
+
+    ``cols``: (rows_padded, width) int32; padding entries hold ``0`` and are
+              masked by ``mask`` (we keep an explicit mask instead of a
+              sentinel so gathers stay in-bounds on TPU).
+    ``vals``: (rows_padded, width) float; padding entries are 0.0 so an
+              unmasked multiply-add is *also* correct -- the mask only matters
+              when the x-gather of a padded 0 col might read NaN/inf.
+    ``n_rows``/``n_cols``: the true (unpadded) dims, static.
+    """
+
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+    n_rows: int
+    n_cols: int
+
+    @property
+    def rows_padded(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.cols.shape[1]
+
+
+class BCSR(NamedTuple):
+    """Block-CSR of dense (bm, bn) blocks, padded to ``width`` blocks/row.
+
+    ``block_cols``: (n_block_rows, width) int32 block-column ids (0 padded)
+    ``blocks``:     (n_block_rows, width, bm, bn) float dense blocks
+    ``n_rows``/``n_cols``: true dims, static.
+    """
+
+    block_cols: jnp.ndarray
+    blocks: jnp.ndarray
+    n_rows: int
+    n_cols: int
+
+    @property
+    def bm(self) -> int:
+        return self.blocks.shape[2]
+
+    @property
+    def bn(self) -> int:
+        return self.blocks.shape[3]
+
+    @property
+    def width(self) -> int:
+        return self.blocks.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Builders (host side, numpy)
+# ---------------------------------------------------------------------------
+
+
+def csr_from_dense(a: np.ndarray, tol: float = 0.0) -> CSR:
+    a = np.asarray(a)
+    if a.ndim != 2:
+        raise ValueError("csr_from_dense expects a 2D array")
+    mask = np.abs(a) > tol
+    indptr = np.zeros(a.shape[0] + 1, dtype=np.int32)
+    np.cumsum(mask.sum(axis=1), out=indptr[1:])
+    indices = np.nonzero(mask)[1].astype(np.int32)
+    data = a[mask].astype(a.dtype)
+    return CSR(indptr, indices, data, (a.shape[0], a.shape[1]))
+
+
+def csr_to_dense(m: CSR) -> np.ndarray:
+    out = np.zeros(m.shape, dtype=m.data.dtype if m.data.size else np.float32)
+    for r in range(m.shape[0]):
+        s, e = int(m.indptr[r]), int(m.indptr[r + 1])
+        out[r, m.indices[s:e]] = m.data[s:e]
+    return out
+
+
+def csr_from_scipy(m) -> CSR:
+    """Accept a scipy.sparse matrix (any format)."""
+    m = m.tocsr()
+    m.sort_indices()
+    return CSR(
+        m.indptr.astype(np.int32),
+        m.indices.astype(np.int32),
+        np.asarray(m.data),
+        tuple(m.shape),
+    )
+
+
+def ell_from_csr(
+    m: CSR,
+    width: int | None = None,
+    row_pad: int = 8,
+    width_pad: int = 1,
+    dtype=np.float32,
+) -> ELL:
+    """Pack a CSR matrix into padded ELLPACK.
+
+    ``width`` defaults to the max row nnz; it is then padded to a multiple of
+    ``width_pad``.  Rows are padded to a multiple of ``row_pad`` (TPU sublane
+    granularity).  Padding cols point at column 0 with value 0.0, which keeps
+    gathers in-bounds and the multiply-add exact.
+    """
+    n_rows, n_cols = m.shape
+    row_nnz = m.row_nnz()
+    w = int(row_nnz.max()) if (width is None and n_rows) else int(width or 0)
+    w = max(w, 1)
+    w = pad_to(w, width_pad)
+    rp = pad_to(max(n_rows, 1), row_pad)
+
+    cols = np.zeros((rp, w), dtype=np.int32)
+    vals = np.zeros((rp, w), dtype=dtype)
+    for r in range(n_rows):
+        s, e = int(m.indptr[r]), int(m.indptr[r + 1])
+        k = e - s
+        if k > w:
+            raise ValueError(f"row {r} has nnz {k} > ELL width {w}")
+        cols[r, :k] = m.indices[s:e]
+        vals[r, :k] = m.data[s:e]
+    return ELL(jnp.asarray(cols), jnp.asarray(vals), n_rows, n_cols)
+
+
+def ell_to_dense(m: ELL) -> np.ndarray:
+    cols = np.asarray(m.cols)
+    vals = np.asarray(m.vals)
+    out = np.zeros((m.n_rows, m.n_cols), dtype=vals.dtype)
+    for r in range(m.n_rows):
+        for k in range(m.width):
+            if vals[r, k] != 0.0:
+                out[r, cols[r, k]] += vals[r, k]
+    return out
+
+
+def bcsr_from_csr(
+    m: CSR,
+    bm: int = 8,
+    bn: int = 128,
+    width: int | None = None,
+    dtype=np.float32,
+) -> BCSR:
+    """Pack CSR into padded BCSR of dense (bm, bn) blocks.
+
+    A block (I, J) is materialized iff any nnz falls inside it.  Block rows
+    are padded to a common ``width`` (max blocks per block-row).  This is the
+    MXU-friendly format: SpMV becomes ``width`` dense (bm, bn) @ (bn,) fmas.
+    """
+    n_rows, n_cols = m.shape
+    nbr = pad_to(max(n_rows, 1), bm) // bm
+    nbc = pad_to(max(n_cols, 1), bn) // bn
+
+    # bucket nnz by (block_row, block_col)
+    buckets: dict[tuple[int, int], list[tuple[int, int, float]]] = {}
+    for r in range(n_rows):
+        s, e = int(m.indptr[r]), int(m.indptr[r + 1])
+        for p in range(s, e):
+            c = int(m.indices[p])
+            buckets.setdefault((r // bm, c // bn), []).append((r % bm, c % bn, m.data[p]))
+
+    per_row: list[list[int]] = [[] for _ in range(nbr)]
+    for (I, J) in buckets:
+        per_row[I].append(J)
+    wmax = max((len(v) for v in per_row), default=0)
+    w = max(int(width or wmax), 1)
+    if wmax > w:
+        raise ValueError(f"block row has {wmax} blocks > width {w}")
+
+    block_cols = np.zeros((nbr, w), dtype=np.int32)
+    blocks = np.zeros((nbr, w, bm, bn), dtype=dtype)
+    for I in range(nbr):
+        for k, J in enumerate(sorted(per_row[I])):
+            block_cols[I, k] = J
+            for (ri, ci, v) in buckets[(I, J)]:
+                blocks[I, k, ri, ci] += v
+    return BCSR(jnp.asarray(block_cols), jnp.asarray(blocks), n_rows, n_cols)
+
+
+def bcsr_to_dense(m: BCSR) -> np.ndarray:
+    bc = np.asarray(m.block_cols)
+    bl = np.asarray(m.blocks)
+    nbr, w, bm, bn = bl.shape
+    out = np.zeros((nbr * bm, (np.max(bc) + 1) * bn if bc.size else bn), dtype=bl.dtype)
+    # widen to true col count
+    full = np.zeros((nbr * bm, pad_to(max(m.n_cols, 1), bn)), dtype=bl.dtype)
+    for I in range(nbr):
+        for k in range(w):
+            J = int(bc[I, k])
+            full[I * bm:(I + 1) * bm, J * bn:(J + 1) * bn] += bl[I, k]
+    del out
+    return full[: m.n_rows, : m.n_cols]

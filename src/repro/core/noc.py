@@ -1,0 +1,101 @@
+"""The NoC layer: Azul's send/recv message passing on the ICI torus.
+
+Azul synchronizes PEs *only* through network messages (custom send/recv
+RISC-V instructions over a 2D-torus NoC).  Under ``shard_map`` the same
+role is played by ``jax.lax`` collectives over named mesh axes; this module
+wraps them in a send/recv-flavoured API so the engine reads like the
+paper's programming model:
+
+  neighbor_shift    -- one torus hop (ppermute), Azul's point-to-point send
+  gather_cols/rows  -- assemble an x halo along a mesh axis (all_gather)
+  reduce_rows       -- combine partial y fragments (psum / psum_scatter)
+  mesh_transpose    -- the (i, j) -> (j, i) vector-layout swap between the
+                       SpMV output layout (row blocks) and input layout
+                       (column blocks); a single permutation step on the
+                       torus, the analogue of Azul's x redistribution.
+  bcast_from        -- one tile broadcasting a solved block (SpTRSV stages)
+
+All functions must be called *inside* shard_map with the axis names bound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "neighbor_shift",
+    "gather_along",
+    "reduce_along",
+    "reduce_scatter_along",
+    "mesh_transpose",
+    "bcast_from",
+    "axis_coord",
+]
+
+
+def axis_coord(axis: str) -> jnp.ndarray:
+    """This tile's coordinate along a mesh axis (Azul's row/col id fields)."""
+    return lax.axis_index(axis)
+
+
+def neighbor_shift(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
+    """One torus hop along ``axis`` (wraps around) -- a single Azul send."""
+    n = lax.axis_size(axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return lax.ppermute(x, axis, perm)
+
+
+def gather_along(x: jnp.ndarray, axis: str, tiled: bool = True) -> jnp.ndarray:
+    """Assemble the x halo along a mesh axis (concat of every tile's shard)."""
+    return lax.all_gather(x, axis, axis=0, tiled=tiled)
+
+
+def reduce_along(x: jnp.ndarray, axis) -> jnp.ndarray:
+    """Combine partial products across ``axis`` (full copy on every tile)."""
+    return lax.psum(x, axis)
+
+
+def reduce_scatter_along(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Combine partials across ``axis``, each tile keeping only its shard."""
+    return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+
+
+def mesh_transpose(x: jnp.ndarray, row_axes, col_axes) -> jnp.ndarray:
+    """Vector-layout swap between SpMV's output (row-block, "L_row") and
+    input (column-block, "L_col") distributions.
+
+    With u-sized subsegments, L_row places segment ``q = i*pc + j`` on tile
+    (i, j); L_col needs segment ``q = j*pr + k`` on tile (k, j).  The move is
+    a single deterministic ``ppermute`` over the flattened mesh (every tile
+    sends and receives exactly one u-shard) -- the analogue of Azul's x
+    redistribution between solver steps.  Works for any (pr x pc), square or
+    not.
+    """
+    row_axes = (row_axes,) if isinstance(row_axes, str) else tuple(row_axes)
+    col_axes = (col_axes,) if isinstance(col_axes, str) else tuple(col_axes)
+    pr = lax.axis_size(row_axes)
+    pc = lax.axis_size(col_axes)
+    # src tile holds segment q (flat id q = i*pc + j); dest tile for segment
+    # q = j*pr + k is (k, j) = flat k*pc + j.
+    perm = [(j * pr + k, k * pc + j) for k in range(pr) for j in range(pc)]
+    return lax.ppermute(x, row_axes + col_axes, perm)
+
+
+def reverse_vector(x: jnp.ndarray, axes) -> jnp.ndarray:
+    """Globally reverse a vector stored in contiguous (L_row) shards: shard q
+    swaps with shard P-1-q (one ppermute) and flips locally.  Used by the
+    IC(0) preconditioner's L^T solve (run as a reversed lower solve)."""
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    p = lax.axis_size(axes)
+    perm = [(p - 1 - q, q) for q in range(p)]
+    return jnp.flip(lax.ppermute(x, axes, perm), axis=0)
+
+
+def bcast_from(x: jnp.ndarray, axis, src: jnp.ndarray | int) -> jnp.ndarray:
+    """Broadcast ``x`` from the tile at coordinate ``src`` along ``axis``
+    to every tile on that axis (masked psum -- single collective)."""
+    me = lax.axis_index(axis)
+    contrib = jnp.where(me == src, x, jnp.zeros_like(x))
+    return lax.psum(contrib, axis)

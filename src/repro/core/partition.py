@@ -1,0 +1,224 @@
+"""Static partitioning of sparse matrices onto the tile grid.
+
+This is the "compiler / precomputation framework" the Azul paper leans on:
+the matrix is cut into blocks once, offline, and each block is pinned to a
+tile (= TPU device) for the lifetime of the solve.  Because JAX SPMD requires
+identical array shapes on every device, all per-tile blocks are padded to a
+common ELL geometry and stacked along a leading tile axis; the stacked array
+is then sharded so that tile ``t`` physically owns slice ``t``.
+
+Two layouts:
+
+* ``plan_1d``  -- row partition over all P devices.  SpMV gathers the full x
+  (the simple, bandwidth-hungry baseline; what a GPU would effectively do).
+* ``plan_2d``  -- (pr x pc) block partition over the mesh.  SpMV per device
+  only ever sees 1/pc of x (all-gather along mesh columns) and emits 1/pr of
+  y (reduce-scatter along mesh rows): this is Azul's NoC traffic pattern on
+  the ICI torus, and cuts per-link traffic by ~pc vs the 1D plan.
+
+Load balance: rows can be assigned to equal-row chunks or nnz-balanced
+chunks (contiguous, computed by a prefix-sum split).  The partition keeps a
+``row_perm`` so nnz-balancing may reorder rows; SpMV results are unpermuted
+on the way out by the engine.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .formats import CSR, ELL, csr_from_dense, ell_from_csr, pad_to
+
+__all__ = ["Plan1D", "Plan2D", "plan_1d", "plan_2d", "split_rows", "tile_csr"]
+
+
+def split_rows(m: CSR, parts: int, balance: str = "rows") -> np.ndarray:
+    """Return (parts+1,) row offsets splitting ``m`` into contiguous chunks.
+
+    ``balance='rows'``: equal row counts (last chunk takes the remainder).
+    ``balance='nnz'``:  split points chosen on the nnz prefix sum, so each
+    chunk carries ~nnz/parts nonzeros (Azul's load-balance criterion: tile
+    work is proportional to nnz stored, not rows).
+    """
+    n = m.shape[0]
+    if parts <= 0:
+        raise ValueError("parts must be positive")
+    if balance == "rows":
+        base = np.linspace(0, n, parts + 1)
+        return np.round(base).astype(np.int64)
+    if balance == "nnz":
+        csum = np.asarray(m.indptr, dtype=np.float64)
+        total = max(csum[-1], 1.0)
+        targets = np.linspace(0.0, total, parts + 1)
+        hi = np.searchsorted(csum, targets, side="left")
+        lo = np.maximum(hi - 1, 0)
+        # pick whichever boundary lands closer to the ideal cumulative nnz
+        # (plain side="left" can overshoot wildly on skewed rows)
+        pick_hi = np.abs(csum[np.minimum(hi, n)] - targets) <= np.abs(
+            csum[lo] - targets
+        )
+        offs = np.where(pick_hi, np.minimum(hi, n), lo)
+        offs[0], offs[-1] = 0, n
+        # enforce monotonicity (empty chunks allowed for pathological inputs)
+        return np.maximum.accumulate(offs).astype(np.int64)
+    raise ValueError(f"unknown balance mode {balance!r}")
+
+
+def tile_csr(m: CSR, r0: int, r1: int, c0: int, c1: int) -> CSR:
+    """Extract the (r0:r1, c0:c1) submatrix with *local* indices."""
+    rows = []
+    indptr = [0]
+    indices = []
+    data = []
+    for r in range(r0, r1):
+        s, e = int(m.indptr[r]), int(m.indptr[r + 1])
+        cs = m.indices[s:e]
+        sel = (cs >= c0) & (cs < c1)
+        indices.append(cs[sel] - c0)
+        data.append(m.data[s:e][sel])
+        indptr.append(indptr[-1] + int(sel.sum()))
+        rows.append(r)
+    indices = np.concatenate(indices) if indices else np.zeros(0, np.int32)
+    data = np.concatenate(data) if data else np.zeros(0, m.data.dtype)
+    return CSR(
+        np.asarray(indptr, np.int32),
+        indices.astype(np.int32),
+        data,
+        (r1 - r0, c1 - c0),
+    )
+
+
+class Plan1D(NamedTuple):
+    """Row-partitioned plan: device t owns rows [row_offsets[t], row_offsets[t+1]).
+
+    ``cols``/``vals``: (P, rows_p, width) stacked padded ELL tiles (local row
+    index, *global* column index).
+    """
+
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+    row_offsets: np.ndarray       # (P+1,) host-side
+    n: int                        # true vector length
+    n_padded: int                 # P * rows_p
+    rows_per_tile: int            # rows_p
+
+    @property
+    def parts(self) -> int:
+        return self.cols.shape[0]
+
+
+class Plan2D(NamedTuple):
+    """2D block plan on a (pr x pc) grid; device (i, j) owns block A[I=i, J=j].
+
+    ``cols``/``vals``: (pr*pc, rows_p, width) padded ELL tiles with *local*
+    column indices (relative to column block J).  Device order is row-major:
+    index = i * pc + j.  All row/col blocks are equal-sized (n_padded / pr,
+    n_padded / pc) so the SUMMA collectives are shape-uniform.
+    """
+
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+    pr: int
+    pc: int
+    n: int
+    n_padded: int
+
+    @property
+    def block_rows(self) -> int:
+        return self.n_padded // self.pr
+
+    @property
+    def block_cols(self) -> int:
+        return self.n_padded // self.pc
+
+
+def _stack_ell_from_coo(
+    tile_id: np.ndarray, loc_r: np.ndarray, loc_c: np.ndarray, val: np.ndarray,
+    n_tiles: int, rows_p: int, width_pad: int, dtype,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized stacked-ELL packer: O(nnz log nnz), no per-row Python.
+
+    Entries are grouped by (tile, local row); each entry's ELL slot k is its
+    rank within the group (cumcount via sorted first-occurrence indices).
+    """
+    if val.size == 0:
+        w = max(width_pad, 1)
+        return (jnp.zeros((n_tiles, rows_p, w), np.int32),
+                jnp.zeros((n_tiles, rows_p, w), dtype))
+    key = tile_id.astype(np.int64) * rows_p + loc_r
+    order = np.lexsort((loc_c, key))
+    key_s, c_s, v_s = key[order], loc_c[order], val[order]
+    first = np.r_[0, np.flatnonzero(np.diff(key_s)) + 1]
+    group_start = np.repeat(first, np.diff(np.r_[first, key_s.size]))
+    k = np.arange(key_s.size) - group_start          # slot within row
+    w = pad_to(max(int(k.max()) + 1, 1), width_pad)
+    cols = np.zeros((n_tiles * rows_p, w), np.int32)
+    vals = np.zeros((n_tiles * rows_p, w), dtype)
+    cols[key_s, k] = c_s
+    # duplicate (row, col) entries are summed (matches CSR semantics)
+    np.add.at(vals, (key_s, k), v_s)
+    return (jnp.asarray(cols.reshape(n_tiles, rows_p, w)),
+            jnp.asarray(vals.reshape(n_tiles, rows_p, w)))
+
+
+def _csr_to_coo(m: CSR) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    rows = np.repeat(np.arange(m.shape[0], dtype=np.int64), m.row_nnz())
+    return rows, m.indices.astype(np.int64), np.asarray(m.data)
+
+
+def plan_1d(
+    m: CSR,
+    parts: int,
+    balance: str = "rows",
+    width_pad: int = 8,
+    row_pad: int = 8,
+    dtype=np.float32,
+) -> Plan1D:
+    n = m.shape[0]
+    if m.shape[0] != m.shape[1]:
+        raise ValueError("plan_1d expects a square matrix")
+    offs = split_rows(m, parts, balance)
+    rows, cols_g, vals_g = _csr_to_coo(m)
+    tile = np.clip(np.searchsorted(offs, rows, side="right") - 1, 0, parts - 1)
+    loc_r = rows - offs[tile]
+    rows_p = pad_to(max(int(np.diff(offs).max()) if parts else 1, 1), row_pad)
+    cols, vals = _stack_ell_from_coo(
+        tile, loc_r, cols_g, vals_g, parts, rows_p, width_pad, dtype
+    )
+    return Plan1D(cols, vals, offs, n, parts * rows_p, rows_p)
+
+
+def plan_2d(
+    m: CSR,
+    pr: int,
+    pc: int,
+    width_pad: int = 8,
+    row_pad: int = 8,
+    dtype=np.float32,
+) -> Plan2D:
+    n = m.shape[0]
+    if m.shape[0] != m.shape[1]:
+        raise ValueError("plan_2d expects a square matrix")
+    # Pad so that (a) row/col blocks are equal-size, (b) each block's rows
+    # are a multiple of row_pad (TPU sublane), and (c) the per-device vector
+    # subsegment u = n_pad/(pr*pc) is whole -- the SUMMA collectives and the
+    # mesh-transpose ppermute all exchange u-sized shards.
+    align = pr * pc * row_pad
+    n_pad = pad_to(n, align)
+    br, bc = n_pad // pr, n_pad // pc
+    rows, cols_g, vals_g = _csr_to_coo(m)
+    bi, bj = rows // br, cols_g // bc
+    tile = bi * pc + bj
+    cols, vals = _stack_ell_from_coo(
+        tile, rows - bi * br, cols_g - bj * bc, vals_g,
+        pr * pc, br, width_pad, dtype,
+    )
+    return Plan2D(cols, vals, pr, pc, n, n_pad)
+
+
+def partition_nnz_histogram(m: CSR, offs: np.ndarray) -> np.ndarray:
+    """nnz per chunk -- used by tests and the load-balance benchmark."""
+    csum = np.asarray(m.indptr, dtype=np.int64)
+    return csum[offs[1:]] - csum[offs[:-1]]

@@ -1,0 +1,91 @@
+"""Single-device sparse ops on packed formats (pure jax.numpy).
+
+These are the *functional* definitions of the engine's math; the Pallas
+kernels in ``repro.kernels`` implement the same contracts with explicit VMEM
+tiling and are verified against these (plus numpy/scipy) in tests.  The
+distributed engine composes these per-tile ops under ``shard_map``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .formats import ELL, BCSR
+from .levels import LevelSchedule
+
+__all__ = [
+    "spmv_ell",
+    "spmv_ell_padded",
+    "spmv_bcsr",
+    "sptrsv_ell",
+    "extract_diag_ell",
+]
+
+
+def spmv_ell(m: ELL, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x for ELLPACK A; returns the true (n_rows,) result."""
+    return spmv_ell_padded(m.cols, m.vals, x)[: m.n_rows]
+
+
+def spmv_ell_padded(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Padded-row SpMV: (rows_p, w) gather + row-sum.  Padding vals are 0 so
+    padded slots contribute nothing; padded cols point at 0 which is always
+    in-bounds."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def spmv_bcsr(m: BCSR, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x for BCSR A (dense (bm, bn) blocks -> MXU-shaped einsum)."""
+    nbc = (m.n_cols + m.bn - 1) // m.bn
+    x_pad = jnp.zeros((nbc * m.bn,), x.dtype).at[: m.n_cols].set(x)
+    xb = x_pad.reshape(nbc, m.bn)
+    xg = xb[m.block_cols]                      # (nbr, width, bn)
+    y = jnp.einsum("iwmn,iwn->im", m.blocks, xg)  # (nbr, bm)
+    return y.reshape(-1)[: m.n_rows]
+
+
+def extract_diag_ell(m: ELL) -> jnp.ndarray:
+    """Diagonal of a square ELL matrix (0.0 where absent)."""
+    r = jnp.arange(m.rows_padded)[:, None]
+    is_diag = (m.cols == r) & (m.vals != 0)
+    return jnp.sum(jnp.where(is_diag, m.vals, 0.0), axis=1)[: m.n_rows]
+
+
+def sptrsv_ell(m: ELL, sched: LevelSchedule, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve L x = b for lower-triangular L in ELL form, via the wavefront
+    schedule.  ``lax.scan`` over levels; each level solves all of its rows in
+    one vector step:
+
+        x[r] = (b[r] - sum_{c<r} L[r,c] x[c]) / L[r,c==r]
+
+    Rows in a level never depend on each other (schedule invariant), so the
+    gather of x inside a level sees only values finalized by prior levels.
+    """
+    n = m.n_rows
+    if sched.n != n:
+        raise ValueError("schedule/matrix size mismatch")
+    diag = extract_diag_ell(m)
+    diag = jnp.where(diag == 0, 1.0, diag)  # padded rows / graceful degenerate
+    b_pad = jnp.zeros((m.rows_padded,), b.dtype).at[:n].set(b)
+
+    # x carries one extra slot (index n) that absorbs padded scatter/gather.
+    x0 = jnp.zeros((n + 1,), b.dtype)
+    cols, vals = m.cols, m.vals
+    r_idx = jnp.arange(m.rows_padded)[:, None]
+
+    def level_step(x, level_rows):
+        # level_rows: (max_width,) row ids, padded with n (dropped on scatter)
+        lrows = jnp.minimum(level_rows, m.rows_padded - 1)
+        c = cols[lrows]                     # (W, w)
+        v = vals[lrows]                     # (W, w)
+        off_mask = c != lrows[:, None]      # exclude the diagonal entry
+        contrib = jnp.sum(jnp.where(off_mask, v, 0.0) * x[jnp.minimum(c, n)], axis=1)
+        rhs = b_pad[lrows] - contrib
+        xr = rhs / diag[jnp.minimum(level_rows, n - 1)] if n else rhs
+        x = x.at[level_rows].set(xr, mode="drop")
+        return x, None
+
+    x, _ = jax.lax.scan(level_step, x0, sched.rows)
+    del r_idx
+    return x[:n]

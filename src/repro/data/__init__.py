@@ -1,0 +1,2 @@
+"""Data substrate: deterministic token pipeline + SuiteSparse-analog matrices."""
+from .pipeline import TokenPipeline  # noqa: F401

@@ -1,0 +1,64 @@
+"""SuiteSparse-analog sparse matrix generators (the paper evaluates on
+SuiteSparse; this container is offline, so we generate matrices with the
+same structural families: 2D/3D PDE Laplacians, banded systems, and random
+SPD graphs across the size/density envelope of the paper's Fig. 6).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+
+from ..core.formats import CSR, csr_from_scipy
+
+__all__ = ["laplacian_2d", "laplacian_3d", "banded_spd", "random_spd", "suite"]
+
+
+def laplacian_2d(nx: int, ny: int | None = None) -> CSR:
+    """5-point Poisson stencil on an nx x ny grid (classic PCG benchmark)."""
+    ny = ny or nx
+    d = sp.diags([2.0, -1.0, -1.0], [0, -1, 1], shape=(nx, nx))
+    i_x, i_y = sp.eye(nx), sp.eye(ny)
+    a = sp.kron(i_y, d) + sp.kron(sp.diags([2.0, -1.0, -1.0], [0, -1, 1], shape=(ny, ny)), i_x)
+    return csr_from_scipy(a.tocsr())
+
+
+def laplacian_3d(n: int) -> CSR:
+    d = sp.diags([2.0, -1.0, -1.0], [0, -1, 1], shape=(n, n))
+    i = sp.eye(n)
+    a = (sp.kron(sp.kron(d, i), i) + sp.kron(sp.kron(i, d), i)
+         + sp.kron(sp.kron(i, i), d))
+    return csr_from_scipy(a.tocsr())
+
+
+def banded_spd(n: int, bands: int = 4, seed: int = 0) -> CSR:
+    rng = np.random.default_rng(seed)
+    diags = [rng.standard_normal(n) * 0.3 for _ in range(bands)]
+    offs = list(range(1, bands + 1))
+    a = sp.diags(diags, offs, shape=(n, n))
+    a = a + a.T + sp.eye(n) * (2.0 * bands)
+    return csr_from_scipy(a.tocsr())
+
+
+def random_spd(n: int, density: float = 0.01, seed: int = 0) -> CSR:
+    """B B^T + shift*I with sparse B -- random SPD with controlled fill."""
+    b = sp.random(n, n, density=density, random_state=seed, format="csr")
+    a = (b @ b.T + sp.eye(n) * max(1.0, n * density)).tocsr()
+    return csr_from_scipy(a)
+
+
+def suite(scale: str = "small") -> dict[str, CSR]:
+    """Named benchmark suite spanning the paper's size/density envelope."""
+    if scale == "small":
+        return {
+            "lap2d_32": laplacian_2d(32),
+            "lap3d_10": laplacian_3d(10),
+            "banded_1k": banded_spd(1000),
+            "rspd_1k": random_spd(1000, 0.01, 1),
+        }
+    return {
+        "lap2d_96": laplacian_2d(96),
+        "lap3d_22": laplacian_3d(22),
+        "banded_10k": banded_spd(10_000, 6),
+        "rspd_8k": random_spd(8000, 0.004, 2),
+    }

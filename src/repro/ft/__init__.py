@@ -1,0 +1,3 @@
+"""Fault tolerance: restart manager, elastic remesh, straggler mitigation."""
+from .restart import RestartManager  # noqa: F401
+from .straggler import StepTimer  # noqa: F401

@@ -1,0 +1,58 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+Checkpoints store full (unsharded) leaves, so scaling a run from mesh A to
+mesh B (grow after capacity arrives, shrink around a failed pod) is:
+
+    specs_b = sharding_rules(cfg, mesh_b)
+    state, step = remesh_restore(state_like, ckpt_dir, mesh_b, specs_b)
+
+Divisibility is revalidated against the new mesh (batch/heads/experts per
+device); incompatible axes fall back to replication with a warning list the
+caller can inspect -- the run continues, just less sharded (the standard
+degrade-don't-die posture for elastic fleets).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..checkpoint.manager import restore
+
+__all__ = ["remesh_restore", "validate_spec"]
+
+
+def validate_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
+    """Drop spec axes that don't divide the array on this mesh."""
+    out = []
+    for dim, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim < len(shape) and shape[dim] % size == 0:
+            out.append(s)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def remesh_restore(tree_like, ckpt_dir: str, mesh: Mesh, spec_tree, step=None):
+    """Restore a checkpoint onto ``mesh`` with per-leaf specs (revalidated).
+    Returns (state, step, demoted) where demoted lists leaves that fell back
+    to replication."""
+    demoted = []
+
+    def shard_of(leaf, spec):
+        shape = leaf.shape if hasattr(leaf, "shape") else np.asarray(leaf).shape
+        ok = validate_spec(shape, spec, mesh)
+        if tuple(ok) != tuple(spec):
+            demoted.append((shape, spec))
+        return NamedSharding(mesh, ok)
+
+    sh_tree = jax.tree.map(shard_of, tree_like, spec_tree,
+                           is_leaf=lambda x: hasattr(x, "shape"))
+    state, step = restore(tree_like, ckpt_dir, step=step, sharding_tree=sh_tree)
+    return state, step, demoted

@@ -1,0 +1,90 @@
+"""Fault-tolerant training loop: periodic async checkpoints, resume from
+the newest *valid* checkpoint, deterministic data replay.
+
+Failure model (maps to real pods):
+  * process death / preemption  -> restart; ``run`` resumes from the last
+    complete ``manifest.json`` (partial saves are ignored by checksum);
+  * silent data-loader drift    -> impossible: the pipeline is a pure
+    function of (seed, step), so replay is exact;
+  * NaN / loss spike            -> ``guard_nan`` rolls back to the previous
+    checkpoint and (optionally) skips the offending batch -- the standard
+    large-run "skip-ahead" mitigation.
+
+The loop is orchestration-only: all math stays in the jitted train_step, so
+this file is identical for 1 chip or 4096.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+
+__all__ = ["RestartManager", "TrainLoopResult"]
+
+
+@dataclass
+class TrainLoopResult:
+    state: object
+    losses: list
+    resumed_from: int | None
+    nan_rollbacks: int
+    step_times: list
+
+
+class RestartManager:
+    def __init__(self, ckpt_dir: str, save_every: int = 50, keep: int = 3,
+                 guard_nan: bool = True, skip_bad_batch: bool = True):
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep)
+        self.save_every = save_every
+        self.guard_nan = guard_nan
+        self.skip_bad_batch = skip_bad_batch
+
+    def run(self, state, train_step, pipeline, total_steps: int,
+            inject_failure_at: int | None = None) -> TrainLoopResult:
+        """Run (or resume) training to ``total_steps``.
+
+        ``inject_failure_at``: test hook -- raises RuntimeError at the given
+        step to exercise the restart path (tests call run() twice).
+        """
+        resumed = self.mgr.latest_step()
+        if resumed is not None:
+            state, _ = self.mgr.restore(state)
+            start = int(np.asarray(state.step))
+        else:
+            start = 0
+
+        losses, times = [], []
+        rollbacks = 0
+        step = start
+        while step < total_steps:
+            if inject_failure_at is not None and step == inject_failure_at:
+                self.mgr.wait()
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = pipeline.batch_at(step)
+            t0 = time.perf_counter()
+            new_state, metrics = train_step(state, batch)
+            loss = float(np.asarray(metrics["loss"]))
+            times.append(time.perf_counter() - t0)
+
+            if self.guard_nan and not np.isfinite(loss):
+                rollbacks += 1
+                prev = self.mgr.latest_step()
+                if prev is not None:
+                    state, _ = self.mgr.restore(state)
+                    step = int(np.asarray(state.step))
+                if self.skip_bad_batch:
+                    step += 1   # skip-ahead past the poisoned batch
+                continue
+
+            state = new_state
+            losses.append(loss)
+            step += 1
+            if step % self.save_every == 0 or step == total_steps:
+                self.mgr.save_async(state, step)
+        self.mgr.wait()
+        return TrainLoopResult(state, losses, resumed, rollbacks, times)

@@ -1,0 +1,52 @@
+"""Straggler detection & mitigation hooks.
+
+On a synchronous SPMD pod every collective is a barrier: one slow chip
+drags the fleet.  The framework's mitigations:
+
+  1. DETECT -- ``StepTimer`` keeps a robust (median/MAD) model of step time
+     and flags outliers.  On real pods you feed it per-host step times from
+     the coordinator; here it watches the local loop (tests inject delays).
+  2. MITIGATE (in-run) -- deterministic *step deadlines*: if a step exceeds
+     ``deadline_factor`` x median, the run flags the host for the scheduler.
+     With grad-accum microbatching the loop can also shed one microbatch
+     from the straggler's next step (``shed_advice``) -- bounded staleness,
+     zero resync cost, because the data pipeline is step-indexed and the
+     shed microbatch ids are logged for replay.
+  3. MITIGATE (structural) -- the checkpoint/remesh path (ft/remesh.py)
+     lets the coordinator evict a chronically slow host and resume on a
+     smaller mesh within one checkpoint interval.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["StepTimer", "StragglerReport"]
+
+
+@dataclass
+class StragglerReport:
+    step: int
+    duration: float
+    median: float
+    is_straggler: bool
+    shed_advice: int  # microbatches to shed next step (0 = none)
+
+
+@dataclass
+class StepTimer:
+    window: int = 50
+    deadline_factor: float = 2.0
+    max_shed: int = 1
+    _times: list = field(default_factory=list)
+
+    def observe(self, step: int, duration: float) -> StragglerReport:
+        self._times.append(duration)
+        hist = np.asarray(self._times[-self.window :])
+        med = float(np.median(hist))
+        mad = float(np.median(np.abs(hist - med))) + 1e-9
+        slow = duration > max(self.deadline_factor * med, med + 6 * mad)
+        shed = self.max_shed if slow and len(hist) >= 5 else 0
+        return StragglerReport(step, duration, med, bool(slow and len(hist) >= 5), shed)

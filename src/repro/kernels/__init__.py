@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the Azul engine's compute hot-spots.
+
+Modules:
+  ell_spmv   -- ELLPACK SpMV (VPU gather path), the per-tile solver hot loop
+  bcsr_spmm  -- block-sparse x multi-RHS dense (MXU path, scalar prefetch)
+  sptrsv     -- level-wavefront triangular-solve step
+  vecops     -- fused axpy+dot CG pipeline stage
+  ops        -- jit'd dispatch wrappers (TPU kernel / interpret / jnp ref)
+  ref        -- pure-jnp oracles (functional-verification testbench)
+"""
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: BCSR block-sparse x dense multi-RHS -- the MXU path.
+
+When the sparse matrix has (or is packed into) dense (bm, bn) blocks, SpMV /
+SpMM becomes a stream of small dense matmuls: exactly what the MXU wants.
+The block-column ids drive *data-dependent* BlockSpec index maps via scalar
+prefetch (``PrefetchScalarGridSpec``): the pipeline fetches x-block
+``block_cols[i, k]`` from HBM while the previous block is in the MXU -- this
+is the TPU equivalent of Azul's NoC prefetching x fragments into tile SRAM.
+
+grid = (nbr, w): output block-row i is revisited along (inner) k and
+accumulated in VMEM.  Padding blocks are all-zero so accumulating them is a
+no-op (keeps control flow static).
+
+VMEM: bm*bn*4 (block) + bn*R*4 (x block) + bm*R*4 (y block).
+MXU alignment: bm, bn, R should be multiples of (8, 128) f32 tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bcsr_spmm"]
+
+
+def _kernel(block_cols_ref, blocks_ref, x_ref, y_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    blk = blocks_ref[0, 0]           # (bm, bn)
+    xb = x_ref[...]                  # (bn, R)
+    y_ref[...] = y_ref[...] + jnp.dot(
+        blk, xb, preferred_element_type=y_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bcsr_spmm(
+    block_cols: jnp.ndarray,
+    blocks: jnp.ndarray,
+    x: jnp.ndarray,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y = A @ x.  blocks: (nbr, w, bm, bn); x: (nbc*bn, R) -> y: (nbr*bm, R)."""
+    nbr, w, bm, bn = blocks.shape
+    if x.ndim != 2 or x.shape[0] % bn:
+        raise ValueError(f"x shape {x.shape} incompatible with bn={bn}")
+    r = x.shape[1]
+    grid = (nbr, w)
+    y = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bm, bn), lambda i, k, bc: (i, k, 0, 0)),
+                pl.BlockSpec((bn, r), lambda i, k, bc: (bc[i, k], 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, r), lambda i, k, bc: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nbr * bm, r), blocks.dtype),
+        interpret=interpret,
+    )(block_cols, blocks, x)
+    return y

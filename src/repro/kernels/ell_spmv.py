@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: ELLPACK SpMV -- the per-tile hot loop of Azul.
+
+Azul's PE streams its pinned matrix block once per solver iteration and
+gathers x values as they arrive over the NoC.  On TPU the block lives in HBM
+and is streamed through VMEM by the ``BlockSpec`` pipeline; the x vector
+(this tile's halo, already assembled by the NoC layer) is held fully VMEM
+resident so the per-row gathers are local.
+
+Tiling:
+  grid = (rows_p / TM, width / TW); the output row-tile is revisited along
+  the (inner) width axis and accumulated in VMEM, so arbitrary ELL widths
+  stream without blowing the VMEM budget:
+     VMEM = TM*TW*(cols 4B + vals 4B) + N*4B (x) + TM*4B (y).
+  TM is a multiple of 8 and TW of 128 (f32 tile = 8 x 128); x stays whole
+  because the gather needs random access to it (this mirrors Azul's "x halo
+  in SRAM" requirement -- the engine sizes tiles so x fits VMEM).
+
+The in-kernel ``x[c]`` is a VMEM dynamic gather (VPU path, not MXU); for the
+MXU path on block-structured matrices use ``bcsr_spmm``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_spmv"]
+
+DEFAULT_TM = 128
+DEFAULT_TW = 128
+
+
+def _kernel(cols_ref, vals_ref, x_ref, y_ref):
+    j = pl.program_id(1)
+    c = cols_ref[...]          # (TM, TW) int32
+    v = vals_ref[...]          # (TM, TW) f32
+    x = x_ref[...]             # (N,)     f32, fully resident
+    partial = jnp.sum(v * x[c], axis=1)  # VPU gather + row reduce
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tw", "interpret"))
+def ell_spmv(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    x: jnp.ndarray,
+    tm: int = DEFAULT_TM,
+    tw: int = DEFAULT_TW,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y = A @ x, A in padded ELL ((rows_p, W) cols/vals).  Padding entries
+    must have vals == 0 (cols may be anything in-bounds)."""
+    rows_p, w = cols.shape
+    tm = min(tm, rows_p)
+    tw = min(tw, w)
+    if rows_p % tm or w % tw:
+        raise ValueError(f"ELL shape ({rows_p},{w}) not divisible by tile ({tm},{tw})")
+    grid = (rows_p // tm, w // tw)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((x.shape[0],), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows_p,), vals.dtype),
+        interpret=interpret,
+    )(cols, vals, x)

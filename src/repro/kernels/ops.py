@@ -1,0 +1,91 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+Each op picks the Pallas kernel when it is applicable on the current
+backend (TPU, or interpret mode for CPU validation) and otherwise falls
+back to the jnp oracle in ``ref.py`` -- the two are allclose-verified in
+tests, so the choice is purely a performance/backend decision.
+
+``use_pallas(mode)``: "auto" (TPU -> compiled kernel, CPU -> jnp),
+"interpret" (kernel body in Python -- CI validation), "never".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .ell_spmv import ell_spmv as _ell_spmv_pallas
+from .bcsr_spmm import bcsr_spmm as _bcsr_spmm_pallas
+from .sptrsv import sptrsv_level_step as _sptrsv_step_pallas
+from .vecops import axpy_dot as _axpy_dot_pallas
+
+__all__ = ["ell_spmv", "bcsr_spmm", "sptrsv_level_step", "axpy_dot", "backend_mode"]
+
+_MODE = "auto"
+
+
+def backend_mode(mode: str | None = None) -> str:
+    """Get/set the global kernel dispatch mode ('auto'|'interpret'|'never')."""
+    global _MODE
+    if mode is not None:
+        if mode not in ("auto", "interpret", "never"):
+            raise ValueError(mode)
+        _MODE = mode
+    return _MODE
+
+
+def _dispatch() -> tuple[bool, bool]:
+    """-> (use_kernel, interpret)."""
+    if _MODE == "never":
+        return False, False
+    if _MODE == "interpret":
+        return True, True
+    on_tpu = jax.default_backend() == "tpu"
+    return on_tpu, False
+
+
+def ell_spmv(cols, vals, x, tm: int | None = None, tw: int | None = None):
+    use, interp = _dispatch()
+    if use:
+        kw = {}
+        if tm:
+            kw["tm"] = tm
+        if tw:
+            kw["tw"] = tw
+        return _ell_spmv_pallas(cols, vals, x, interpret=interp, **kw)
+    return ref.ell_spmv_ref(cols, vals, x)
+
+
+def bcsr_spmm(block_cols, blocks, x):
+    use, interp = _dispatch()
+    if use:
+        return _bcsr_spmm_pallas(block_cols, blocks, x, interpret=interp)
+    return ref.bcsr_spmm_ref(block_cols, blocks, x)
+
+
+def sptrsv_level_step(cols, vals, diag, b, x, level_rows):
+    """Level wavefront: gathers rows, runs the kernel (or ref), scatters."""
+    use, interp = _dispatch()
+    if not use:
+        return ref.sptrsv_level_step_ref(cols, vals, diag, b, x, level_rows)
+    n = x.shape[0] - 1
+    rows_p = cols.shape[0]
+    lr = jnp.minimum(level_rows, rows_p - 1)
+    xr = _sptrsv_step_pallas(
+        cols[lr],
+        vals[lr],
+        lr,
+        b[lr],
+        diag[jnp.minimum(level_rows, n - 1)],
+        x,
+        interpret=interp,
+    )
+    return x.at[level_rows].set(xr, mode="drop")
+
+
+def axpy_dot(a, x, y):
+    use, interp = _dispatch()
+    if use:
+        return _axpy_dot_pallas(a, x, y, interpret=interp)
+    return ref.axpy_dot_ref(a, x, y)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the "Python testbench" of the
+paper's functional-verification methodology).  Each function is the exact
+mathematical contract its kernel must match; tests assert allclose across
+shape/dtype sweeps with the kernels running in interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ell_spmv_ref", "bcsr_spmm_ref", "sptrsv_level_step_ref", "axpy_dot_ref"]
+
+
+def ell_spmv_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[r] = sum_k vals[r, k] * x[cols[r, k]].  Padding: vals == 0."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def bcsr_spmm_ref(block_cols: jnp.ndarray, blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Block-sparse (BCSR) times multi-RHS dense.
+
+    block_cols: (nbr, w) int32
+    blocks:     (nbr, w, bm, bn)
+    x:          (nbc * bn, R)
+    returns     (nbr * bm, R)
+    """
+    nbr, w, bm, bn = blocks.shape
+    xr = x.reshape(-1, bn, x.shape[-1])          # (nbc, bn, R)
+    xg = xr[block_cols]                          # (nbr, w, bn, R)
+    y = jnp.einsum("iwmn,iwnr->imr", blocks, xg)
+    return y.reshape(nbr * bm, x.shape[-1])
+
+
+def sptrsv_level_step_ref(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    diag: jnp.ndarray,
+    b: jnp.ndarray,
+    x: jnp.ndarray,
+    level_rows: jnp.ndarray,
+) -> jnp.ndarray:
+    """One wavefront of the level-scheduled triangular solve.
+
+    For each r in level_rows (padded with an out-of-range id == x.size - 1
+    sentinel slot):  x_new[r] = (b[r] - sum_{c != r} L[r,c] x[c]) / diag[r].
+    Returns the scattered-updated x (x has one trailing sentinel slot).
+    """
+    n = x.shape[0] - 1
+    rows_p = cols.shape[0]
+    lr = jnp.minimum(level_rows, rows_p - 1)
+    c = cols[lr]
+    v = vals[lr]
+    off = jnp.where(c != lr[:, None], v, 0.0)
+    contrib = jnp.sum(off * x[jnp.minimum(c, n)], axis=1)
+    rhs = b[lr] - contrib
+    xr = rhs / diag[jnp.minimum(level_rows, n - 1)]
+    return x.at[level_rows].set(xr, mode="drop")
+
+
+def axpy_dot_ref(a, x: jnp.ndarray, y: jnp.ndarray):
+    """Fused z = y + a*x ; returns (z, dot(z, z)) -- one CG pipeline stage."""
+    z = y + a * x
+    return z, jnp.sum(z * z)

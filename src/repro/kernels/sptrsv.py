@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: one SpTRSV wavefront (level) step.
+
+The level schedule (repro.core.levels) turns SpTRSV's irregular dependency
+graph into a sequence of data-parallel wavefronts; `lax.scan` walks levels
+and this kernel executes the per-level hot compute:
+
+    for each row r in the level:  xr = (b[r] - sum_{c != r} L[r,c] x[c]) / d[r]
+
+Inputs are the *pre-gathered* ELL rows of the level (the wrapper in ops.py
+gathers ``cols[level_rows]`` / ``vals[level_rows]`` -- a cheap XLA gather on
+the rows axis), plus the full x vector VMEM-resident for the random-access
+column gather, mirroring ell_spmv.  The scatter of the solved values back
+into x stays outside the kernel (XLA scatter): TPU Pallas stores want static
+addressing, and the scatter is O(level width) -- not the hot loop.
+
+grid = (W / TL,), one program per tile of level rows.
+VMEM = TL*w*(4+4) + (n+1)*4 + 4*TL*4.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sptrsv_level_step"]
+
+DEFAULT_TL = 128
+
+
+def _kernel(c_ref, v_ref, lr_ref, b_ref, d_ref, x_ref, xr_ref):
+    c = c_ref[...]                       # (TL, w) int32 (pre-gathered rows)
+    v = v_ref[...]                       # (TL, w) f32
+    lr = lr_ref[...]                     # (TL,)  int32 row ids (clamped)
+    x = x_ref[...]                       # (n+1,) f32
+    off = jnp.where(c != lr[:, None], v, 0.0)
+    contrib = jnp.sum(off * x[c], axis=1)
+    xr_ref[...] = (b_ref[...] - contrib) / d_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tl", "interpret"))
+def sptrsv_level_step(
+    cols_lr: jnp.ndarray,
+    vals_lr: jnp.ndarray,
+    level_rows_clamped: jnp.ndarray,
+    b_lr: jnp.ndarray,
+    diag_lr: jnp.ndarray,
+    x: jnp.ndarray,
+    tl: int = DEFAULT_TL,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns xr (W,) -- solved values for the level's rows (padded slots
+    produce garbage that the caller's mode='drop' scatter discards)."""
+    wl, w = cols_lr.shape
+    tl = min(tl, wl)
+    if wl % tl:
+        raise ValueError(f"level width {wl} not divisible by tile {tl}")
+    grid = (wl // tl,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tl, w), lambda i: (i, 0)),
+            pl.BlockSpec((tl, w), lambda i: (i, 0)),
+            pl.BlockSpec((tl,), lambda i: (i,)),
+            pl.BlockSpec((tl,), lambda i: (i,)),
+            pl.BlockSpec((tl,), lambda i: (i,)),
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tl,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((wl,), vals_lr.dtype),
+        interpret=interpret,
+    )(cols_lr, vals_lr, level_rows_clamped, b_lr, diag_lr, x)

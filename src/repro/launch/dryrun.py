@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+placeholder devices and extract the roofline inputs.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+other import because jax locks the device count at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+        --shape train_4k --mesh single --out experiments/dryrun
+
+Per cell this produces <out>/<arch>__<shape>__<mesh>.json with:
+  * memory_analysis  (bytes per device: args / outputs / temps / code)
+  * cost_analysis    (per-device HLO flops & bytes -- NOTE: XLA counts each
+    while/scan body ONCE; repro.roofline rescales using the known trip
+    counts, and --probe-layers builds the per-layer deltas)
+  * collective_bytes (parsed from the compiled HLO, while-trip corrected)
+"""
+
+import argparse
+import json
+import sys
+import time
+
+
+def _parse_variant(variant: str) -> dict:
+    """Comma-separated perf-variant flags (§Perf hillclimbs):
+      sp        -- sequence parallelism on the residual stream
+      ep        -- expert-stationary MoE sharding (weights never move)
+      rsgrad    -- constrain grads to param sharding (reduce-scatter)
+      ga<k>     -- override gradient-accumulation factor
+      int8kv    -- int8-quantized KV cache
+      pipecg    -- (solver) single-reduction pipelined CG
+    """
+    out = {"sp": False, "ep": False, "rsgrad": False, "ga": None,
+           "int8kv": False, "nofsdp": False}
+    for tok in filter(None, (variant or "").split(",")):
+        if tok == "sp":
+            out["sp"] = True
+        elif tok == "ep":
+            out["ep"] = True
+        elif tok == "rsgrad":
+            out["rsgrad"] = True
+        elif tok == "int8kv":
+            out["int8kv"] = True
+        elif tok == "nofsdp":
+            out["nofsdp"] = True
+        elif tok.startswith("ga"):
+            out["ga"] = int(tok[2:])
+        else:
+            raise ValueError(f"unknown variant token {tok!r}")
+    return out
+
+
+def build_cell(arch: str, shape: str, mesh_kind: str, probe_layers: int | None = None,
+               variant: str = ""):
+    """Returns (lower_fn, meta).  Deferred imports keep XLA_FLAGS first."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import SHAPES, get
+    from ..models import model as M
+    from ..models.config import ModelConfig
+    from ..train import adamw, adafactor, warmup_cosine, build_train_step, init_train_state
+    from . import sharding as SH
+    from .mesh import batch_axes, make_production_mesh
+
+    from ..models import shard
+
+    var = _parse_variant(variant)
+    cfg = get(arch)
+    if var["int8kv"]:
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    if var["nofsdp"]:
+        # weights-stationary serving: params TP-sharded only, replicated
+        # over the batch axes -- no per-layer FSDP all-gathers (the Azul
+        # "pin the operand" discipline applied to inference)
+        cfg = cfg.replace(fsdp=False)
+    if probe_layers is not None:
+        # probe configs: same shapes per layer, reduced trip counts
+        groups = cfg.layer_groups()
+        if cfg.family == "hybrid":
+            cfg = cfg.replace(n_layers=probe_layers * len(cfg.block_pattern))
+        elif cfg.first_dense_layers:
+            cfg = cfg.replace(
+                n_layers=cfg.first_dense_layers + probe_layers,
+            )
+        else:
+            cfg = cfg.replace(n_layers=probe_layers)
+    kind, seq, global_batch = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    baxes = batch_axes(mesh)
+    cdt = jnp.bfloat16
+
+    meta = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "kind": kind, "seq": seq, "global_batch": global_batch,
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "n_params": cfg.n_params(),
+        "layer_groups": [list(g) for g in cfg.layer_groups()],
+        "probe_layers": probe_layers,
+        "variant": variant or "baseline",
+    }
+
+    def ctx():
+        return shard.use_mesh_axes(mesh, batch=baxes, model="model",
+                                   seq_parallel=var["sp"],
+                                   ep_stationary=var["ep"])
+
+    def sds(tree):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+        )
+
+    params_sds = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    p_specs = SH.param_specs(params_sds, fsdp=cfg.fsdp, mesh=mesh,
+                             ep_stationary=var["ep"])
+    p_sh = SH.named(mesh, p_specs, params_sds)
+
+    if kind == "train":
+        # big models use Adafactor (AdamW fp32 moments exceed HBM; §Dry-run)
+        use_adafactor = cfg.n_params() > 40e9
+        opt = (adafactor if use_adafactor else adamw)(
+            warmup_cosine(1e-4, 100, 10_000)
+        )
+        meta["optimizer"] = "adafactor" if use_adafactor else "adamw"
+        # microbatching: keep remat-saved activations (L x Bmicro/dev x S x D)
+        # inside HBM; Bmicro/dev of ~2 for the >=30B dense configs.
+        n_bdev = int(np.prod([mesh.shape[a] for a in baxes]))
+        per_dev = global_batch // n_bdev
+        ga_target = 1
+        if cfg.n_params() > 100e9:
+            ga_target = min(per_dev, 16)
+        elif cfg.n_params() > 20e9:
+            ga_target = min(per_dev, 8)
+        elif cfg.n_params() > 4e9:
+            ga_target = min(per_dev, 2)
+        grad_accum = max(1, ga_target)
+        if var["ga"]:
+            grad_accum = var["ga"]
+        meta["grad_accum"] = grad_accum
+        state_sds = jax.eval_shape(
+            lambda: init_train_state(
+                M.init_params(jax.random.PRNGKey(0), cfg), opt
+            )
+        )
+        st_specs = SH.state_specs(state_sds, fsdp=cfg.fsdp, mesh=mesh,
+                                  ep_stationary=var["ep"])
+        st_sh = SH.named(mesh, st_specs, state_sds)
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct((global_batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((global_batch, seq), jnp.int32),
+        }
+        b_sh = SH.named(mesh, SH.batch_specs(batch_sds, baxes), batch_sds)
+        step_fn = build_train_step(
+            cfg, opt, grad_accum=grad_accum,
+            grad_shardings=st_sh.params if var["rsgrad"] else None,
+        )
+        fn = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None), donate_argnums=(0,))
+
+        def lower():
+            with ctx():
+                return fn.lower(state_sds, batch_sds)
+        return lower, meta
+
+    if kind == "prefill":
+        tok_sds = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)
+        tok_sh = SH.named(mesh, SH.batch_specs(tok_sds, baxes), tok_sds)
+
+        def prefill_fn(params, tokens):
+            logits, caches, pos = M.prefill(params, cfg, tokens=tokens, max_len=seq)
+            return logits, caches
+
+        caches_sds = jax.eval_shape(lambda: M.init_caches(cfg, global_batch, seq))
+        c_sh = SH.named(
+            mesh, SH.cache_specs(caches_sds, baxes, cfg.seq_shard_decode), caches_sds
+        )
+        fn = jax.jit(prefill_fn, in_shardings=(p_sh, tok_sh),
+                     out_shardings=(None, c_sh))
+
+        def lower():
+            with ctx():
+                return fn.lower(params_sds, tok_sds)
+        return lower, meta
+
+    # decode: serve_step over a primed cache of length `seq`
+    cache_len = seq
+    caches_sds = jax.eval_shape(lambda: M.init_caches(cfg, global_batch, cache_len))
+    c_sh = SH.named(
+        mesh, SH.cache_specs(caches_sds, baxes, cfg.seq_shard_decode), caches_sds
+    )
+    tok_sds = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    tok_sh = SH.named(mesh, SH.batch_specs(tok_sds, baxes), tok_sds)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(params, caches, tokens, pos):
+        return M.decode_step(params, cfg, caches, tokens, pos)
+
+    fn = jax.jit(
+        decode_fn,
+        in_shardings=(p_sh, c_sh, tok_sh, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+
+    def lower():
+        with ctx():
+            return fn.lower(params_sds, caches_sds, tok_sds, pos_sds)
+    return lower, meta
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             probe_layers: int | None = None, variant: str = "") -> dict:
+    from ..roofline.collect import analyze_compiled
+
+    t0 = time.time()
+    lower_fn, meta = build_cell(arch, shape, mesh_kind, probe_layers, variant)
+    lowered = lower_fn()
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    result = dict(meta)
+    result.update(
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        memory_analysis={
+            k: getattr(mem, k)
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+        cost_analysis={
+            k: float(cost[k]) for k in ("flops", "bytes accessed") if k in cost
+        },
+        collectives=analyze_compiled(compiled),
+    )
+    suffix = f"__probe{probe_layers}" if probe_layers is not None else ""
+    if variant:
+        suffix += f"__{variant.replace(',', '+')}"
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(
+            out_dir, f"{arch.replace('/', '_')}__{shape}__{mesh_kind}{suffix}.json"
+        )
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        result["_path"] = path
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(__import__("repro.configs", fromlist=["SHAPES"]).SHAPES))
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--probe-layers", type=int, default=None,
+                    help="override per-group layer count (roofline probes)")
+    ap.add_argument("--variant", default="",
+                    help="comma-separated perf flags: sp,ep,rsgrad,ga<k>,int8kv")
+    args = ap.parse_args(argv)
+
+    res = run_cell(args.arch, args.shape, args.mesh, args.out,
+                   args.probe_layers, args.variant)
+    slim = {k: v for k, v in res.items() if k != "collectives"}
+    slim["collective_bytes_per_device"] = res["collectives"]["total_bytes"]
+    print(json.dumps(slim, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,212 @@
+"""Logical -> mesh sharding rules for the model zoo.
+
+Policy (DESIGN.md §6):
+  * batch            -> all non-"model" axes ("pod","data")
+  * heads / d_ff / vocab / experts / lru width / ssm heads -> "model"  (TP/EP)
+  * d_model (params) -> "data" (+"pod" never: pods are pure DP)          (FSDP)
+  * decode KV caches -> sequence dim over "model" (distributed decode
+    attention: softmax reductions auto-partitioned by SPMD), batch over
+    the batch axes
+  * optimizer state  -> same spec as its param (ZeRO: state lives with the
+    shard); Adafactor's factored (vr, vc) drop the corresponding dim.
+
+Every spec is validated against the actual leaf shape and mesh (axes that
+do not divide are dropped -> replication), so the same rules serve every
+arch x mesh combination without per-arch tables.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..ft.remesh import validate_spec
+
+__all__ = [
+    "param_specs", "opt_specs", "cache_specs", "batch_specs",
+    "state_specs", "named", "tree_named",
+]
+
+_F = "data"     # FSDP axis
+_M = "model"    # TP/EP axis
+
+
+def _param_rule(path: tuple[str, ...], ndim: int, fsdp: bool,
+                shape: tuple = (), mesh_sizes: dict | None = None,
+                ep_stationary: bool = False) -> P:
+    name = path[-1] if path else ""
+    parent = path[-2] if len(path) >= 2 else ""
+    gparent = path[-3] if len(path) >= 3 else ""
+    f = _F if fsdp else None
+    stacked = "groups" in path  # leading layer axis
+    lead = (None,) if stacked else ()
+
+    def pp(*spec):
+        full = lead + spec
+        if len(full) < ndim:
+            full = full + (None,) * (ndim - len(full))
+        return P(*full[:ndim])
+
+    # embeddings / head: (V, D) -- vocab on model, D on fsdp
+    if name == "table":
+        return P(_M, f)
+    # norms / small vectors
+    if name in ("scale", "bias", "dt_bias", "A_log", "D", "lam", "conv_b"):
+        return pp(None)
+    if name == "b":  # linear bias: shard like the output dim
+        if parent in ("wo", "out_proj", "out"):
+            return pp(None)
+        return pp(_M)
+    if name == "w":
+        # direction by the enclosing linear's role
+        if parent in ("wq", "wk", "wv", "wq_b", "wkv_b", "in_x", "in_g", "wi", "wg", "in_proj"):
+            return pp(f, _M)       # (D, H*hd / F / big) -> col parallel
+        if parent in ("wo", "out_proj", "out"):
+            return pp(_M, f)       # row parallel
+        if parent in ("wq_a", "wkv_a", "router", "proj"):
+            return pp(f, None)
+        if parent in ("w_a", "w_x"):
+            return pp(None, _M)    # (W, W) RG-LRU gates
+        return pp(None, None)
+    # MoE expert banks: (E, D, F) / (E, F, D) -- experts on model (EP).
+    # ep_stationary ("pin weights, move activations" -- the Azul discipline):
+    #   * E divisible by the whole mesh -> experts spread over every chip,
+    #     zero weight movement (deepseek: 256 experts / 256 chips);
+    #   * else E on model, ffn dim on data -> still zero weight movement,
+    #     token halves gathered instead (dbrx: 16 experts).
+    # Baseline (ep_stationary=False) FSDP-shards d_model over data, which
+    # re-gathers every expert bank per layer per microbatch (§Perf).
+    if name in ("wi", "wg", "wo") and (len(shape) - len(lead)) >= 3:
+        e_idx = len(lead)
+        e = shape[e_idx] if e_idx < len(shape) else 0
+        if ep_stationary and mesh_sizes:
+            total = 1
+            for v in mesh_sizes.values():
+                total *= v
+            md = mesh_sizes.get(_M, 1)
+            if e and e % total == 0:
+                return pp((_F, _M), None, None)
+            if e and e % md == 0:
+                if name == "wo":
+                    return pp(_M, _F, None)   # (E, F, D): F over data
+                return pp(_M, None, _F)       # (E, D, F): F over data
+        if name == "wo":
+            return pp(_M, None, f)
+        return pp(_M, f, None)
+    if name == "conv_w":
+        return pp(None, _M)        # (K, C) depthwise conv channels
+    return pp(*(None,) * max(ndim - len(lead), 0))
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_specs(params, fsdp: bool = True, mesh: Mesh | None = None,
+                ep_stationary: bool = False):
+    """Pytree of PartitionSpec matching ``params`` (shape-validated later)."""
+    msizes = dict(mesh.shape) if mesh is not None else None
+
+    def rule(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        return _param_rule(_path_names(path), np.ndim(leaf), fsdp,
+                           shape, msizes, ep_stationary)
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_specs(opt_state, fsdp: bool = True, mesh: Mesh | None = None,
+              ep_stationary: bool = False):
+    """Specs for optimizer state: moments share the param's spec; Adafactor
+    vr drops the last dim, vc drops the second-to-last."""
+    msizes = dict(mesh.shape) if mesh is not None else None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        # strip the leading container key ("m"/"v"/"f") to find the param path
+        tail = names[1:]
+        kind = names[0]
+        nd = np.ndim(leaf)
+        shape = tuple(getattr(leaf, "shape", ()))
+        if kind in ("m", "v"):
+            return _param_rule(tuple(tail), nd, fsdp, shape, msizes, ep_stationary)
+        # factored: leaf names end with vr/vc
+        pshape = shape + (1,) if names[-1] == "vr" else (
+            shape[:-1] + (1,) + shape[-1:] if names[-1] == "vc" else shape
+        )
+        pbase = _param_rule(tuple(tail[:-1]), nd + 1, fsdp, pshape, msizes,
+                            ep_stationary)
+        ent = tuple(pbase)
+        if names[-1] == "vr":
+            return P(*ent[:-1])
+        if names[-1] == "vc":
+            return P(*(ent[:-2] + ent[-1:]))
+        if names[-1] == "v":
+            return _param_rule(tuple(tail[:-1]), nd, fsdp, shape, msizes,
+                               ep_stationary)
+        return P(*(None,) * nd)
+    return jax.tree_util.tree_map_with_path(rule, opt_state)
+
+
+def cache_specs(caches, batch: tuple[str, ...], seq_shard: bool = True):
+    """Decode/prefill cache specs.  Leaves are stacked (L, B, ...)."""
+    m = _M if seq_shard else None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = np.ndim(leaf)
+        if name in ("k", "v", "k_s", "v_s"):       # (L, B, W, KV, hd)
+            return P(*((None, batch, m) + (None,) * (nd - 3))[:nd])
+        if name in ("ckv", "kr"):                   # (L, B, S, R)
+            return P(*((None, batch, m) + (None,) * (nd - 3))[:nd])
+        if name == "ssd":                           # (L, B, H, P, N)
+            return P(*((None, batch, _M) + (None,) * (nd - 3))[:nd])
+        if name == "conv":                          # (L, B, K, C)
+            return P(*((None, batch, None, _M) + (None,) * (nd - 4))[:nd])
+        if name == "h":                             # (L, B, W)
+            return P(*((None, batch, _M))[:nd])
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(rule, caches)
+
+
+def batch_specs(batch_tree, batch: tuple[str, ...]):
+    def rule(_path, leaf):
+        nd = np.ndim(leaf)
+        return P(*((batch,) + (None,) * (nd - 1))[:nd]) if nd else P()
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def state_specs(state, fsdp: bool = True, mesh: Mesh | None = None,
+                ep_stationary: bool = False):
+    """Specs for a TrainState(params, opt_state, step, ef)."""
+    from ..train.step import TrainState
+    ps = param_specs(state.params, fsdp, mesh, ep_stationary)
+    os_ = opt_specs(state.opt_state, fsdp, mesh, ep_stationary)
+    ef = None if state.ef is None else param_specs(state.ef, fsdp, mesh, ep_stationary)
+    return TrainState(ps, os_, P(), ef)
+
+
+def named(mesh: Mesh, spec_tree, shape_tree):
+    """specs -> NamedShardings, validated against shapes (undividable axes
+    dropped -> replicated)."""
+    def mk(spec, leaf):
+        shape = leaf.shape if hasattr(leaf, "shape") else ()
+        return NamedSharding(mesh, validate_spec(tuple(shape), spec, mesh))
+    return jax.tree.map(
+        mk, spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def tree_named(mesh: Mesh, tree, fsdp: bool = True):
+    return named(mesh, param_specs(tree, fsdp), tree)

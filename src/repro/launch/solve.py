@@ -1,0 +1,67 @@
+"""Sparse-solver driver: the paper's workload end to end.
+
+    PYTHONPATH=src python -m repro.launch.solve --matrix lap2d_32 \
+        --method pcg --precond block_ic0 --iters 100
+
+Add --mesh-shape 2x2 (any grid whose product <= device count) to run the
+distributed AzulEngine; on the CPU container use
+XLA_FLAGS=--xla_force_host_platform_device_count=N.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--matrix", default="lap2d_32")
+    ap.add_argument("--method", default="pcg", choices=("pcg", "pcg_pipe", "cg", "jacobi"))
+    ap.add_argument("--precond", default="jacobi",
+                    choices=("jacobi", "block_ic0", "none"))
+    ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--mode", default="2d", choices=("1d", "2d"))
+    ap.add_argument("--mesh-shape", default="",
+                    help="e.g. 2x2 -- empty = single device")
+    args = ap.parse_args(argv)
+
+    import jax
+    from ..core.engine import AzulEngine
+    from ..data.matrices import suite
+
+    mats = suite("small")
+    if args.matrix not in mats:
+        mats.update(suite("large"))
+    m = mats[args.matrix]
+
+    mesh = None
+    if args.mesh_shape:
+        from .mesh import make_mesh
+        shape = tuple(int(x) for x in args.mesh_shape.split("x"))
+        mesh = make_mesh(shape, ("data", "model")[: len(shape)])
+
+    rng = np.random.default_rng(0)
+    x_true = rng.standard_normal(m.shape[0])
+    from ..core.formats import csr_to_dense  # noqa -- only for tiny oracles
+    eng = AzulEngine(m, mesh=mesh, mode=args.mode, precond=args.precond,
+                     dtype=np.float64)
+    import scipy.sparse as sp
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    b = a @ x_true
+    x, norms = eng.solve(b, method=args.method, iters=args.iters)
+    rel = float(np.linalg.norm(x - x_true) / np.linalg.norm(x_true))
+    print(json.dumps({
+        "matrix": args.matrix, "n": m.shape[0], "nnz": m.nnz,
+        "method": args.method, "precond": args.precond,
+        "iters": args.iters, "mode": eng.mode,
+        "final_residual": float(norms[-1]),
+        "rel_error": rel,
+    }, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

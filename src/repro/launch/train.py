@@ -1,0 +1,98 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --smoke --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On real hardware drop --smoke and pass --mesh single|multi; the driver
+builds the production mesh, shards state with launch/sharding.py rules and
+runs the fault-tolerant loop (periodic async checkpoints, NaN guard,
+straggler timing).  On this CPU container the smoke path trains a reduced
+config for a few hundred steps -- the examples/ scripts use it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--mesh", default="", choices=("", "single", "multi"))
+    ap.add_argument("--optimizer", default="adamw", choices=("adamw", "adafactor"))
+    args = ap.parse_args(argv)
+
+    from ..configs import get, get_smoke
+    from ..data import TokenPipeline
+    from ..ft import RestartManager, StepTimer
+    from ..models import model as M
+    from ..train import (adafactor, adamw, build_train_step,
+                         init_train_state, warmup_cosine)
+
+    cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt_fn = adamw if args.optimizer == "adamw" else adafactor
+    opt = opt_fn(warmup_cosine(args.lr, min(20, args.steps // 5 + 1), args.steps))
+    state = init_train_state(params, opt, compress=args.compress_grads)
+    step_fn = build_train_step(cfg, opt, grad_accum=args.grad_accum,
+                               compress_grads=args.compress_grads)
+
+    if args.mesh:
+        from . import sharding as SH
+        from .mesh import batch_axes, make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        st_sh = SH.named(mesh, SH.state_specs(state, cfg.fsdp), state)
+        state = jax.device_put(state, st_sh)
+        b_ax = batch_axes(mesh)
+        train_step = jax.jit(step_fn, donate_argnums=(0,))
+    else:
+        train_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
+    timer = StepTimer()
+
+    if args.ckpt_dir:
+        rm = RestartManager(args.ckpt_dir, save_every=args.save_every)
+        res = rm.run(state, train_step, pipe, total_steps=args.steps)
+        losses, times = res.losses, res.step_times
+    else:
+        losses, times = [], []
+        for i in range(args.steps):
+            t0 = time.perf_counter()
+            state, metrics = train_step(state, pipe.batch_at(i))
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            rep = timer.observe(i, dt)
+            losses.append(float(np.asarray(metrics["loss"])))
+            if rep.is_straggler:
+                print(f"[straggler] step {i}: {dt:.3f}s vs median {rep.median:.3f}s")
+            if i % 20 == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss {losses[-1]:.4f} ({dt*1e3:.0f} ms)")
+
+    print(json.dumps({
+        "arch": cfg.name, "steps": len(losses),
+        "loss_first": losses[0] if losses else None,
+        "loss_last": losses[-1] if losses else None,
+        "mean_step_ms": 1e3 * float(np.mean(times[1:])) if len(times) > 1 else None,
+        "tokens_per_s": args.batch * args.seq / float(np.mean(times[1:]))
+        if len(times) > 1 else None,
+    }, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,14 @@
+"""LM architecture zoo: composable JAX blocks for the 10 assigned archs.
+
+config      -- ModelConfig + layer grouping + exact param counts
+blocks      -- norms, MLPs, RoPE, embeddings, CE loss
+attention   -- GQA/MQA/SWA/prefix-LM flash attention, MLA, KV caches
+moe         -- token-choice top-k MoE with capacity dispatch (EP-ready)
+ssm         -- Mamba-2 SSD chunked scan
+rglru       -- RG-LRU recurrent block (RecurrentGemma)
+model       -- init/forward/loss/prefill/decode over layer-group scans
+frontends   -- vision/audio stub frontends (precomputed embeddings)
+shard       -- optional activation-sharding hints
+"""
+
+from .config import ModelConfig  # noqa: F401

@@ -1,0 +1,399 @@
+"""Attention: GQA/MQA/MHA with RoPE + bias + SWA + prefix-LM, MLA
+(DeepSeek-V3 multi-head latent attention), flash-style chunked softmax, and
+decode paths over (optionally int8-quantized, sequence-sharded) KV caches.
+
+Memory discipline: full-sequence attention never materializes the (S x S)
+score matrix -- ``flash_attention`` tiles queries (lax.map) and streams KV
+chunks (lax.scan) with an online softmax, the standard TPU-friendly
+formulation (VMEM-sized tiles, no O(S^2) temps).  Causal block skipping is
+*not* performed (static trip counts); the ~2x masked-out FLOPs are
+accounted for in the roofline notes.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import shard
+from .blocks import apply_rope, init_linear, linear
+
+__all__ = [
+    "init_attn", "attn_forward", "attn_decode",
+    "init_mla", "mla_forward", "mla_decode",
+    "flash_attention", "init_kv_cache", "init_mla_cache",
+    "quantize_kv", "dequantize_kv",
+]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pure JAX, chunked online softmax)
+# ---------------------------------------------------------------------------
+
+
+def _mask(qpos, kpos, causal, window, prefix_len):
+    """(..., Sq, Sk) boolean allowed-mask from position vectors."""
+    ok = jnp.ones(qpos.shape[:-1] + (qpos.shape[-1], kpos.shape[-1]), bool)
+    qp = qpos[..., :, None]
+    kp = kpos[..., None, :]
+    if causal:
+        ok = kp <= qp
+        if prefix_len:
+            ok = ok | ((kp < prefix_len) & (qp < prefix_len))
+    if window is not None:
+        ok = ok & (kp > qp - window)
+    return ok
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int = 0,
+    softcap: float | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) with H % KV == 0.
+    Returns (B, Sq, H, D).  Never materializes (Sq x Sk)."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    nq = -(-sq // qc)
+    nk = -(-sk // kc)
+    sq_p, sk_p = nq * qc, nk * kc
+
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    qpos = q_offset + jnp.arange(sq_p)
+    kpos = jnp.arange(sk_p)
+    kpos = jnp.where(kpos < sk, kpos, jnp.iinfo(jnp.int32).max)  # pad -> never allowed
+
+    qp = qp.reshape(b, nq, qc, kv, g, d)
+    kp_ = kp_.reshape(b, nk, kc, kv, d)
+    vp = vp.reshape(b, nk, kc, kv, d)
+
+    def one_q_chunk(args):
+        qi, qpos_i = args                      # (b, qc, kv, g, d), (qc,)
+        qi = shard.constrain(qi, "batch_only")
+        m0 = shard.constrain(jnp.full((b, qc, kv, g), -jnp.inf, jnp.float32), "batch_only")
+        l0 = shard.constrain(jnp.zeros((b, qc, kv, g), jnp.float32), "batch_only")
+        a0 = shard.constrain(jnp.zeros((b, qc, kv, g, d), jnp.float32), "batch_only")
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, vj, kpos_j = inp               # (b, kc, kv, d) x2, (kc,)
+            kj = shard.constrain(kj, "batch_only")
+            vj = shard.constrain(vj, "batch_only")
+            s = jnp.einsum(
+                "bqkgd,bckd->bqkgc", qi.astype(jnp.float32),
+                kj.astype(jnp.float32),
+            ) * scale
+            s = shard.constrain(s, "batch_only")
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            ok = _mask(qpos_i, kpos_j, causal, window, prefix_len)
+            s = jnp.where(ok[None, :, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked tiles (m_new == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(ok[None, :, None, None, :], p, 0.0)
+            alpha = jnp.where(
+                jnp.isfinite(m), jnp.exp(m - m_safe), 0.0
+            )
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vj.astype(jnp.float32)
+            )
+            acc = shard.constrain(acc, "batch_only")
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kp_.swapaxes(0, 1), vp.swapaxes(0, 1), kpos.reshape(nk, kc)),
+        )
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    # checkpoint per q-chunk: the backward recomputes each chunk's kv scan
+    # instead of saving (nq x nk) full score tiles -- without this the
+    # autodiff of scan-under-map materializes the S x S attention matrix
+    # (observed: 4 GiB/layer/device f32 residuals on the 32k cells).
+    out = jax.lax.map(
+        jax.checkpoint(one_q_chunk), (qp.swapaxes(0, 1), qpos.reshape(nq, qc))
+    )                                           # (nq, b, qc, kv, g, d)
+    out = out.swapaxes(0, 1).reshape(b, sq_p, h, d)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (optionally int8), decode attention
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Per-(token, head) symmetric int8: x (B,S,KV,D) -> (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_kv_cache(batch, max_len, n_kv, hd, dtype=jnp.bfloat16, quant=False):
+    """Ring-buffer KV cache.  ``max_len`` = window size for SWA archs."""
+    if quant:
+        return {
+            "k": jnp.zeros((batch, max_len, n_kv, hd), jnp.int8),
+            "v": jnp.zeros((batch, max_len, n_kv, hd), jnp.int8),
+            "k_s": jnp.zeros((batch, max_len, n_kv, 1), jnp.float32),
+            "v_s": jnp.zeros((batch, max_len, n_kv, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+    }
+
+
+def _dus(buf, upd, dim1_index):
+    """Write ``upd`` (B, 1, ...) into ``buf`` (B, W, ...) at slot
+    ``dim1_index`` along dim 1.
+
+    Implemented as an elementwise masked select (iota == slot) rather than
+    ``dynamic_update_slice``: DUS on a dimension that is *sharded* (decode
+    caches shard seq over "model") makes GSPMD gather/re-scatter the whole
+    cache; the select keeps the write local to the owning shard (one fused
+    read-modify-write, zero collectives)."""
+    w = buf.shape[1]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (1, w) + (1,) * (buf.ndim - 2), 1)
+    mask = mask == dim1_index.astype(jnp.int32)
+    return jnp.where(mask, upd.astype(buf.dtype), buf)
+
+
+def _cache_write(cache, k_new, v_new, pos):
+    """Write one token (B,1,KV,D) at ring slot pos % max_len."""
+    slot = pos % cache["k"].shape[1]
+    cache = dict(cache)
+    if "k_s" in cache:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        cache["k"] = _dus(cache["k"], kq, slot)
+        cache["v"] = _dus(cache["v"], vq, slot)
+        cache["k_s"] = _dus(cache["k_s"], ks, slot)
+        cache["v_s"] = _dus(cache["v_s"], vs, slot)
+        return cache
+    cache["k"] = _dus(cache["k"], k_new, slot)
+    cache["v"] = _dus(cache["v"], v_new, slot)
+    return cache
+
+
+def _cache_read(cache, dtype):
+    if "k_s" in cache:
+        return (dequantize_kv(cache["k"], cache["k_s"], dtype),
+                dequantize_kv(cache["v"], cache["v_s"], dtype))
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# standard (GQA) attention layer
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg, dtype=jnp.float32):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, kvh * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, kvh * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], h * hd, d, dtype=dtype),
+    }
+
+
+def _qkv(p, x, cfg, pos):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = shard.constrain(linear(p["wq"], x).reshape(b, s, h, hd), "heads")
+    k = shard.constrain(linear(p["wk"], x).reshape(b, s, kvh, hd), "kv")
+    v = shard.constrain(linear(p["wv"], x).reshape(b, s, kvh, hd), "kv")
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, x, cfg, pos=None, return_kv=False):
+    """Full-sequence attention (training / prefill).  x: (B, S, D)."""
+    b, s, _ = x.shape
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, x, cfg, pos)
+    o = flash_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        prefix_len=cfg.n_prefix_tokens if cfg.prefix_lm else 0,
+        softcap=cfg.logit_softcap,
+    )
+    o = linear(p["wo"], o.reshape(b, s, -1))
+    if return_kv:
+        return o, (k, v)
+    return o
+
+
+def attn_decode(p, x, cfg, cache, pos):
+    """One-token decode.  x: (B, 1, D); pos: scalar int32 (current index).
+    Cache is a ring buffer of size W (= sliding_window or max seq).
+
+    The attention runs over the FULL cache in one einsum with the cache's
+    sequence dim sharded over "model": GSPMD partitions the softmax
+    reductions automatically (distributed decode attention).  Explicit
+    chunked/flash-decode variants were measured and REFUTED on this path
+    (dynamic-slice chunks gather the sharded cache; reshaped-chunk scans
+    add per-chunk cross-shard reductions -- EXPERIMENTS.md §Perf);
+    int8 dequant fuses into the einsum, so temps stay bounded."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kvh
+    posv = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, posv)
+    cache = _cache_write(cache, k_new, v_new, pos)
+    k, v = _cache_read(cache, jnp.float32)      # (B, W, KV, D), dequant fused
+    w = k.shape[1]
+    # ring-buffer absolute positions: slot t holds token pos - ((pos - t) % W)
+    slots = jnp.arange(w)
+    age = (pos - slots) % w
+    valid = (pos - age) >= 0
+    if cfg.sliding_window:
+        valid = valid & (age < cfg.sliding_window)
+    s = jnp.einsum(
+        "bqkgd,bckd->bqkgc",
+        q.reshape(b, 1, kvh, g, hd).astype(jnp.float32), k,
+    ) / math.sqrt(hd)
+    if cfg.logit_softcap:
+        s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckd->bqkgd", pr, v)
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    return linear(p["wo"], o), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_linear(ks[0], d, qr, dtype=dtype),
+        "q_norm": {"scale": jnp.ones((qr,), dtype)},
+        "wq_b": init_linear(ks[1], qr, h * (nope + rope), dtype=dtype),
+        "wkv_a": init_linear(ks[2], d, kr + rope, dtype=dtype),
+        "kv_norm": {"scale": jnp.ones((kr,), dtype)},
+        "wkv_b": init_linear(ks[3], kr, h * (nope + vd), dtype=dtype),
+        "wo": init_linear(ks[4], h * vd, d, dtype=dtype),
+    }
+
+
+def _mla_qkv(p, x, cfg, pos):
+    from .blocks import rms_norm
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+
+    q = linear(p["wq_b"], rms_norm(p["q_norm"], linear(p["wq_a"], x)))
+    q = shard.constrain(q.reshape(b, s, h, nope + rope), "heads")
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    kv_a = linear(p["wkv_a"], x)                  # (B, S, kr + rope)
+    c_kv = rms_norm(p["kv_norm"], kv_a[..., :kr])
+    k_rope = apply_rope(kv_a[..., None, kr:], pos, cfg.rope_theta)  # (B,S,1,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p, x, cfg, pos=None):
+    """Full-sequence MLA (training / prefill): expand K,V from the latent
+    and run flash attention with KV heads == H."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, vd = cfg.qk_nope_dim, cfg.v_head_dim
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, pos)
+    kv = shard.constrain(
+        linear(p["wkv_b"], c_kv).reshape(b, s, h, nope + vd), "heads"
+    )
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (cfg.qk_rope_dim,))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad V's head_dim up to K's so flash can run one pass; slice after.
+    dq = q.shape[-1]
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - vd)))
+    o = flash_attention(q, k, v_pad, causal=True)[..., :vd]
+    return linear(p["wo"], o.reshape(b, s, h * vd))
+
+
+def init_mla_cache(batch, max_len, cfg, dtype=jnp.bfloat16):
+    """Latent cache: c_kv (kr) + k_rope (rope) per token -- the MLA win."""
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    """Absorbed-form MLA decode: scores and values computed directly in the
+    latent space (per-head absorption of wkv_b), O(kr) per cached token."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    posv = jnp.broadcast_to(pos[None, None], (b, 1))
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, x, cfg, posv)
+
+    cache = dict(cache)
+    cache["ckv"] = _dus(cache["ckv"], c_kv_new, pos)
+    cache["kr"] = _dus(cache["kr"], k_rope_new[:, :, 0, :], pos)
+
+    wkv = p["wkv_b"]["w"].reshape(kr, h, nope + vd)
+    w_uk = wkv[..., :nope]                       # (kr, H, nope)
+    w_uv = wkv[..., nope:]                       # (kr, H, vd)
+
+    # absorb: q_eff (B, H, kr) = q_nope . w_uk
+    q_eff = jnp.einsum("bqhn,khn->bhk", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    ckv = cache["ckv"].astype(jnp.float32)       # (B, S, kr)
+    krope = cache["kr"].astype(jnp.float32)      # (B, S, rope)
+    s_lat = jnp.einsum("bhk,bsk->bhs", q_eff, ckv)
+    s_rope = jnp.einsum("bqhr,bsr->bhs", q_rope.astype(jnp.float32), krope)
+    scale = 1.0 / math.sqrt(nope + rope)
+    s = (s_lat + s_rope) * scale
+    mask = jnp.arange(ckv.shape[1]) <= pos
+    s = jnp.where(mask[None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsk->bhk", pr, ckv)    # context in latent space
+    o = jnp.einsum("bhk,khv->bhv", ctx, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * vd).astype(x.dtype)
+    return linear(p["wo"], o), cache

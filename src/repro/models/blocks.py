@@ -1,0 +1,138 @@
+"""Shared building blocks: norms, MLPs, RoPE, embeddings, init helpers.
+
+Everything is a pure function over explicit param pytrees (no framework
+module system): params are dicts of jnp arrays, apply fns take
+``(params, x, cfg)``.  Stacked variants (leading layer axis) are produced
+by ``jax.vmap`` over init and consumed by ``lax.scan`` in the stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dtype_of", "rms_norm", "layer_norm", "init_norm", "init_linear",
+    "linear", "init_mlp", "mlp", "rope_freqs", "apply_rope",
+    "init_embed", "cross_entropy",
+]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# -- norms ------------------------------------------------------------------
+
+
+def init_norm(key, d, kind="rmsnorm", dtype=jnp.float32):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p.get(
+        "bias", jnp.zeros_like(p["scale"])
+    ).astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(p, x, kind="rmsnorm"):
+    return layer_norm(p, x) if kind == "layernorm" else rms_norm(p, x)
+
+
+# -- linear / mlp -----------------------------------------------------------
+
+
+def init_linear(key, d_in, d_out, bias=False, dtype=jnp.float32, scale=None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_mlp(key, d, d_ff, act="swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi": init_linear(ks[0], d, d_ff, dtype=dtype),
+            "wg": init_linear(ks[1], d, d_ff, dtype=dtype),
+            "wo": init_linear(ks[2], d_ff, d, dtype=dtype),
+        }
+    return {
+        "wi": init_linear(ks[0], d, d_ff, dtype=dtype),
+        "wo": init_linear(ks[2], d_ff, d, dtype=dtype),
+    }
+
+
+def mlp(p, x, act="swiglu"):
+    from . import shard
+    h = shard.constrain(linear(p["wi"], x), "act_bsf")
+    if act == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x)) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(linear(p["wg"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return linear(p["wo"], h)
+
+
+# -- RoPE -------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); pos: (..., S) int32 absolute positions."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (D/2,)
+    ang = pos[..., None].astype(jnp.float32) * inv   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                 # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- embedding / loss -------------------------------------------------------
+
+
+def init_embed(key, vocab, d, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token NLL; logits (..., V) f32-upcast for the softmax."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

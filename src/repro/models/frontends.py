@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (per the assignment: [vlm]/[audio] entries are
+backbone-only; ``input_specs()`` supplies precomputed patch/frame
+embeddings).
+
+``vision_stub`` / ``audio_stub`` are linear projections from a precomputed
+feature space into d_model -- the shape/interface contract of SigLIP
+(paligemma) and EnCodec frames (musicgen) without the (out-of-scope)
+encoders.  They exist so examples/tests exercise the concat-prefix and
+embed-input code paths end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import init_linear, linear
+
+__all__ = ["init_frontend", "apply_frontend", "SIGLIP_DIM", "ENCODEC_DIM"]
+
+SIGLIP_DIM = 1152    # SigLIP-So400m feature width (paligemma-3b)
+ENCODEC_DIM = 128    # EnCodec latent frame width (musicgen)
+
+
+def init_frontend(key, cfg, dtype=jnp.float32):
+    if cfg.frontend == "vision":
+        return {"proj": init_linear(key, SIGLIP_DIM, cfg.d_model, dtype=dtype)}
+    if cfg.frontend == "audio":
+        return {"proj": init_linear(key, ENCODEC_DIM, cfg.d_model, dtype=dtype)}
+    return {}
+
+
+def apply_frontend(p, feats, cfg):
+    """feats: (B, n_prefix_tokens, feat_dim) precomputed embeddings."""
+    if not p:
+        return None
+    return linear(p["proj"], feats)

@@ -1,0 +1,400 @@
+"""The composable LM stack: init / forward / prefill / decode for every
+assigned architecture, built from the family blocks.
+
+Layer execution is ``lax.scan`` over stacked per-group params (homogeneous
+contiguous groups from ``cfg.layer_groups()``), with optional per-layer
+``jax.checkpoint`` (remat) in training.  The same block-apply functions
+serve train, prefill, and decode, so functional equivalence between the
+three paths is testable (tests/test_models.py asserts prefill+decode ==
+forward).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import shard
+from .attention import (
+    attn_decode, attn_forward, init_attn, init_kv_cache, init_mla,
+    init_mla_cache, mla_decode, mla_forward,
+)
+from .blocks import (
+    apply_norm, cross_entropy, dtype_of, init_embed, init_mlp, init_norm,
+    linear, mlp,
+)
+from .config import ModelConfig
+from .moe import init_moe, moe_apply
+from .rglru import init_rglru, init_rglru_state, rglru_decode, rglru_forward
+from .ssm import init_ssm, init_ssm_state, ssm_decode, ssm_forward
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "prefill", "decode_step",
+    "init_caches", "param_count",
+]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply / decode
+# ---------------------------------------------------------------------------
+
+
+def _split_kinds(kind: str) -> list[str]:
+    return kind[5:].split(",") if kind.startswith("unit:") else [kind]
+
+
+def init_layer(key, kind: str, cfg: ModelConfig, dtype):
+    if kind.startswith("unit:"):
+        subs = _split_kinds(kind)
+        ks = jax.random.split(key, len(subs))
+        return {f"l{i}": init_layer(ks[i], s, cfg, dtype) for i, s in enumerate(subs)}
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(ks[0], d, cfg.norm, dtype)}
+    if kind == "ssm":
+        p["mix"] = init_ssm(ks[1], cfg, dtype)
+        return p
+    if kind == "rec":
+        p["mix"] = init_rglru(ks[1], cfg, dtype)
+    elif kind in ("attn_mlp", "attn_moe", "attn"):
+        p["mix"] = (init_mla if cfg.use_mla else init_attn)(ks[1], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    p["norm2"] = init_norm(ks[2], d, cfg.norm, dtype)
+    if kind == "attn_moe":
+        p["ffn"] = init_moe(ks[3], cfg, dtype)
+    else:
+        p["ffn"] = init_mlp(ks[3], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def apply_layer(p, x, kind: str, cfg: ModelConfig):
+    """Full-sequence layer application -> (x, aux)."""
+    if kind.startswith("unit:"):
+        aux = jnp.zeros((), jnp.float32)
+        for i, s in enumerate(_split_kinds(kind)):
+            x, a = apply_layer(p[f"l{i}"], x, s, cfg)
+            aux = aux + a
+        return x, aux
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "ssm":
+        return x + ssm_forward(p["mix"], h, cfg), aux
+    if kind == "rec":
+        x = x + rglru_forward(p["mix"], h, cfg)
+    else:
+        mixed = (mla_forward if cfg.use_mla else attn_forward)(p["mix"], h, cfg)
+        x = x + mixed
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    if kind == "attn_moe":
+        y, aux = moe_apply(p["ffn"], h2, cfg)
+    else:
+        y = mlp(p["ffn"], h2, cfg.act)
+    return x + y, aux
+
+
+def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if kind.startswith("unit:"):
+        return {
+            f"l{i}": init_layer_cache(s, cfg, batch, max_len, dtype)
+            for i, s in enumerate(_split_kinds(kind))
+        }
+    if kind == "ssm":
+        return init_ssm_state(batch, cfg, jnp.float32)
+    if kind == "rec":
+        return init_rglru_state(batch, cfg, dtype)
+    if cfg.use_mla:
+        return init_mla_cache(batch, max_len, cfg, dtype)
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return init_kv_cache(batch, w, cfg.n_kv_heads, cfg.hd, dtype,
+                         quant=cfg.kv_cache_dtype == "int8")
+
+
+def decode_layer(p, x, kind: str, cfg: ModelConfig, cache, pos):
+    if kind.startswith("unit:"):
+        new = {}
+        for i, s in enumerate(_split_kinds(kind)):
+            x, new[f"l{i}"] = decode_layer(p[f"l{i}"], x, s, cfg, cache[f"l{i}"], pos)
+        return x, new
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "ssm":
+        y, cache = ssm_decode(p["mix"], h, cfg, cache)
+        return x + y, cache
+    if kind == "rec":
+        y, cache = rglru_decode(p["mix"], h, cfg, cache)
+        x = x + y
+    else:
+        if cfg.use_mla:
+            y, cache = mla_decode(p["mix"], h, cfg, cache, pos)
+        else:
+            y, cache = attn_decode(p["mix"], h, cfg, cache, pos)
+        x = x + y
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    if kind == "attn_moe":
+        y, _ = moe_apply(p["ffn"], h2, cfg)
+    else:
+        y = mlp(p["ffn"], h2, cfg.act)
+    return x + y, cache
+
+
+def prefill_layer(p, x, kind: str, cfg: ModelConfig, max_len: int):
+    """Full-seq apply that *also* returns the primed cache."""
+    if kind.startswith("unit:"):
+        caches = {}
+        for i, s in enumerate(_split_kinds(kind)):
+            x, caches[f"l{i}"] = prefill_layer(p[f"l{i}"], x, s, cfg, max_len)
+        return x, caches
+    b, sq, _ = x.shape
+    dtype = x.dtype
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "ssm":
+        y, state = ssm_forward(p["mix"], h, cfg, return_state=True)
+        conv_dim = cfg.ssm_expand * cfg.d_model + 2 * cfg.ssm_d_state
+        from .blocks import linear as _lin
+        zxbcdt = _lin(p["mix"]["in_proj"], h)
+        din = cfg.ssm_expand * cfg.d_model
+        xbc = zxbcdt[..., din : din + conv_dim]
+        kw = cfg.ssm_d_conv - 1
+        conv = xbc[:, -kw:, :] if sq >= kw else jnp.pad(xbc, ((0, 0), (kw - sq, 0), (0, 0)))
+        return x + y, {"ssd": state, "conv": conv.astype(jnp.float32)}
+    if kind == "rec":
+        y, state = rglru_forward(p["mix"], h, cfg, return_state=True)
+        from .blocks import linear as _lin
+        xb = _lin(p["mix"]["in_x"], h)
+        kw = cfg.conv1d_width - 1
+        conv = xb[:, -kw:, :] if sq >= kw else jnp.pad(xb, ((0, 0), (kw - sq, 0), (0, 0)))
+        x = x + y
+        cache = {"h": state["h"], "conv": conv}
+    elif cfg.use_mla:
+        from .attention import _mla_qkv
+        pos = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+        y = mla_forward(p["mix"], h, cfg)
+        _, _, c_kv, k_rope = _mla_qkv(p["mix"], h, cfg, pos)
+        cache = init_mla_cache(b, max_len, cfg, dtype)
+        cache["ckv"] = cache["ckv"].at[:, :sq].set(c_kv.astype(cache["ckv"].dtype))
+        cache["kr"] = cache["kr"].at[:, :sq].set(k_rope[:, :, 0].astype(cache["kr"].dtype))
+        x = x + y
+    else:
+        y, (k, v) = attn_forward(p["mix"], h, cfg, return_kv=True)
+        w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        cache = init_kv_cache(b, w, cfg.n_kv_heads, cfg.hd, dtype,
+                              quant=cfg.kv_cache_dtype == "int8")
+        nkeep = min(w, sq)
+        slots = (sq - nkeep + jnp.arange(nkeep)) % w
+        if "k_s" in cache:
+            from .attention import quantize_kv
+            kq, ks_ = quantize_kv(k[:, -nkeep:])
+            vq, vs_ = quantize_kv(v[:, -nkeep:])
+            cache["k"] = cache["k"].at[:, slots].set(kq)
+            cache["v"] = cache["v"].at[:, slots].set(vq)
+            cache["k_s"] = cache["k_s"].at[:, slots].set(ks_)
+            cache["v_s"] = cache["v_s"].at[:, slots].set(vs_)
+        else:
+            cache["k"] = cache["k"].at[:, slots].set(k[:, -nkeep:].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, slots].set(v[:, -nkeep:].astype(cache["v"].dtype))
+        x = x + y
+    h2 = apply_norm(p["norm2"], x, cfg.norm)
+    if kind == "attn_moe":
+        y, _ = moe_apply(p["ffn"], h2, cfg)
+    else:
+        y = mlp(p["ffn"], h2, cfg.act)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# whole-model init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    params = {"embed": init_embed(ks[0], cfg.vocab_size, cfg.d_model, dtype)}
+    groups = []
+    for gi, (kind, count) in enumerate(cfg.layer_groups()):
+        gk = jax.random.split(jax.random.fold_in(ks[1], gi), count)
+        groups.append(jax.vmap(lambda k: init_layer(k, kind, cfg, dtype))(gk))
+    params["groups"] = groups
+    params["final_norm"] = init_norm(ks[2], cfg.d_model, cfg.norm, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = init_embed(ks[3], cfg.vocab_size, cfg.d_model, dtype)
+    if cfg.mtp_depth:
+        mk = jax.random.split(ks[4], cfg.mtp_depth)
+        params["mtp"] = [
+            {
+                "proj": {"w": (jax.random.normal(mk[i], (2 * cfg.d_model, cfg.d_model))
+                               * 0.02).astype(dtype)},
+                "block": init_layer(jax.random.fold_in(mk[i], 1), "attn_mlp", cfg, dtype),
+                "norm": init_norm(jax.random.fold_in(mk[i], 2), cfg.d_model, cfg.norm, dtype),
+            }
+            for i in range(cfg.mtp_depth)
+        ]
+    return params
+
+
+def _embed_inputs(params, cfg, tokens=None, input_embeds=None, prefix_embeds=None):
+    cdt = dtype_of(cfg.compute_dtype)
+    parts = []
+    if prefix_embeds is not None:
+        parts.append(prefix_embeds.astype(cdt))
+    if input_embeds is not None:
+        parts.append(input_embeds.astype(cdt))
+    if tokens is not None:
+        emb = params["embed"]["table"].astype(cdt)[tokens]
+        if cfg.norm == "rmsnorm" and cfg.family in ("vlm",):
+            emb = emb * jnp.sqrt(float(cfg.d_model)).astype(cdt)  # gemma scaling
+        parts.append(emb)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return shard.constrain(x, "act_bsd")
+
+
+def _scan_group(params_g, x, kind, cfg, train):
+    def body(p, x):
+        return apply_layer(p, x, kind, cfg)
+
+    if cfg.remat and train:
+        body = jax.checkpoint(body)
+
+    def f(carry, pl):
+        x, aux = carry
+        y, a = body(pl, x)
+        return (shard.constrain(y, "act_bsd"), aux + a), None
+
+    (x, aux), _ = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)), params_g)
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, tokens=None, input_embeds=None,
+            prefix_embeds=None, train=False):
+    """Full-sequence forward -> (hidden (B,S,D), aux)."""
+    x = _embed_inputs(params, cfg, tokens, input_embeds, prefix_embeds)
+    aux = jnp.zeros((), jnp.float32)
+    for (kind, count), pg in zip(cfg.layer_groups(), params["groups"]):
+        x, a = _scan_group(pg, x, kind, cfg, train)
+        aux = aux + a
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def logits_from_hidden(params, cfg, x):
+    table = (params["embed"] if cfg.tie_embeddings else params["head"])["table"]
+    out = x @ table.astype(x.dtype).T
+    return shard.constrain(out, "logits")
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, mask=None,
+            prefix_embeds=None, loss_chunk: int = 1024):
+    """Next-token CE (+ MoE aux + MTP aux).  Loss computed in seq chunks so
+    (B, S, V) logits never fully materialize."""
+    x, aux = forward(params, cfg, tokens=tokens, prefix_embeds=prefix_embeds,
+                     train=True)
+    npfx = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+    if npfx:
+        x_txt = x[:, npfx:]
+    else:
+        x_txt = x
+    b, s, d = x_txt.shape
+    c = min(loss_chunk, s)
+    nc = s // c if s % c == 0 else 1
+    c = s // nc
+
+    def chunk_loss(args):
+        xc, lc, mc = args
+        lg = logits_from_hidden(params, cfg, xc)
+        lgf = lg.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lgf, axis=-1)
+        gold = jnp.take_along_axis(lgf, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return jnp.stack([jnp.sum(nll), jnp.sum(mc)])
+
+    mask = jnp.ones((b, s), jnp.float32) if mask is None else mask
+    parts = jax.lax.map(
+        chunk_loss,
+        (
+            x_txt.reshape(b, nc, c, d).swapaxes(0, 1),
+            labels.reshape(b, nc, c).swapaxes(0, 1),
+            mask.reshape(b, nc, c).swapaxes(0, 1),
+        ),
+    )
+    tot = parts.sum(0)
+    loss = tot[0] / jnp.maximum(tot[1], 1.0)
+
+    if cfg.mtp_depth and "mtp" in params:
+        # MTP: predict token t+1+k from [h_t ; emb(tok_{t+k})] (deepseek-v3)
+        h = x_txt
+        for k, mp in enumerate(params["mtp"], start=1):
+            emb_next = params["embed"]["table"].astype(h.dtype)[
+                jnp.pad(tokens[:, k:], ((0, 0), (0, k)))
+            ]
+            hcat = jnp.concatenate([h, emb_next], axis=-1)
+            h = linear(mp["proj"], hcat)
+            h, _ = apply_layer(mp["block"], h, "attn_mlp", cfg)
+            h = apply_norm(mp["norm"], h, cfg.norm)
+            lbl_k = jnp.pad(labels[:, k:], ((0, 0), (0, k)))
+            msk_k = jnp.pad(mask[:, k:], ((0, 0), (0, k)))
+            lg = logits_from_hidden(params, cfg, h)
+            loss = loss + 0.3 * cross_entropy(lg, lbl_k, msk_k)
+
+    return loss + aux, {"aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = dtype_of(cfg.compute_dtype)
+    return [
+        jax.vmap(lambda _: init_layer_cache(kind, cfg, batch, max_len, dtype))(
+            jnp.arange(count)
+        )
+        for (kind, count) in cfg.layer_groups()
+    ]
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, input_embeds=None,
+            prefix_embeds=None, max_len: int | None = None):
+    """Run the prompt, return (last-token logits, caches, next position)."""
+    x = _embed_inputs(params, cfg, tokens, input_embeds, prefix_embeds)
+    s = x.shape[1]
+    max_len = max_len or cfg.max_seq_len
+
+    caches = []
+    for (kind, count), pg in zip(cfg.layer_groups(), params["groups"]):
+        def body(carry, pl):
+            y, cache = prefill_layer(pl, carry, kind, cfg, max_len)
+            return y, cache
+
+        x, cache_g = jax.lax.scan(body, x, pg)
+        caches.append(cache_g)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    return logits, caches, jnp.int32(s)
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32.
+    Returns (logits (B, 1, V), new caches)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = params["embed"]["table"].astype(cdt)[tokens]
+    if cfg.norm == "rmsnorm" and cfg.family in ("vlm",):
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(cdt)
+    new_caches = []
+    for (kind, count), pg, cg in zip(cfg.layer_groups(), params["groups"], caches):
+        def body(carry, inp):
+            pl, cl = inp
+            y, c_new = decode_layer(pl, carry, kind, cfg, cl, pos)
+            return y, c_new
+
+        x, cg_new = jax.lax.scan(body, x, (pg, cg))
+        new_caches.append(cg_new)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return logits_from_hidden(params, cfg, x), new_caches
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

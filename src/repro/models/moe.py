@@ -1,0 +1,128 @@
+"""Mixture-of-Experts layer (DBRX 16e/top-4, DeepSeek-V3 1-shared + 256e/top-8).
+
+TPU-static token-choice routing with per-group capacity:
+
+  * tokens are routed in groups (one group per sequence for training /
+    prefill; the whole batch is one group for decode) so every shape is
+    static and the dispatch buffers stay O(group x capacity), never O(T^2);
+  * dispatch/combine are scatter/gather einsums over an (E, C, D) buffer
+    whose expert axis is sharded over the "model" mesh axis -- under GSPMD
+    this lowers to the expert-parallel all-to-all, which is the MoE
+    analogue of Azul's "vector fragments over the NoC" (see DESIGN.md
+    §Arch-applicability);
+  * over-capacity tokens are dropped (contribute zero), standard practice.
+
+The router aux (load-balance) loss is returned so the stack can accumulate
+it through the layer scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import shard
+from .blocks import init_linear, linear
+
+__all__ = ["init_moe", "moe_apply"]
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    ffe = cfg.d_ff_expert or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    glu = cfg.act in ("swiglu", "geglu")
+    s = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    p = {
+        "router": init_linear(ks[0], d, e, dtype=dtype),
+        "wi": (jax.random.normal(ks[1], (e, d, ffe)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[2], (e, ffe, d)) * s).astype(dtype),
+    }
+    if glu:
+        p["wg"] = (jax.random.normal(ks[3], (e, d, ffe)) * s).astype(dtype)
+    if cfg.n_shared_experts:
+        from .blocks import init_mlp
+        p["shared"] = init_mlp(
+            ks[4], d, cfg.n_shared_experts * ffe, act=cfg.act, dtype=dtype
+        )
+    return p
+
+
+def _expert_ffn(p, xb, act):
+    """xb: (G, E, C, D) -> (G, E, C, D), per-expert weights batched on E."""
+    h = jnp.einsum("gecd,edf->gecf", xb, p["wi"].astype(xb.dtype))
+    if act == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", xb, p["wg"].astype(xb.dtype))
+        h = jax.nn.silu(g) * h
+    elif act == "geglu":
+        g = jnp.einsum("gecd,edf->gecf", xb, p["wg"].astype(xb.dtype))
+        h = jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(xb.dtype))
+
+
+def moe_apply(p, x, cfg, capacity_factor: float | None = None):
+    """x: (B, S, D) -> (y, aux_loss).  Routing groups = sequences (training
+    / prefill, capacity-dropped) or the whole batch (decode, drop-free)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
+
+    if s == 1:  # decode: one group over the batch, drop-free capacity
+        xg = x.reshape(1, b, d)
+        g, t = 1, b
+        cap = t
+    else:
+        xg = x
+        g, t = b, s
+        cap = min(max(int(t * k / e * cf), k), t)
+
+    logits = linear(p["router"], xg).astype(jnp.float32)   # (G, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                   # (G, T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # position of each assignment within its expert (per group)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)       # (G, T, k, E)
+    flat = onehot.reshape(g, t * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # (G, T*k, E)
+    pos = jnp.sum(flat * pos, axis=-1)                     # (G, T*k)
+    e_flat = idx.reshape(g, t * k)
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    # dispatch: scatter tokens into the (G, E, C, D) expert buffers
+    x_rep = jnp.repeat(xg, k, axis=1)                      # (G, T*k, D)
+    x_rep = jnp.where(keep[..., None], x_rep, jnp.zeros_like(x_rep))
+    buf = jnp.zeros((g, e, cap, d), xg.dtype)
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None], (g, t * k))
+    buf = buf.at[gi, e_flat, pos_c].add(x_rep)
+    # EP boundary: tokens (batch-sharded) -> expert buffers (expert-sharded);
+    # this constraint is the all-to-all dispatch under GSPMD.
+    buf = shard.constrain(buf, "moe_buf")
+
+    # expert compute (E sharded over "model" => expert parallel)
+    yb = shard.constrain(_expert_ffn(p, buf, cfg.act), "moe_buf")  # (G, E, C, D)
+
+    # combine: gather back and weight by gates (the return all-to-all)
+    y_tok = shard.constrain(yb[gi, e_flat, pos_c], "batch_only")  # (G, T*k, D)
+    y_tok = jnp.where(keep[..., None], y_tok, jnp.zeros_like(y_tok))
+    gates_flat = gates.reshape(g, t * k, 1).astype(y_tok.dtype)
+    y = jnp.sum((y_tok * gates_flat).reshape(g, t, k, d), axis=2)
+
+    if s == 1:
+        y = y.reshape(b, 1, d)
+
+    if "shared" in p:
+        from .blocks import mlp
+        y = y + mlp(p["shared"], x, act=cfg.act)
+
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                      # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / k
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+    return y, aux

@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrent branch: conv1d + Real-Gated Linear Recurrent Unit
+
+    r_t = sigmoid(W_a x_t)             (recurrence gate)
+    i_t = sigmoid(W_x x_t)             (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` (log-depth parallel scan --
+the TPU-native way to run a linear recurrence over 500k tokens); decode is
+the O(1) step.  The block wraps the recurrence with in/out projections and
+a GeGLU-style gate, matching Griffin's recurrent block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import shard
+from .blocks import init_linear, linear
+
+__all__ = ["init_rglru", "rglru_forward", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": init_linear(ks[0], d, w, dtype=dtype),
+        "in_g": init_linear(ks[1], d, w, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, w)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": init_linear(ks[3], w, w, dtype=dtype),
+        "w_x": init_linear(ks[4], w, w, dtype=dtype),
+        "lam": (jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)).astype(dtype),
+        "out": init_linear(jax.random.fold_in(key, 7), w, d, dtype=dtype),
+    }
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(linear(p["w_a"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["w_x"], xc).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_forward(p, x, cfg, return_state=False):
+    """x: (B, S, D) -> (B, S, D).  Parallel scan over the recurrence."""
+    from .ssm import _conv1d_causal
+
+    xb = shard.constrain(linear(p["in_x"], x), "act_bsf")
+    gate = shard.constrain(linear(p["in_g"], x), "act_bsf")
+    xc, _ = _conv1d_causal(p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), xb)
+    a, b = _gates(p, xc)                         # (B, S, W) f32
+    a = shard.constrain(a, "act_bsf")
+    b = shard.constrain(b, "act_bsf")
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * jax.nn.gelu(gate.astype(jnp.float32))).astype(x.dtype)
+    out = linear(p["out"], y)
+    if return_state:
+        return out, {"h": h[:, -1], "conv": jnp.concatenate(
+            [jnp.zeros_like(xb[:, :0]), xb[:, -(cfg.conv1d_width - 1):]], axis=1)}
+    return out
+
+
+def init_rglru_state(batch, cfg, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(p, x, cfg, state):
+    """One-token step.  x: (B, 1, D)."""
+    from .ssm import _conv1d_causal
+
+    xb = linear(p["in_x"], x)
+    gate = linear(p["in_g"], x)
+    xc, conv_state = _conv1d_causal(
+        p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), xb,
+        state["conv"].astype(x.dtype),
+    )
+    a, b = _gates(p, xc)                         # (B, 1, W)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (h[:, None] * jax.nn.gelu(gate.astype(jnp.float32))).astype(x.dtype)
+    return linear(p["out"], y), {"h": h, "conv": conv_state.astype(state["conv"].dtype)}

@@ -1,0 +1,96 @@
+"""Activation-sharding hints for the model zoo.
+
+Parameter shardings are supplied at jit boundaries (launch/sharding.py),
+but GSPMD's propagation *through while-loop bodies* (the layer scan, the
+flash-attention chunk loops) can drop the batch sharding and silently
+replicate activations -- observed as 64 GiB per-device temps on the
+qwen2-72b train cell (EXPERIMENTS.md §Perf, iteration 1).  The model code
+therefore pins the sharding of every loop-carried or loop-local hot tensor
+via ``constrain(x, kind)``.
+
+``constrain`` is a no-op unless a launcher installed a context with
+``use_mesh_axes(mesh, batch, model)``, so the models remain runnable on a
+single device with zero mesh plumbing.  Specs are validated against the
+tensor shape (axes that don't divide are dropped -> replicated), so the
+same call sites serve every arch x mesh combination.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"on": False}
+
+
+@contextmanager
+def use_mesh_axes(mesh, batch=("data",), model="model",
+                  seq_parallel=False, ep_stationary=False):
+    """Install activation-sharding axes for the duration of a trace.
+
+    ``seq_parallel``: residual-stream activations additionally shard their
+    sequence dim over the model axis between blocks (Megatron-SP: the TP
+    psums become reduce-scatters, halving activation-collective wire bytes
+    and shrinking remat-saved activations by the TP degree).
+    ``ep_stationary``: MoE dispatch buffers shard experts over the whole
+    mesh when divisible (matching the ep_stationary param rules).
+    """
+    prev = dict(_CTX)
+    _CTX.update(
+        on=True, mesh=mesh,
+        batch=(batch,) if isinstance(batch, str) else tuple(batch),
+        model=model, seq_parallel=bool(seq_parallel),
+        ep_stationary=bool(ep_stationary),
+    )
+    try:
+        yield
+    finally:
+        _CTX.clear()
+        _CTX.update(prev)
+
+
+def active() -> bool:
+    return bool(_CTX.get("on"))
+
+
+def _spec_for(kind: str, ndim: int, shape: tuple = ()) -> P | None:
+    b, m = _CTX["batch"], _CTX["model"]
+    sp = m if _CTX.get("seq_parallel") else None
+    table = {
+        # (leading batch dim, then fixed tail); padded with None to ndim
+        "act_bsd": (b, sp, None),              # (B, S, D) residual stream
+        "act_bsf": (b, None, m),               # (B, S, F) ffn hidden
+        "logits": (b, None, m),                # (B, S, V)
+        "heads": (b, None, m, None),           # (B, S, H, D)
+        "kv": (b, None, None, None),           # (B, S, KV, D) kv<model: repl
+        "batch_only": (b,),                    # anything (B, ...)
+        "moe_buf": (b, m, None, None),         # (G, E, C, D)
+        "ssd_heads": (b, None, m, None),       # (B, L, H, P)
+        "state_bh": (b, m),                    # (B, H, ...) decode states
+    }
+    if kind == "moe_buf" and _CTX.get("ep_stationary") and len(shape) >= 2:
+        mesh = _CTX["mesh"]
+        total = 1
+        for v in dict(mesh.shape).values():
+            total *= v
+        if shape[1] % total == 0:
+            return P(*((None, tuple(b) + (m,), None, None) + (None,) * ndim)[:ndim])
+        return P(*((None, m, None, None) + (None,) * ndim)[:ndim])
+    if kind not in table:
+        raise KeyError(kind)
+    spec = table[kind]
+    spec = spec + (None,) * (ndim - len(spec))
+    return P(*spec[:ndim])
+
+
+def constrain(x, kind: str):
+    if not _CTX.get("on"):
+        return x
+    from ..ft.remesh import validate_spec
+
+    mesh = _CTX["mesh"]
+    spec = _spec_for(kind, x.ndim, tuple(x.shape))
+    ok = validate_spec(tuple(x.shape), spec, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ok))

@@ -1,0 +1,206 @@
+"""Mamba-2 (SSD, state-space duality) block -- attention-free sequence mixing.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060): within
+length-Q chunks the recurrence is computed as a (masked) matmul (the "dual"
+quadratic form -- MXU friendly); across chunks a tiny ``lax.scan`` carries
+the (H, P, N) state.  Decode is the O(1) recurrent step on the same state.
+
+Layer I/O matches mamba_ssm's Mamba2: in_proj -> [z | xBC | dt], causal
+conv1d over xBC, SSD core, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import shard
+from .blocks import init_linear, linear, rms_norm
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_decode", "init_ssm_state"]
+
+
+def _dims(cfg):
+    din = cfg.ssm_expand * cfg.d_model
+    nheads = din // cfg.ssm_headdim
+    return din, nheads, cfg.ssm_headdim, cfg.ssm_d_state
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    din, nh, hp, n = _dims(cfg)
+    conv_dim = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * din + 2 * n + nh, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_d_conv, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "norm": {"scale": jnp.ones((din,), dtype)},
+        "out_proj": init_linear(ks[2], din, d, dtype=dtype),
+    }
+
+
+def _split_proj(p, x, cfg):
+    din, nh, hp, n = _dims(cfg)
+    zxbcdt = linear(p["in_proj"], x)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : 2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n :]
+    return z, xbc, dt
+
+
+def _segsum(a):
+    """Stable 'segment sum' producing the lower-triangular cumulative-decay
+    matrix: out[i, j] = sum_{j < k <= i} a[k] (=-inf above diagonal)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk, init_state=None):
+    """SSD core.  x: (B,L,H,P); dt: (B,L,H); a: (H,) (negative);
+    b, c: (B,L,N) (ngroups=1, broadcast over heads).
+    Returns y: (B,L,H,P), final state (B,H,P,N)."""
+    bb, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    l_pad = -(-l // q) * q
+    if l_pad != l:
+        # zero-pad: dt == 0 on padding makes it state-neutral (decay 1,
+        # input contribution 0), so the final state and y[:l] are exact.
+        pad = ((0, 0), (0, l_pad - l))
+        x = jnp.pad(x, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        b = jnp.pad(b, pad + ((0, 0),))
+        c = jnp.pad(c, pad + ((0, 0),))
+    l_true, l = l, l_pad
+    nc = l // q
+
+    a_dt = a[None, None, :] * dt                   # (B,L,H) negative decay
+    xr = x.reshape(bb, nc, q, h, p)
+    br = b.reshape(bb, nc, q, n)
+    cr = c.reshape(bb, nc, q, n)
+    ar = a_dt.reshape(bb, nc, q, h).transpose(0, 1, 3, 2)   # (B,C,H,Q)
+    dtr = dt.reshape(bb, nc, q, h)
+
+    a_cs = jnp.cumsum(ar, axis=-1)                 # (B,C,H,Q)
+    ell = jnp.exp(_segsum(ar))                     # (B,C,H,Q,Q) intra decay
+
+    # 1) intra-chunk (dual quadratic form)
+    y_diag = jnp.einsum(
+        "bcln,bcsn,bchls,bcsh,bcshp->bclhp",
+        cr, br, ell, dtr, xr,
+    )
+
+    # 2) chunk states (input contribution to end-of-chunk state)
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)  # (B,C,H,Q)
+    states = jnp.einsum("bcln,bchl,bclh,bclhp->bchpn", br, decay_states, dtr, xr)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cs[..., -1])           # (B,C,H)
+    s0 = (jnp.zeros((bb, h, p, n), x.dtype) if init_state is None
+          else init_state.astype(x.dtype))
+
+    def step(s, inp):
+        st, dec = inp                              # (B,H,P,N), (B,H)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+
+    final, prev = jax.lax.scan(
+        step, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    prev = prev.swapaxes(0, 1)                     # (B,C,H,P,N) state before chunk
+
+    # 4) state -> output within chunk
+    state_decay = jnp.exp(a_cs)                    # (B,C,H,Q)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", cr, prev, state_decay)
+
+    y = (y_diag + y_off).reshape(bb, l, h, p)[:, :l_true]
+    return y, final
+
+
+def _conv1d_causal(w, bias, x, state=None):
+    """Depthwise causal conv.  x: (B, L, C); w: (K, C).  With ``state``
+    (B, K-1, C) runs one decode step (L == 1) and returns the new state."""
+    k = w.shape[0]
+    if state is not None:
+        xw = jnp.concatenate([state, x], axis=1)   # (B, K, C)
+        y = jnp.einsum("bkc,kc->bc", xw, w)[:, None, :] + bias
+        return y, xw[:, 1:]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)
+    ) + bias
+    return y, None
+
+
+def ssm_forward(p, x, cfg, return_state=False):
+    """Full-sequence Mamba-2 block.  x: (B, S, D)."""
+    din, nh, hp, n = _dims(cfg)
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, _ = _conv1d_causal(p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), xbc)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :din]
+    b = xbc[..., din : din + n]
+    c = xbc[..., din + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = shard.constrain(xs.reshape(*xs.shape[:-1], nh, hp), "ssd_heads")
+    y, state = ssd_chunked(
+        xh.astype(jnp.float32), dt, a,
+        b.astype(jnp.float32), c.astype(jnp.float32), cfg.ssm_chunk,
+    )
+    y = shard.constrain(y, "ssd_heads")
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(*xs.shape[:-1], din).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_ssm_state(batch, cfg, dtype=jnp.float32):
+    din, nh, hp, n = _dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, nh, hp, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, din + 2 * n), dtype),
+    }
+
+
+def ssm_decode(p, x, cfg, state):
+    """One-token recurrent step.  x: (B, 1, D)."""
+    din, nh, hp, n = _dims(cfg)
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, conv_state = _conv1d_causal(
+        p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), xbc,
+        state["conv"].astype(x.dtype),
+    )
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :din]
+    b = xbc[..., din : din + n]
+    c = xbc[..., din + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(-1, nh, hp).astype(jnp.float32)         # (B,H,P)
+    dt1 = dt[:, 0]                                          # (B,H)
+    dec = jnp.exp(a[None] * dt1)                            # (B,H)
+    db = dt1[..., None, None] * b[:, 0][:, None, :][..., None, :].transpose(0, 1, 3, 2)
+    # state update: s = dec*s + dt * x ⊗ b
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xh, b[:, 0].astype(jnp.float32))
+    s_new = state["ssd"].astype(jnp.float32) * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), s_new)
+    y = y + xh * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(-1, 1, din).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    del db
+    return out, {"ssd": s_new.astype(state["ssd"].dtype), "conv": conv_state.astype(state["conv"].dtype)}

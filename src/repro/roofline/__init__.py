@@ -1,0 +1,2 @@
+"""Roofline analysis: collective parsing from compiled HLO + 3-term model."""
+from .collect import analyze_compiled, analyze_hlo_text  # noqa: F401

@@ -1,0 +1,208 @@
+"""Collective-traffic extraction from compiled HLO text.
+
+``cost_analysis()`` has no collective accounting, so we parse the
+post-SPMD HLO module: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction
+(sync or ``-start`` async form) is credited with the sum of its *operand*
+sizes (the data a device puts on the wire), scoped per computation.
+
+XLA counts while-loop bodies once in every static analysis, so totals are
+reconstructed through the computation call graph: a ``while`` instruction
+multiplies its body's (and condition's) contribution by the loop trip
+count.  Trip counts are recovered from the largest integer constant in the
+condition computation (scan lowers to a counted while) -- a heuristic that
+is cross-checked against the known layer/microbatch counts in
+EXPERIMENTS.md.  Note XLA may fuse nested scans ("wide" loops), in which
+case the merged loop carries the product trip count.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_compiled", "analyze_hlo_text"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+# op token: the first lowercase word directly followed by '(' after the '='
+_OP_RE = re.compile(r"\)?\s([a-z][a-z0-9\-]*)\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> tuple[dict[str, list[str]], str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if not line.startswith((" ", "\t")) and line.rstrip().endswith("{") \
+                and ("->" in line or line.lstrip().startswith(("ENTRY", "%"))):
+            head = line.strip()
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].strip()
+            name = head.split("(", 1)[0].strip().lstrip("%").rstrip()
+            name = name.split()[0] if name else ""
+            if name:
+                cur = name
+                comps[cur] = []
+                if is_entry:
+                    entry = cur
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def analyze_hlo_text(text: str) -> dict:
+    """Returns {'total_bytes', 'by_op', 'whiles', 'entry'} with bytes
+    multiplied through loop trip counts (per-device)."""
+    comps, entry = _split_computations(text)
+
+    own_bytes: dict[str, dict[str, float]] = {c: defaultdict(float) for c in comps}
+    own_counts: dict[str, dict[str, float]] = {c: defaultdict(float) for c in comps}
+    edges: dict[str, list[tuple[str, int]]] = {c: [] for c in comps}
+    trip_info: dict[str, int] = {}
+
+    def cond_trip(cond_name: str) -> int:
+        consts = [1]
+        for ln in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                consts.append(int(m.group(1)))
+        return max(consts)
+
+    # first pass: result sizes per computation (operand lookup)
+    sizes_per_comp: dict[str, dict[str, int]] = {}
+    for cname, lines in comps.items():
+        sizes: dict[str, int] = {}
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            iname, rest = m.group(1), m.group(2)
+            opm = _OP_RE.search(" " + rest)
+            op_pos = opm.start(1) if opm else len(rest)
+            sizes[iname] = _type_bytes(rest[:op_pos])
+        sizes_per_comp[cname] = sizes
+
+    for cname, lines in comps.items():
+        sizes = sizes_per_comp[cname]
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            rest = m.group(2)
+            opm = _OP_RE.search(" " + rest)
+            if not opm:
+                continue
+            op = opm.group(1)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                tail = rest[opm.end(1):]
+                args = re.findall(r"%([\w\.\-]+)", tail.split(")", 1)[0])
+                ob = sum(sizes.get(a, 0) for a in args)
+                rb = _type_bytes(rest[:opm.start(1)])
+                if op.endswith("-start"):
+                    # async tuple result = (operand, output, ...)
+                    rb = max(rb - ob, 0)
+                if ob == 0:
+                    ob = rb
+                # wire bytes a device puts on the ICI (ring algorithms):
+                #   all-gather:     sends ~(P-1) x shard  = output - operand
+                #   reduce-scatter: sends ~operand - output
+                #   all-reduce:     ~2 x operand (rs + ag phases)
+                #   all-to-all / permute: ~operand
+                if base == "all-gather":
+                    wire = max(rb - ob, ob)
+                elif base == "reduce-scatter":
+                    wire = max(ob - rb, rb)
+                elif base == "all-reduce":
+                    wire = 2 * ob
+                else:
+                    wire = ob
+                own_bytes[cname][base] += wire
+                own_counts[cname][base] += 1
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", rest)
+                cm = re.search(r"condition=%?([\w\.\-]+)", rest)
+                if bm:
+                    trip = cond_trip(cm.group(1)) if cm else 1
+                    edges[cname].append((bm.group(1), max(trip, 1)))
+                    if cm:
+                        edges[cname].append((cm.group(1), max(trip, 1)))
+                    trip_info[bm.group(1)] = max(trip, 1)
+            # fusion / call / conditional sub-computations
+            for cm in re.finditer(
+                r"(?:calls|to_apply)=%?([\w\.\-]+)", rest
+            ):
+                sub = cm.group(1)
+                if sub in comps:
+                    edges[cname].append((sub, 1))
+            bm2 = re.search(r"branch_computations=\{([^}]*)\}", rest)
+            if bm2:
+                for sub in bm2.group(1).split(","):
+                    sub = sub.strip().lstrip("%")
+                    if sub in comps:
+                        edges[cname].append((sub, 1))
+
+    def fold(table):
+        memo: dict[str, dict[str, float]] = {}
+
+        def total(c: str, seen=()) -> dict[str, float]:
+            if c in memo:
+                return memo[c]
+            if c in seen:
+                return defaultdict(float)
+            out: dict[str, float] = defaultdict(float)
+            for k, v in table.get(c, {}).items():
+                out[k] += v
+            for child, mult in edges.get(c, []):
+                for k, v in total(child, seen + (c,)).items():
+                    out[k] += v * mult
+            memo[c] = dict(out)
+            return memo[c]
+
+        return total(entry) if entry else {}
+
+    by_op = fold(own_bytes)
+    counts = fold(own_counts)
+    return {
+        "total_bytes": float(sum(by_op.values())),
+        "by_op": {k: float(v) for k, v in by_op.items()},
+        "count_by_op": {k: float(v) for k, v in counts.items()},
+        "total_count": float(sum(counts.values())),
+        "whiles": trip_info,
+        "entry": entry,
+        "n_computations": len(comps),
+    }
+
+
+def analyze_compiled(compiled) -> dict:
+    return analyze_hlo_text(compiled.as_text())

@@ -1,0 +1,2 @@
+"""Serving substrate: generate loop + slot-based continuous batching."""
+from .engine import generate, SlotServer  # noqa: F401

@@ -1,0 +1,3 @@
+"""Training substrate: optimizers, schedules, train-step builder."""
+from .optim import adamw, adafactor, warmup_cosine  # noqa: F401
+from .step import TrainState, build_train_step, init_train_state  # noqa: F401

@@ -1,0 +1,136 @@
+"""Training-step builder: value_and_grad + clipping + optimizer update,
+with optional microbatch gradient accumulation and (simulated-transport)
+gradient compression with error feedback.
+
+``build_train_step`` returns a pure function suitable for jax.jit with
+in/out shardings from launch/sharding.py; under GSPMD the data-parallel
+gradient reduction is emitted by XLA (reduce-scatter + all-gather with
+FSDP params).  Gradient compression is applied *before* that reduction
+point (int8 quantize->dequantize with error-feedback residuals carried in
+the state), modelling a compressed-wire all-reduce; the roofline collective
+parse of the compressed variant shows the gradient-collective bytes drop
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from .optim import Optimizer, clip_by_global_norm
+
+__all__ = ["TrainState", "build_train_step", "init_train_state"]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt_state: dict
+    step: jnp.ndarray
+    ef: dict | None = None      # error-feedback residuals (compression)
+
+
+def init_train_state(params, optimizer: Optimizer, compress: bool = False):
+    ef = None
+    if compress:
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32), ef)
+
+
+def _quantize_int8(x):
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _compress_grads(grads, ef):
+    """int8 quantize->dequantize with error feedback; returns (g~, new_ef)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = _quantize_int8(g32)
+        deq = q.astype(jnp.float32) * s
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(one, grads, ef)
+    gq = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    ef = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return gq, ef
+
+
+def build_train_step(
+    cfg,
+    optimizer: Optimizer,
+    grad_accum: int = 1,
+    max_grad_norm: float = 1.0,
+    compress_grads: bool = False,
+    grad_shardings=None,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (B, S) int32, "labels": (B, S) int32,
+            "mask": optional (B, S) f32, "prefix_embeds": optional}.
+    With grad_accum > 1 the batch's leading dim is split into microbatches
+    and gradients are averaged through a lax.scan (sequential, memory-flat).
+
+    ``grad_shardings``: optional NamedSharding tree matching params.  Each
+    microbatch's gradients are constrained to it *inside* the accumulation
+    loop, which forces GSPMD to emit reduce-scatter (keeping grads sharded
+    like their params) instead of full all-reduce -- without this, XLA was
+    observed to all-reduce full f32 gradient tensors per micro per layer
+    (23.8 TB/step on dbrx-132b; EXPERIMENTS.md §Perf).
+    """
+
+    def loss_of(params, batch):
+        loss, extras = M.loss_fn(
+            params, cfg, batch["tokens"], batch["labels"],
+            mask=batch.get("mask"), prefix_embeds=batch.get("prefix_embeds"),
+        )
+        return loss, extras
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def constrain_g(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, grad_shardings)
+
+    def train_step(state: TrainState, batch):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = grad_fn(state.params, mb)
+                g = constrain_g(g)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + loss), None
+
+            mb = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]),
+                batch,
+            )
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (gsum, lsum), _ = jax.lax.scan(micro, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+        else:
+            (loss, _), grads = grad_fn(state.params, batch)
+            grads = constrain_g(grads)
+
+        ef = state.ef
+        if compress_grads and ef is not None:
+            grads, ef = _compress_grads(grads, ef)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": state.step}
+        return TrainState(new_params, new_opt, state.step + 1, ef), metrics
+
+    return train_step

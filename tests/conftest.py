@@ -1,0 +1,8 @@
+"""Test-session config: enable f64 so solver/format oracles compare at
+double precision.  (Device count is NOT touched here -- smoke tests must
+see the single real CPU device; distributed tests spawn subprocesses with
+their own XLA_FLAGS.)"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

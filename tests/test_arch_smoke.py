@@ -1,0 +1,87 @@
+"""Per-architecture smoke tests: a REDUCED same-family config of each of
+the 10 assigned archs runs one forward + one train step on CPU, asserting
+output shapes and finiteness.  (Full configs are exercised lowering-only by
+launch/dryrun.py.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, get_smoke, names, cells, subquadratic
+from repro.models import model as M
+from repro.train import adamw, build_train_step, init_train_state, warmup_cosine
+
+ARCHS = names()
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch).replace(param_dtype="float32", compute_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    pfx = None
+    if cfg.n_prefix_tokens and cfg.frontend == "vision":
+        pfx = jax.random.normal(jax.random.PRNGKey(2), (b, cfg.n_prefix_tokens, cfg.d_model))
+
+    h, aux = M.forward(params, cfg, tokens=toks, prefix_embeds=pfx)
+    exp_s = s + (cfg.n_prefix_tokens if pfx is not None else 0)
+    assert h.shape == (b, exp_s, cfg.d_model)
+    assert np.isfinite(np.asarray(h, np.float32)).all(), f"{arch} forward NaN"
+
+    opt = adamw(warmup_cosine(1e-3, 2, 10))
+    state = init_train_state(params, opt)
+    step = build_train_step(cfg, opt)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    if pfx is not None:
+        batch["prefix_embeds"] = pfx
+    state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch} train loss NaN"
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke(arch).replace(param_dtype="float32", compute_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b = 2
+    caches = M.init_caches(cfg, b, 64)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, 1), 0, cfg.vocab_size)
+    logits, caches = M.decode_step(params, cfg, caches, toks, jnp.int32(0))
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), f"{arch} decode NaN"
+
+
+def test_shape_cells_assignment():
+    """40 assigned cells; long_500k only for sub-quadratic archs."""
+    total = sum(len(cells(get(a))) for a in ARCHS)
+    subq = [a for a in ARCHS if subquadratic(get(a))]
+    assert sorted(subq) == sorted(
+        ["mamba2-370m", "recurrentgemma-9b", "h2o-danube-1.8b"]
+    )
+    assert total == 3 * 10 + len(subq)  # 33 lowered cells (+7 documented skips)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_exact_published_dims(arch):
+    cfg = get(arch)
+    published = {
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "mamba2-370m": (48, 1024, 1, 1, 0, 50280),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == published, f"{arch}: {got} != {published}"

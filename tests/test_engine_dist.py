@@ -1,0 +1,76 @@
+"""Distributed engine == single device == numpy (the paper's FPGA-vs-
+simulator functional verification), run in a subprocess with forced host
+devices so the main pytest process keeps its single-device view."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+import scipy.sparse as sp
+from scipy.linalg import solve_triangular
+from repro.core.formats import csr_from_scipy
+from repro.core.engine import AzulEngine
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 2), ("data", "model"))
+rng = np.random.default_rng(1)
+n = 96
+B = sp.random(n, n, density=0.07, random_state=2, format="csr")
+A = (B @ B.T + sp.eye(n) * (n * 0.2)).tocsr()
+m = csr_from_scipy(A)
+x_true = rng.standard_normal(n)
+b = A @ x_true
+
+eng_loc = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
+x_loc, _ = eng_loc.solve(b, method="pcg", iters=80)
+
+out = {}
+for mode in ("2d", "1d"):
+    eng = AzulEngine(m, mesh=mesh, mode=mode, precond="jacobi", dtype=np.float64)
+    y = eng.spmv(x_true)
+    assert np.allclose(y, A @ x_true, atol=1e-8), f"{mode} spmv"
+    x, _ = eng.solve(b, method="pcg", iters=80)
+    out[f"{mode}_err_vs_local"] = float(np.abs(x - x_loc).max())
+    assert np.allclose(x, x_loc, atol=1e-6), f"{mode} vs local"
+
+eng2 = AzulEngine(m, mesh=mesh, mode="2d", precond="block_ic0", dtype=np.float64)
+x2, n2 = eng2.solve(b, method="pcg", iters=60)
+assert np.abs(x2 - x_true).max() < 1e-6, "block_ic0 dist"
+
+L = sp.tril(A).tocsr()
+trsv = eng2.build_sptrsv(csr_from_scipy(L))
+xs = trsv(b)
+ref = solve_triangular(np.asarray(L.todense()), b, lower=True)
+assert np.allclose(xs, ref, atol=1e-8), "dist sptrsv"
+
+# multi-pod style: row axes = ("pod", "data")
+mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+eng3 = AzulEngine(m, mesh=mesh3, mode="2d", row_axes=("pod", "data"),
+                  col_axes=("model",), precond="jacobi", dtype=np.float64)
+y3 = eng3.spmv(x_true)
+assert np.allclose(y3, A @ x_true, atol=1e-8), "multipod 2d spmv (non-square)"
+x3, _ = eng3.solve(b, method="pcg", iters=80)
+assert np.allclose(x3, x_loc, atol=1e-6), "multipod pcg"
+
+print("DIST_OK", json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_equivalence():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    env["JAX_ENABLE_X64"] = "1"
+    r = subprocess.run(
+        [sys.executable, "-c", "import json\n" + _SCRIPT],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        timeout=560,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "DIST_OK" in r.stdout

@@ -1,0 +1,64 @@
+"""Format round-trips + property tests (hypothesis)."""
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (
+    bcsr_from_csr, bcsr_to_dense, csr_from_dense, csr_from_scipy,
+    csr_to_dense, ell_from_csr, ell_to_dense, pad_to,
+)
+
+
+def _rand_sparse(n, m, density, seed):
+    return np.asarray(
+        sp.random(n, m, density=density, random_state=seed, format="csr").todense()
+    )
+
+
+@given(st.integers(1, 40), st.integers(1, 40),
+       st.floats(0.0, 0.4), st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_csr_round_trip(n, m, density, seed):
+    d = _rand_sparse(n, m, density, seed)
+    assert np.allclose(csr_to_dense(csr_from_dense(d)), d)
+
+
+@given(st.integers(1, 32), st.floats(0.05, 0.5), st.integers(0, 10**6),
+       st.sampled_from([1, 4, 8]), st.sampled_from([1, 8]))
+@settings(max_examples=25, deadline=None)
+def test_ell_round_trip(n, density, seed, width_pad, row_pad):
+    d = _rand_sparse(n, n, density, seed)
+    e = ell_from_csr(csr_from_dense(d), width_pad=width_pad, row_pad=row_pad,
+                     dtype=np.float64)
+    assert np.allclose(ell_to_dense(e), d)
+    assert e.rows_padded % row_pad == 0
+    assert e.width % width_pad == 0
+
+
+@given(st.integers(1, 40), st.floats(0.05, 0.4), st.integers(0, 10**6),
+       st.sampled_from([(2, 4), (8, 16), (4, 8)]))
+@settings(max_examples=20, deadline=None)
+def test_bcsr_round_trip(n, density, seed, blk):
+    bm, bn = blk
+    d = _rand_sparse(n, n, density, seed)
+    b = bcsr_from_csr(csr_from_dense(d), bm=bm, bn=bn, dtype=np.float64)
+    assert np.allclose(bcsr_to_dense(b), d)
+
+
+def test_pad_to():
+    assert pad_to(0, 8) == 0
+    assert pad_to(1, 8) == 8
+    assert pad_to(8, 8) == 8
+    assert pad_to(9, 8) == 16
+    with pytest.raises(ValueError):
+        pad_to(4, 0)
+
+
+def test_csr_from_scipy_sorts_indices():
+    a = sp.random(50, 50, density=0.1, random_state=0, format="coo")
+    m = csr_from_scipy(a)
+    for r in range(50):
+        s, e = m.indptr[r], m.indptr[r + 1]
+        assert (np.diff(m.indices[s:e]) > 0).all()

@@ -1,0 +1,60 @@
+"""Level-schedule properties: topological order, completeness, and the
+solver built on it matching scipy."""
+
+import numpy as np
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import csr_from_scipy
+from repro.core.levels import build_schedule, compute_levels, parallelism_profile
+
+
+def _lower(n, density, seed):
+    a = sp.random(n, n, density=density, random_state=seed, format="csr")
+    l = sp.tril(a, k=-1) + sp.eye(n) * 2.0
+    return csr_from_scipy(l.tocsr())
+
+
+@given(st.integers(2, 60), st.floats(0.05, 0.5), st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_levels_topological(n, density, seed):
+    m = _lower(n, density, seed)
+    lv = compute_levels(m)
+    for r in range(n):
+        s, e = int(m.indptr[r]), int(m.indptr[r + 1])
+        for p in range(s, e):
+            c = int(m.indices[p])
+            if c < r:
+                assert lv[c] < lv[r], "dependency must be in an earlier level"
+
+
+@given(st.integers(2, 60), st.floats(0.05, 0.5), st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_schedule_complete_and_disjoint(n, density, seed):
+    m = _lower(n, density, seed)
+    sched = build_schedule(m)
+    rows = np.asarray(sched.rows)
+    counts = np.asarray(sched.counts)
+    seen = []
+    for l in range(sched.n_levels):
+        real = rows[l][rows[l] < n]
+        assert len(real) == counts[l]
+        seen.extend(real.tolist())
+    assert sorted(seen) == list(range(n)), "every row scheduled exactly once"
+
+
+def test_diagonal_matrix_single_level():
+    m = _lower(16, 0.0, 0)
+    sched = build_schedule(m)
+    assert sched.n_levels == 1
+    prof = parallelism_profile(sched)
+    assert prof["max_parallelism"] == 16
+    assert prof["amdahl_speedup_bound"] == 16.0
+
+
+def test_bidiagonal_fully_sequential():
+    n = 12
+    l = sp.eye(n) + sp.eye(n, k=-1)
+    m = csr_from_scipy(l.tocsr())
+    sched = build_schedule(m)
+    assert sched.n_levels == n, "chain dependency = one row per level"

@@ -1,0 +1,116 @@
+"""Model-zoo behaviour: every family's loss is finite, gradients flow, and
+prefill+decode exactly reproduces the full forward (the serving-correctness
+invariant)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+BASE = dict(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+    vocab_size=97, max_seq_len=64, param_dtype="float32",
+    compute_dtype="float32", remat=False,
+)
+
+FAMILIES = {
+    "dense-gqa": ModelConfig(name="g", **BASE),
+    "bias-swa": ModelConfig(name="s", qkv_bias=True, sliding_window=8, **BASE),
+    "layernorm-gelu": ModelConfig(name="l", norm="layernorm", act="gelu",
+                                  **{**BASE, "n_kv_heads": 4}),
+    "moe": ModelConfig(name="m", family="moe", n_experts=4, top_k=2,
+                       d_ff_expert=64, n_shared_experts=1, first_dense_layers=1,
+                       router_aux_coef=0.01, moe_capacity_factor=4.0,
+                       **{**BASE, "n_layers": 3}),
+    "mla-mtp": ModelConfig(name="d", use_mla=True, q_lora_rank=32,
+                           kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+                           v_head_dim=16, mtp_depth=1, **BASE),
+    "ssm": ModelConfig(name="x", family="ssm", ssm_d_state=16, ssm_headdim=16,
+                       ssm_chunk=16, **{**BASE, "n_heads": 1, "n_kv_heads": 1}),
+    "hybrid": ModelConfig(name="h", family="hybrid",
+                          block_pattern=("rec", "rec", "attn"), lru_width=64,
+                          sliding_window=16, **{**BASE, "n_layers": 5,
+                                                "n_kv_heads": 1}),
+    "vlm-prefix": ModelConfig(name="v", family="vlm", prefix_lm=True,
+                              n_prefix_tokens=8, frontend="vision",
+                              **{**BASE, "n_kv_heads": 1}),
+}
+
+
+def _setup(cfg, with_prefix=False):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab_size)
+    labels = jnp.roll(toks, -1, axis=1)
+    pfx = None
+    if with_prefix:
+        pfx = jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.n_prefix_tokens, cfg.d_model)
+        )
+    return params, toks, labels, pfx
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_loss_finite_and_grads_flow(name):
+    cfg = FAMILIES[name]
+    params, toks, labels, pfx = _setup(cfg, name == "vlm-prefix")
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, toks, labels, prefix_embeds=pfx)[0]
+    )(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_decode_matches_forward(name):
+    cfg = FAMILIES[name]
+    params, toks, _, pfx = _setup(cfg, name == "vlm-prefix")
+    logits_p, caches, pos = M.prefill(params, cfg, tokens=toks, prefix_embeds=pfx)
+    nxt = jnp.argmax(logits_p[:, -1], -1)[:, None]
+    logits_d, _ = M.decode_step(params, cfg, caches, nxt, pos)
+    toks2 = jnp.concatenate([toks, nxt], 1)
+    h2, _ = M.forward(params, cfg, tokens=toks2, prefix_embeds=pfx)
+    ref = M.logits_from_hidden(params, cfg, h2[:, -1:])
+    err = np.abs(np.asarray(logits_d) - np.asarray(ref)).max()
+    scale = np.abs(np.asarray(ref)).max() + 1e-6
+    assert err / scale < 2e-2, f"{name}: {err} vs {scale}"
+
+
+def test_int8_kv_cache_close():
+    cfg = ModelConfig(name="q", kv_cache_dtype="int8", **BASE)
+    params, toks, _, _ = _setup(cfg)
+    logits_p, caches, pos = M.prefill(params, cfg, tokens=toks)
+    nxt = jnp.argmax(logits_p[:, -1], -1)[:, None]
+    logits_d, _ = M.decode_step(params, cfg, caches, nxt, pos)
+    toks2 = jnp.concatenate([toks, nxt], 1)
+    h2, _ = M.forward(params, cfg, tokens=toks2)
+    ref = M.logits_from_hidden(params, cfg, h2[:, -1:])
+    err = np.abs(np.asarray(logits_d) - np.asarray(ref)).max()
+    assert err / (np.abs(np.asarray(ref)).max() + 1e-6) < 6e-2
+
+
+def test_swa_restricts_attention():
+    """A token far outside the window must not influence the last logit."""
+    cfg = ModelConfig(name="w", sliding_window=4,
+                      **{**BASE, "n_layers": 1})
+    params, toks, _, _ = _setup(cfg)
+    h1, _ = M.forward(params, cfg, tokens=toks)
+    toks_mut = toks.at[:, 0].set((toks[:, 0] + 7) % cfg.vocab_size)
+    h2, _ = M.forward(params, cfg, tokens=toks_mut)
+    # with one layer + window 4, position 23 sees only >= 20
+    np.testing.assert_allclose(
+        np.asarray(h1[:, -1]), np.asarray(h2[:, -1]), atol=1e-5
+    )
+
+
+def test_param_count_matches_config_formula():
+    for name, cfg in FAMILIES.items():
+        if name == "hybrid":
+            continue  # tail groups counted fine; checked in arch smoke
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        got = M.param_count(params)
+        want = cfg.n_params()
+        assert abs(got - want) / want < 0.02, f"{name}: {got} vs {want}"

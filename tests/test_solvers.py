@@ -1,0 +1,107 @@
+"""Solver correctness & convergence vs numpy ground truth."""
+
+import numpy as np
+import scipy.sparse as sp
+
+import jax.numpy as jnp
+
+from repro.core.engine import AzulEngine
+from repro.core.formats import csr_from_scipy, ell_from_csr
+from repro.core.precond import apply_ic0, ic0
+from repro.core.solvers import cg, jacobi, pcg, pcg_pipelined, pcg_tol
+from repro.core.spops import spmv_ell_padded
+from repro.data.matrices import laplacian_2d, random_spd
+
+
+def _spd(n=80, seed=0):
+    m = random_spd(n, density=0.05, seed=seed)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    return m, a
+
+
+def test_cg_matches_numpy():
+    m, a = _spd()
+    rng = np.random.default_rng(0)
+    x_true = rng.standard_normal(m.shape[0])
+    b = a @ x_true
+    e = ell_from_csr(m, dtype=np.float64)
+    mv = lambda x: spmv_ell_padded(e.cols, e.vals, x)[: m.shape[0]]
+    res = cg(mv, jnp.asarray(b), iters=150)
+    assert np.allclose(np.asarray(res.x), x_true, atol=1e-6)
+    assert res.res_norms[-1] < 1e-6 * np.linalg.norm(b)
+
+
+def test_pcg_monotone_tail_and_jacobi_helps():
+    m, a = _spd(100, 1)
+    b = a @ np.ones(100)
+    eng_j = AzulEngine(m, precond="jacobi", dtype=np.float64)
+    eng_n = AzulEngine(m, precond="none", dtype=np.float64)
+    _, nj = eng_j.solve(b, method="pcg", iters=60)
+    _, nn = eng_n.solve(b, method="pcg", iters=60)
+    assert nj[-1] <= nn[-1] * 10  # jacobi never catastrophically worse
+    assert nj[-1] < 1e-6 * np.linalg.norm(b)
+
+
+def test_pcg_tol_stops_early():
+    m, a = _spd(60, 2)
+    b = a @ np.ones(60)
+    e = ell_from_csr(m, dtype=np.float64)
+    mv = lambda x: spmv_ell_padded(e.cols, e.vals, x)[:60]
+    res = pcg_tol(mv, jnp.asarray(b), psolve=lambda r: r, tol=1e-6, max_iters=500)
+    assert int(res.iters) < 500
+    assert res.res_norms[-1] <= 1e-6 * np.linalg.norm(b) * 1.01
+
+
+def test_jacobi_converges_on_diag_dominant():
+    m = laplacian_2d(12)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    b = a @ np.ones(m.shape[0])
+    eng = AzulEngine(m, precond="jacobi", dtype=np.float64)
+    x, norms = eng.solve(b, method="jacobi", iters=400)
+    assert norms[-1] < norms[0] * 1e-2
+
+
+def test_ic0_factorization_and_apply():
+    m = laplacian_2d(10)
+    a = np.asarray(
+        sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape).todense()
+    )
+    f = ic0(m, dtype=np.float64)
+    # L L^T should approximate A on A's sparsity pattern
+    from repro.core.formats import ell_to_dense
+
+    l = ell_to_dense(f.ell_l)
+    llt = l @ l.T
+    mask = a != 0
+    assert np.allclose(llt[mask], a[mask], atol=1e-8)
+    # apply = (L L^T)^-1 r
+    r = np.random.default_rng(0).standard_normal(m.shape[0])
+    z = np.asarray(apply_ic0(f, jnp.asarray(r)))
+    z_ref = np.linalg.solve(llt, r)
+    assert np.allclose(z, z_ref, atol=1e-8)
+
+
+def test_ic0_preconditioned_pcg_beats_jacobi_iterations():
+    m = laplacian_2d(16)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    b = a @ np.ones(m.shape[0])
+    bn = np.linalg.norm(b)
+    it = {}
+    for pc in ("jacobi", "block_ic0"):
+        eng = AzulEngine(m, precond=pc, dtype=np.float64)
+        _, norms = eng.solve(b, method="pcg", iters=120)
+        rel = norms / bn
+        it[pc] = int(np.argmax(rel < 1e-9)) if (rel < 1e-9).any() else 120
+    assert it["block_ic0"] <= it["jacobi"]
+
+
+def test_pipelined_cg_matches_pcg():
+    m = laplacian_2d(14)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    x_true = np.random.default_rng(3).standard_normal(m.shape[0])
+    b = a @ x_true
+    eng = AzulEngine(m, precond="jacobi", dtype=np.float64)
+    x1, _ = eng.solve(b, method="pcg", iters=100)
+    x2, _ = eng.solve(b, method="pcg_pipe", iters=100)
+    assert np.allclose(x1, x_true, atol=1e-8)
+    assert np.allclose(x2, x_true, atol=1e-7)

@@ -1,0 +1,55 @@
+"""End-to-end system tests: the paper's workload through the public API,
+mirroring §IV (functional verification on toy cases + benchmark matrices),
+plus the examples as smoke-runnable entry points."""
+
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core.engine import AzulEngine
+from repro.data.matrices import banded_spd, laplacian_2d, laplacian_3d, random_spd, suite
+
+
+def _solve_and_verify(m, precond, iters=150, rtol=1e-6):
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    rng = np.random.default_rng(0)
+    x_true = rng.standard_normal(m.shape[0])
+    b = a @ x_true
+    eng = AzulEngine(m, mesh=None, precond=precond, dtype=np.float64)
+    x, norms = eng.solve(b, method="pcg", iters=iters)
+    assert norms[-1] <= rtol * np.linalg.norm(b), f"residual {norms[-1]}"
+    assert np.allclose(x, x_true, atol=1e-4)
+
+
+@pytest.mark.parametrize("gen,arg", [
+    (laplacian_2d, 24), (laplacian_3d, 8), (banded_spd, 400), (random_spd, 300),
+])
+def test_pcg_on_suite_families(gen, arg):
+    _solve_and_verify(gen(arg), "jacobi", iters=300)
+
+
+def test_pcg_block_ic0_on_poisson():
+    _solve_and_verify(laplacian_2d(24), "block_ic0", iters=120)
+
+
+def test_suite_loader():
+    mats = suite("small")
+    assert len(mats) >= 4
+    for name, m in mats.items():
+        assert m.shape[0] == m.shape[1] and m.nnz > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("script", ["quickstart.py", "distributed_solve.py"])
+def test_examples_run(script):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, os.path.join("examples", script)],
+        capture_output=True, text=True, cwd=root, timeout=560,
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
