@@ -55,6 +55,20 @@ def run() -> list[tuple[str, float, str]]:
         rows.append((f"spmv_{name}", dt * 1e6,
                      f"achieved={flops/dt/1e9:.2f}GF/s frac_of_dense_peak={frac:.4f}"))
 
+        # multi-RHS amortization: per-RHS time of one (n, k) SpMM vs k SpMVs
+        fm = jax.jit(lambda c, v, x: jnp.sum(v[..., None] * x[c], axis=1))
+        for k in (4, 16):
+            xk = jnp.asarray(
+                np.random.default_rng(1).standard_normal((m.shape[1], k)),
+                jnp.float32,
+            )
+            dt_k = _time(fm, ell.cols, ell.vals, xk)
+            rows.append((
+                f"spmm_{name}_k{k}", dt_k / k * 1e6,
+                f"per_rhs_speedup_vs_spmv={dt*k/dt_k:.2f}x "
+                f"achieved={2*m.nnz*k/dt_k/1e9:.2f}GF/s",
+            ))
+
         # interconnect traffic per SpMV iteration (structural, mesh 16x16)
         p = 256
         n_pad1 = plan_1d(m, p).n_padded

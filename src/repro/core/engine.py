@@ -28,6 +28,13 @@ Layouts (2D mode, the default -- see partition.plan_2d):
 1D mode is the bandwidth-hungry baseline (what a cache-less GPU run looks
 like): vectors fully sharded, SpMV all-gathers the whole x on every tile.
 It exists so benchmarks can report the paper's "Azul vs. naive" delta.
+
+Batched multi-RHS: ``spmv``/``solve`` also take stacked (k, n) inputs.  The
+batch axis is *replicated* in the sharding spec (P(None, axes)) so matrix
+blocks stay device-resident and untouched; only (k, u) stacked vector
+shards traverse the NoC (one message per hop regardless of k), and the
+per-tile compute switches to the multi-RHS ``spmm`` path that amortizes the
+single matrix stream over all k right-hand sides.
 """
 
 from __future__ import annotations
@@ -45,9 +52,23 @@ from .formats import CSR, pad_to
 from .levels import build_schedule
 from .partition import plan_1d, plan_2d, tile_csr
 from .precond import ic0 as host_ic0
-from .spops import spmv_ell_padded
+from .spops import spmm_ell_padded, spmv_ell_padded
 
 __all__ = ["AzulEngine", "local_sptrsv"]
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: ``jax.shard_map`` (check_vma) on
+    current releases, ``jax.experimental.shard_map`` (check_rep) on older
+    ones -- both with replication checking off (the solver programs emit
+    psum'd scalars whose replication the checker cannot always prove)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +166,9 @@ class AzulEngine:
             self.pc = int(np.prod([mesh.shape[ax] for ax in self.col_axes]))
             self._all_axes = self.row_axes + self.col_axes
             self._vec_spec = P(self._all_axes)
+            # batched (k, n_pad) layout: batch replicated, vector sharded --
+            # matrix blocks stay put, only stacked vector shards move.
+            self._bvec_spec = P(None, self._all_axes)
             self._blk_spec = P(self._all_axes, None, None)
             if self.mode == "2d":
                 self._build_2d(balance)
@@ -317,56 +341,73 @@ class AzulEngine:
     # -- vector embedding ---------------------------------------------------
 
     def to_device_vec(self, v: np.ndarray) -> jnp.ndarray:
-        """Embed a global (n,) vector into the padded device layout."""
-        out = np.zeros(self.n_pad, self.dtype)
+        """Embed a global (n,) -- or batched (k, n) -- vector into the padded
+        device layout.  Batched vectors shard the trailing (vector) axis and
+        replicate the batch axis, so k RHS share one set of matrix blocks."""
         v = np.asarray(v)
+        out = np.zeros(v.shape[:-1] + (self.n_pad,), self.dtype)
         if self.mode == "1d":
             valid = self._pad2g < self.n
-            out[valid] = v[self._pad2g[valid]]
+            out[..., valid] = v[..., self._pad2g[valid]]
         else:
-            out[: self.n] = v
+            out[..., : self.n] = v
         if self.mesh is None:
             return jnp.asarray(out)
-        return self._put(out, self._vec_spec)
+        spec = self._bvec_spec if v.ndim == 2 else self._vec_spec
+        return self._put(out, spec)
 
     def from_device_vec(self, v: jnp.ndarray) -> np.ndarray:
-        """Extract the global (n,) vector from the padded device layout."""
+        """Extract the global (n,) / (k, n) vector from the padded layout."""
         v = np.asarray(v)
         if self.mode == "1d":
-            out = np.zeros(self.n, self.dtype)
+            out = np.zeros(v.shape[:-1] + (self.n,), self.dtype)
             valid = self._pad2g < self.n
-            out[self._pad2g[valid]] = v[valid]
+            out[..., self._pad2g[valid]] = v[..., valid]
             return out
-        return v[: self.n]
+        return v[..., : self.n]
 
     # -- distributed program builders ---------------------------------------
 
     def _mk_matvec(self) -> Callable:
         """Returns mv(x_loc, cols_loc, vals_loc) -> y_loc with collectives
-        inside; cols/vals arrive as the (1, rows, w) local shard."""
+        inside; cols/vals arrive as the (1, rows, w) local shard.
+
+        ``x_loc`` is the (u,) vector shard or the batch-stacked (k, u)
+        shard; the batch axis rides every NoC hop intact (``vec_axis``)
+        while the local compute switches to the multi-RHS ``spmm`` kernel,
+        amortizing the one matrix stream over all k vectors."""
         row_axes, col_axes, mode = self.row_axes, self.col_axes, self.mode
         col_axis = col_axes[0] if len(col_axes) == 1 else col_axes
 
+        def _local(cols_loc, vals_loc, xj):
+            if xj.ndim == 2:                              # (k, bc) stacked
+                return spmm_ell_padded(cols_loc[0], vals_loc[0], xj)
+            return spmv_ell_padded(cols_loc[0], vals_loc[0], xj)
+
         if mode == "2d":
             def mv(x_loc, cols_loc, vals_loc):
+                va = x_loc.ndim - 1
                 xc = noc.mesh_transpose(x_loc, row_axes, col_axes)
-                xj = noc.gather_along(xc, row_axes)          # (bc,)
-                yp = spmv_ell_padded(cols_loc[0], vals_loc[0], xj)  # (br,)
-                return noc.reduce_scatter_along(yp, col_axis)       # (u,)
+                xj = noc.gather_along(xc, row_axes, vec_axis=va)  # (..., bc)
+                yp = _local(cols_loc, vals_loc, xj)               # (..., br)
+                return noc.reduce_scatter_along(yp, col_axis, vec_axis=va)
             return mv
 
         all_axes = self._all_axes
 
         def mv1d(x_loc, cols_loc, vals_loc):
-            xg = noc.gather_along(x_loc, all_axes)           # (n_pad,)
-            return spmv_ell_padded(cols_loc[0], vals_loc[0], xg)  # (u,)
+            va = x_loc.ndim - 1
+            xg = noc.gather_along(x_loc, all_axes, vec_axis=va)  # (..., n_pad)
+            return _local(cols_loc, vals_loc, xg)                # (..., u)
         return mv1d
 
     def _dot(self):
         axes = self._all_axes
 
         def dot(u, v):
-            return lax.psum(jnp.sum(u * v), axes)
+            # last-axis reduce (keepdims when batched) + psum: per-RHS
+            # scalars arrive as (k, 1), broadcastable back onto (k, u).
+            return lax.psum(jnp.sum(u * v, axis=-1, keepdims=u.ndim > 1), axes)
         return dot
 
     def _dot2(self):
@@ -374,50 +415,82 @@ class AzulEngine:
         axes = self._all_axes
 
         def dot2(a1, b1, a2, b2):
-            return lax.psum(jnp.stack([jnp.sum(a1 * b1), jnp.sum(a2 * b2)]), axes)
+            kd = a1.ndim > 1
+            return lax.psum(
+                jnp.stack([
+                    jnp.sum(a1 * b1, axis=-1, keepdims=kd),
+                    jnp.sum(a2 * b2, axis=-1, keepdims=kd),
+                ]),
+                axes,
+            )
         return dot2
 
     # -- public ops ---------------------------------------------------------
 
     def spmv(self, x) -> np.ndarray:
-        """y = A @ x on *global* vectors (host convenience wrapper)."""
+        """y = A @ x on *global* vectors (host convenience wrapper).
+
+        ``x`` may be (n,) or batch-stacked (k, n); the batched call runs the
+        multi-RHS SpMM path (one matrix stream for all k) and returns (k, n).
+        """
+        x = np.asarray(x)
         if self.mode == "local":
+            xd = jnp.asarray(x, self.dtype)
+            if x.ndim == 2:
+                return np.asarray(
+                    spmm_ell_padded(self.ell.cols, self.ell.vals, xd)[..., : self.n]
+                )
             from .spops import spmv_ell
-            return np.asarray(spmv_ell(self.ell, jnp.asarray(np.asarray(x), self.dtype)))
-        if "spmv" not in self._compiled:
+            return np.asarray(spmv_ell(self.ell, xd))
+        key = "spmm" if x.ndim == 2 else "spmv"
+        if key not in self._compiled:
             mv = self._mk_matvec()
-            vec, blk = self._vec_spec, self._blk_spec
-            f = jax.shard_map(
-                mv, mesh=self.mesh, in_specs=(vec, blk, blk),
-                out_specs=vec, check_vma=False,
+            vec = self._bvec_spec if x.ndim == 2 else self._vec_spec
+            blk = self._blk_spec
+            f = _shard_map(
+                mv, mesh=self.mesh, in_specs=(vec, blk, blk), out_specs=vec,
             )
-            self._compiled["spmv"] = jax.jit(f)
-        y = self._compiled["spmv"](self.to_device_vec(np.asarray(x)), self.cols, self.vals)
+            self._compiled[key] = jax.jit(f)
+        y = self._compiled[key](self.to_device_vec(x), self.cols, self.vals)
         return self.from_device_vec(y)
 
     def solve(self, b, method: str = "pcg", iters: int = 200, x0=None):
-        """Solve A x = b; returns (x_global numpy, res_norms numpy)."""
+        """Solve A x = b; returns (x_global numpy, res_norms numpy).
+
+        ``b`` may be (n,) or stacked (k, n) -- the batched form solves all k
+        right-hand sides against the one device-resident matrix in a single
+        distributed program (per-RHS traces come back as (iters + 1, k))."""
+        b = np.asarray(b)
         if self.mode == "local":
             res = self._solve_local(method, iters, b, x0)
-            return np.asarray(res.x)[: self.n], np.asarray(res.res_norms)
-        fn = self._solve_compiled(method, iters)
-        bd = self.to_device_vec(np.asarray(b))
-        x0d = self.to_device_vec(
-            np.zeros(self.n) if x0 is None else np.asarray(x0)
-        )
+            return np.asarray(res.x)[..., : self.n], np.asarray(res.res_norms)
+        fn = self._solve_compiled(method, iters, batched=b.ndim == 2)
+        bd = self.to_device_vec(b)
+        x0 = np.zeros(b.shape) if x0 is None else np.asarray(x0)
+        if b.ndim == 2 and x0.ndim == 1:
+            # a shared (n,) initial guess for a (k, n) batch: broadcast so
+            # b and x0 agree on the batched sharding spec
+            x0 = np.broadcast_to(x0, b.shape)
+        x0d = self.to_device_vec(x0)
         x, norms = fn(bd, x0d)
         return self.from_device_vec(x), np.asarray(norms)
 
     def _solve_local(self, method, iters, b, x0):
         b = jnp.asarray(np.asarray(b), self.dtype)
-        b_pad = jnp.zeros(self.n_pad, self.dtype).at[: self.n].set(b)
+        b_pad = jnp.zeros(b.shape[:-1] + (self.n_pad,), self.dtype)
+        b_pad = b_pad.at[..., : self.n].set(b)
         x0_pad = None
         if x0 is not None:
-            x0_pad = jnp.zeros(self.n_pad, self.dtype).at[: self.n].set(
+            x0_pad = jnp.zeros_like(b_pad).at[..., : self.n].set(
                 jnp.asarray(np.asarray(x0), self.dtype)
             )
         ell = self.ell
-        mv = lambda x: spmv_ell_padded(ell.cols, ell.vals, x)
+
+        def mv(x):
+            if x.ndim == 2:
+                return spmm_ell_padded(ell.cols, ell.vals, x)
+            return spmv_ell_padded(ell.cols, ell.vals, x)
+
         dinv = self._dinv_pad
         if method == "jacobi":
             return solvers.jacobi(mv, dinv, b_pad, x0=x0_pad, iters=iters)
@@ -432,9 +505,12 @@ class AzulEngine:
                 f = self._ic0
                 n, n_pad = self.n, self.n_pad
 
-                def ps(r):
+                def ps1(r):
                     z = apply_ic0(f, r[:n])
                     return jnp.zeros(n_pad, r.dtype).at[:n].set(z)
+
+                def ps(r):
+                    return jax.vmap(ps1)(r) if r.ndim == 2 else ps1(r)
             elif self.precond == "jacobi":
                 ps = lambda r: r * dinv
             else:
@@ -442,8 +518,8 @@ class AzulEngine:
             return solvers.pcg(mv, b_pad, psolve=ps, x0=x0_pad, iters=iters)
         raise ValueError(method)
 
-    def _solve_compiled(self, method, iters):
-        key = (method, iters, self.precond)
+    def _solve_compiled(self, method, iters, batched: bool = False):
+        key = (method, iters, self.precond, batched)
         if key in self._compiled:
             return self._compiled[key]
 
@@ -451,6 +527,7 @@ class AzulEngine:
         dot = self._dot()
         mesh = self.mesh
         vec, blk = self._vec_spec, self._blk_spec
+        io_vec = self._bvec_spec if batched else vec
         s3 = P(self._all_axes, None, None)
         s2 = P(self._all_axes, None)
         cols, vals = self.cols, self.vals
@@ -501,23 +578,28 @@ class AzulEngine:
                             ok, z[jnp.clip(idx, 0, z.shape[0] - 1)], 0.0
                         )
 
-                    def ps(r_loc):
+                    def ps1(r_loc):
                         rows_p = lc.shape[0]
                         bb = jnp.zeros((rows_p,), r_loc.dtype)
                         bb = bb.at[: r_loc.shape[0]].set(r_loc)
                         zp = local_sptrsv(lc, lv, ldi, bb, lr)
                         z = local_sptrsv(uc, uv, udi, flip_k(zp), ur)
                         return flip_k(z)[: r_loc.shape[0]]
+
+                    def ps(r_loc):
+                        # batched (k, u) shard: the factors are shared, so
+                        # the two triangular solves vmap over the batch.
+                        return jax.vmap(ps1)(r_loc) if r_loc.ndim == 2 else ps1(r_loc)
                 else:
                     ps = lambda r: r
                 res = solvers.pcg(amv, b_loc, psolve=ps, x0=x0_loc,
                                   iters=iters, dot=dot)
             return res.x, res.res_norms
 
-        f = jax.shard_map(
+        f = _shard_map(
             prog, mesh=mesh,
-            in_specs=(vec, vec, blk, blk) + extra_specs,
-            out_specs=(vec, P()), check_vma=False,
+            in_specs=(io_vec, io_vec, blk, blk) + extra_specs,
+            out_specs=(io_vec, P()),
         )
         fn = jax.jit(lambda b, x0: f(b, x0, cols, vals, *extra_args))
         self._compiled[key] = fn
@@ -619,10 +701,10 @@ class AzulEngine:
             return out
 
         vec = self._vec_spec
-        f = jax.shard_map(
+        f = _shard_map(
             prog, mesh=mesh,
             in_specs=(vec, s3, s3, s3, s2),
-            out_specs=vec, check_vma=False,
+            out_specs=vec,
         )
         fn_dev = jax.jit(lambda b: f(b, cols_d, vals_d, rows_d, dinv_d))
 

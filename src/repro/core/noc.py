@@ -40,16 +40,30 @@ def axis_coord(axis: str) -> jnp.ndarray:
     return lax.axis_index(axis)
 
 
+def _axis_size(axis) -> int:
+    """Static size of a (tuple of) mesh axis -- ``lax.axis_size`` where it
+    exists, otherwise the classic eager ``psum(1, axis)`` trick."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return int(lax.psum(1, axis))
+
+
 def neighbor_shift(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
     """One torus hop along ``axis`` (wraps around) -- a single Azul send."""
-    n = lax.axis_size(axis)
+    n = _axis_size(axis)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return lax.ppermute(x, axis, perm)
 
 
-def gather_along(x: jnp.ndarray, axis: str, tiled: bool = True) -> jnp.ndarray:
-    """Assemble the x halo along a mesh axis (concat of every tile's shard)."""
-    return lax.all_gather(x, axis, axis=0, tiled=tiled)
+def gather_along(
+    x: jnp.ndarray, axis: str, tiled: bool = True, vec_axis: int = 0
+) -> jnp.ndarray:
+    """Assemble the x halo along a mesh axis (concat of every tile's shard).
+
+    ``vec_axis`` names the *array* axis that carries the distributed vector;
+    batch-stacked shards of shape (k, u) pass ``vec_axis=1`` so the k RHS
+    travel as one message while the batch axis stays intact."""
+    return lax.all_gather(x, axis, axis=vec_axis, tiled=tiled)
 
 
 def reduce_along(x: jnp.ndarray, axis) -> jnp.ndarray:
@@ -57,9 +71,14 @@ def reduce_along(x: jnp.ndarray, axis) -> jnp.ndarray:
     return lax.psum(x, axis)
 
 
-def reduce_scatter_along(x: jnp.ndarray, axis: str) -> jnp.ndarray:
-    """Combine partials across ``axis``, each tile keeping only its shard."""
-    return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+def reduce_scatter_along(
+    x: jnp.ndarray, axis: str, vec_axis: int = 0
+) -> jnp.ndarray:
+    """Combine partials across ``axis``, each tile keeping only its shard.
+
+    ``vec_axis`` is the scattered array axis (see ``gather_along``): batched
+    (k, br) partials scatter the trailing axis, yielding (k, u) shards."""
+    return lax.psum_scatter(x, axis, scatter_dimension=vec_axis, tiled=True)
 
 
 def mesh_transpose(x: jnp.ndarray, row_axes, col_axes) -> jnp.ndarray:
@@ -71,12 +90,13 @@ def mesh_transpose(x: jnp.ndarray, row_axes, col_axes) -> jnp.ndarray:
     a single deterministic ``ppermute`` over the flattened mesh (every tile
     sends and receives exactly one u-shard) -- the analogue of Azul's x
     redistribution between solver steps.  Works for any (pr x pc), square or
-    not.
+    not.  The permutation moves each tile's whole shard, so batch-stacked
+    (k, u) shards ride the same single hop unchanged.
     """
     row_axes = (row_axes,) if isinstance(row_axes, str) else tuple(row_axes)
     col_axes = (col_axes,) if isinstance(col_axes, str) else tuple(col_axes)
-    pr = lax.axis_size(row_axes)
-    pc = lax.axis_size(col_axes)
+    pr = _axis_size(row_axes)
+    pc = _axis_size(col_axes)
     # src tile holds segment q (flat id q = i*pc + j); dest tile for segment
     # q = j*pr + k is (k, j) = flat k*pc + j.
     perm = [(j * pr + k, k * pc + j) for k in range(pr) for j in range(pc)]
@@ -88,7 +108,7 @@ def reverse_vector(x: jnp.ndarray, axes) -> jnp.ndarray:
     swaps with shard P-1-q (one ppermute) and flips locally.  Used by the
     IC(0) preconditioner's L^T solve (run as a reversed lower solve)."""
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
-    p = lax.axis_size(axes)
+    p = _axis_size(axes)
     perm = [(p - 1 - q, q) for q in range(p)]
     return jnp.flip(lax.ppermute(x, axes, perm), axis=0)
 

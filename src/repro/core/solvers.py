@@ -14,6 +14,15 @@ layout.  Iteration count is static (``lax.scan``) so the program lowers to a
 fixed HLO -- required for the dry-run/roofline path; ``*_tol`` variants use
 ``lax.while_loop`` for tolerance-based stopping.
 
+Batched multi-RHS solves: ``b`` may be ``(n,)`` or stacked ``(k, n)``.  All
+vector updates broadcast over the leading batch axis; ``dot`` reduces the
+*last* axis only (keeping a trailing singleton for batched inputs, so the
+per-RHS alpha/beta scalars broadcast back against ``(k, n)`` vectors).
+Every RHS shares the one matrix -- ``matvec`` sees the stacked block, which
+is exactly the amortize-the-matrix-stream regime the batched kernels
+(``ell_spmm``) exploit.  Residual traces become ``(iters + 1, k)`` and
+iteration counts ``(k,)``.
+
 Convergence bookkeeping (residual-norm trace) is carried through the scan so
 benchmarks can plot paper-style convergence curves without re-running.
 """
@@ -34,13 +43,26 @@ Dot = Callable[[Vec, Vec], jnp.ndarray]
 
 
 class SolveResult(NamedTuple):
-    x: Vec
-    res_norms: jnp.ndarray      # (iters + 1,) residual 2-norms (incl. initial)
-    iters: jnp.ndarray          # scalar int32 -- iterations actually applied
+    x: Vec                      # (n,) or (k, n) -- mirrors b
+    res_norms: jnp.ndarray      # (iters + 1,) or (iters + 1, k) 2-norm trace
+    iters: jnp.ndarray          # int32 () or (k,) -- iterations applied
 
 
 def _default_dot(u: Vec, v: Vec) -> jnp.ndarray:
-    return jnp.sum(u * v)
+    """Last-axis dot: () for (n,) vectors, (k, 1) for (k, n) batches --
+    broadcastable back against the vectors it was computed from."""
+    return jnp.sum(u * v, axis=-1, keepdims=u.ndim > 1)
+
+
+def _norm(d: jnp.ndarray) -> jnp.ndarray:
+    """sqrt of a dot result, squeezed to () / (k,) for the residual trace."""
+    rn = jnp.sqrt(d)
+    return rn[..., 0] if rn.ndim else rn
+
+
+def _iters_like(b: Vec, iters) -> jnp.ndarray:
+    """Per-RHS iteration counts: int32 () for (n,) b, (k,) for (k, n) b."""
+    return jnp.full(b.shape[:-1], iters, jnp.int32)
 
 
 def cg(
@@ -66,14 +88,16 @@ def pcg(
 
     This is the paper's workload: each iteration is one SpMV (matvec), one
     (or two, for IC(0)) SpTRSV (psolve), two dots and three axpys -- the
-    exact op mix Azul keeps on-chip.
+    exact op mix Azul keeps on-chip.  ``b`` may be ``(k, n)``: the per-RHS
+    alpha/beta arrive as ``(k, 1)`` from ``dot`` and broadcast, so the k
+    solves advance in lockstep off one matvec per iteration.
     """
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)
     z = psolve(r)
     p = z
     rz = dot(r, z)
-    r0 = jnp.sqrt(dot(r, r))
+    r0 = _norm(dot(r, r))
 
     def step(carry, _):
         x, r, p, rz = carry
@@ -86,11 +110,11 @@ def pcg(
         rz_new = dot(r, z)
         beta = rz_new / jnp.where(rz == 0, 1.0, rz)
         p = z + beta * p
-        rn = jnp.sqrt(dot(r, r))
+        rn = _norm(dot(r, r))
         return (x, r, p, rz_new), rn
 
     (x, r, p, rz), norms = lax.scan(step, (x, r, p, rz), None, length=iters)
-    return SolveResult(x, jnp.concatenate([r0[None], norms]), jnp.int32(iters))
+    return SolveResult(x, jnp.concatenate([r0[None], norms]), _iters_like(b, iters))
 
 
 def pcg_pipelined(
@@ -125,11 +149,11 @@ def pcg_pipelined(
     w = matvec(u)
     gd = dot2(r, u, w, u)
     gamma, delta = gd[0], gd[1]
-    r0 = jnp.sqrt(jnp.maximum(dot(r, r), 0.0))
+    r0 = _norm(jnp.maximum(dot(r, r), 0.0))
 
     zv = jnp.zeros_like(b)
     state = (x, r, u, w, zv, zv, zv, zv, gamma, delta,
-             jnp.asarray(1.0, b.dtype), jnp.asarray(1.0, b.dtype))
+             jnp.ones_like(gamma), jnp.ones_like(gamma))
 
     def step(carry, i):
         (x, r, u, w, z, q, s, p, gamma, delta, gamma_old, alpha_old) = carry
@@ -149,12 +173,12 @@ def pcg_pipelined(
         w = w - alpha * z
         gd = dot2(r, u, w, u)
         res_sq = gd[0]          # (r, M^-1 r) surrogate for the trace
-        return (x, r, u, w, z, q, s, p, gd[0], gd[1], gamma, alpha), jnp.sqrt(
+        return (x, r, u, w, z, q, s, p, gd[0], gd[1], gamma, alpha), _norm(
             jnp.abs(res_sq)
         )
 
     state, norms = lax.scan(step, state, jnp.arange(iters))
-    return SolveResult(state[0], jnp.concatenate([r0[None], norms]), jnp.int32(iters))
+    return SolveResult(state[0], jnp.concatenate([r0[None], norms]), _iters_like(b, iters))
 
 
 def pcg_tol(
@@ -166,21 +190,32 @@ def pcg_tol(
     max_iters: int = 1000,
     dot: Dot = _default_dot,
 ) -> SolveResult:
-    """PCG with relative-tolerance stopping (while_loop)."""
+    """PCG with relative-tolerance stopping (while_loop).
+
+    Batched ``(k, n)`` b: the loop runs until *every* RHS meets the
+    tolerance (or max_iters); already-converged RHS keep iterating
+    harmlessly while ``iters`` records, per RHS, how many iterations it
+    was still active."""
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)
     z = psolve(r)
     p = z
     rz = dot(r, z)
-    bnorm = jnp.sqrt(dot(b, b))
+    bnorm = _norm(dot(b, b))
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
 
+    def active(r):
+        return _norm(dot(r, r)) / bnorm > tol
+
+    # the per-RHS active mask rides the carry so each iteration pays dot(r,r)
+    # exactly once (in body), matching the single-RHS cost of the old loop
     def cond(state):
-        _, r, _, _, k = state
-        return (jnp.sqrt(dot(r, r)) / bnorm > tol) & (k < max_iters)
+        _, _, _, _, act, _, k = state
+        return jnp.any(act) & (k < max_iters)
 
     def body(state):
-        x, r, p, rz, k = state
+        x, r, p, rz, act, it, k = state
+        it = it + act.astype(jnp.int32)
         ap = matvec(p)
         denom = dot(p, ap)
         alpha = rz / jnp.where(denom == 0, 1.0, denom)
@@ -190,11 +225,14 @@ def pcg_tol(
         rz_new = dot(r, z)
         beta = rz_new / jnp.where(rz == 0, 1.0, rz)
         p = z + beta * p
-        return (x, r, p, rz_new, k + 1)
+        return (x, r, p, rz_new, active(r), it, k + 1)
 
-    x, r, p, rz, k = lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
-    rn = jnp.sqrt(dot(r, r))
-    return SolveResult(x, jnp.stack([rn]), k)
+    it0 = _iters_like(b, 0)
+    x, r, p, rz, act, it, k = lax.while_loop(
+        cond, body, (x, r, p, rz, active(r), it0, jnp.int32(0))
+    )
+    rn = _norm(dot(r, r))
+    return SolveResult(x, jnp.stack([rn]), it)
 
 
 def jacobi(
@@ -206,15 +244,16 @@ def jacobi(
     dot: Dot = _default_dot,
 ) -> SolveResult:
     """Weighted Jacobi iteration: x += D^-1 (b - A x).  The paper's simplest
-    distributed test case (pure SpMV + axpy, no data dependence)."""
+    distributed test case (pure SpMV + axpy, no data dependence).  With a
+    ``(k, n)`` b the (n,)-shaped ``diag_inv`` broadcasts over the batch."""
     x = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - matvec(x)
-    n0 = jnp.sqrt(dot(r0, r0))
+    n0 = _norm(dot(r0, r0))
 
     def step(x, _):
         r = b - matvec(x)
         x = x + diag_inv * r
-        return x, jnp.sqrt(dot(r, r))
+        return x, _norm(dot(r, r))
 
     x, norms = lax.scan(step, x, None, length=iters)
-    return SolveResult(x, jnp.concatenate([n0[None], norms]), jnp.int32(iters))
+    return SolveResult(x, jnp.concatenate([n0[None], norms]), _iters_like(b, iters))

@@ -17,6 +17,7 @@ from .levels import LevelSchedule
 __all__ = [
     "spmv_ell",
     "spmv_ell_padded",
+    "spmm_ell_padded",
     "spmv_bcsr",
     "sptrsv_ell",
     "extract_diag_ell",
@@ -33,6 +34,13 @@ def spmv_ell_padded(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp
     padded slots contribute nothing; padded cols point at 0 which is always
     in-bounds."""
     return jnp.sum(vals * x[cols], axis=1)
+
+
+def spmm_ell_padded(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Batched multi-RHS SpMV in the solvers' stacked layout: x is (k, n),
+    returns (k, rows_p).  One gather of the matrix serves all k vectors --
+    x[:, cols] is (k, rows_p, w), weighted by the shared (rows_p, w) vals."""
+    return jnp.sum(vals * x[:, cols], axis=-1)
 
 
 def spmv_bcsr(m: BCSR, x: jnp.ndarray) -> jnp.ndarray:

@@ -16,11 +16,15 @@ import jax.numpy as jnp
 
 from . import ref
 from .ell_spmv import ell_spmv as _ell_spmv_pallas
+from .ell_spmv import ell_spmm as _ell_spmm_pallas
 from .bcsr_spmm import bcsr_spmm as _bcsr_spmm_pallas
 from .sptrsv import sptrsv_level_step as _sptrsv_step_pallas
 from .vecops import axpy_dot as _axpy_dot_pallas
 
-__all__ = ["ell_spmv", "bcsr_spmm", "sptrsv_level_step", "axpy_dot", "backend_mode"]
+__all__ = [
+    "ell_spmv", "ell_spmm", "bcsr_spmm", "sptrsv_level_step", "axpy_dot",
+    "backend_mode",
+]
 
 _MODE = "auto"
 
@@ -55,6 +59,19 @@ def ell_spmv(cols, vals, x, tm: int | None = None, tw: int | None = None):
             kw["tw"] = tw
         return _ell_spmv_pallas(cols, vals, x, interpret=interp, **kw)
     return ref.ell_spmv_ref(cols, vals, x)
+
+
+def ell_spmm(cols, vals, x, tm: int | None = None, tw: int | None = None):
+    """Multi-RHS SpMM; x is (n, k) dense, one matrix stream for all k."""
+    use, interp = _dispatch()
+    if use:
+        kw = {}
+        if tm:
+            kw["tm"] = tm
+        if tw:
+            kw["tw"] = tw
+        return _ell_spmm_pallas(cols, vals, x, interpret=interp, **kw)
+    return ref.ell_spmm_ref(cols, vals, x)
 
 
 def bcsr_spmm(block_cols, blocks, x):

@@ -8,12 +8,23 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["ell_spmv_ref", "bcsr_spmm_ref", "sptrsv_level_step_ref", "axpy_dot_ref"]
+__all__ = [
+    "ell_spmv_ref", "ell_spmm_ref", "bcsr_spmm_ref",
+    "sptrsv_level_step_ref", "axpy_dot_ref",
+]
 
 
 def ell_spmv_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """y[r] = sum_k vals[r, k] * x[cols[r, k]].  Padding: vals == 0."""
     return jnp.sum(vals * x[cols], axis=1)
+
+
+def ell_spmm_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Multi-RHS ELL SpMM: x is (n, k) dense, returns (rows_p, k).
+
+    Y[r, :] = sum_w vals[r, w] * x[cols[r, w], :] -- one matrix read shared
+    by all k right-hand sides."""
+    return jnp.sum(vals[..., None] * x[cols], axis=1)
 
 
 def bcsr_spmm_ref(block_cols: jnp.ndarray, blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

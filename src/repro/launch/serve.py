@@ -1,7 +1,12 @@
-"""Serving driver: batched generation / continuous batching demo.
+"""Serving driver: batched generation / continuous batching demo, plus the
+request-coalescing sparse-solver serving path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch paligemma-3b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+    # solver serving: coalesce pending RHS into batched AzulEngine solves
+    PYTHONPATH=src python -m repro.launch.serve --solver --matrix lap2d_32 \
+        --requests 12 --coalesce 8 --iters 150
 """
 
 from __future__ import annotations
@@ -15,16 +20,86 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _solver_main(args) -> int:
+    """Serve sparse solves: submit ``--requests`` RHS, drain them through
+    ``SolveServer`` (up to ``--coalesce`` RHS per batched solve)."""
+    jax.config.update("jax_enable_x64", True)  # f64 engine, like the benches
+
+    from ..core.engine import AzulEngine
+    from ..data.matrices import suite
+    from ..serve import SolveServer
+
+    mats = suite("small")
+    if args.matrix not in mats:
+        mats.update(suite("large"))
+    if args.matrix not in mats:
+        raise SystemExit(
+            f"unknown --matrix {args.matrix!r}; available: {', '.join(sorted(mats))}"
+        )
+    m = mats[args.matrix]
+
+    mesh = None
+    if args.mesh_shape:
+        from .mesh import make_mesh
+        shape = tuple(int(x) for x in args.mesh_shape.split("x"))
+        if len(shape) != 2:
+            raise SystemExit("--mesh-shape must be RxC, e.g. 2x2")
+        mesh = make_mesh(shape, ("data", "model"))
+
+    eng = AzulEngine(m, mesh=mesh, precond=args.precond, dtype=np.float64)
+    srv = SolveServer(eng, max_batch=args.coalesce, method=args.method,
+                      iters=args.iters)
+
+    import scipy.sparse as sp
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    rng = np.random.default_rng(0)
+    x_true = rng.standard_normal((args.requests, m.shape[0]))
+    ids = [srv.submit(a @ x_true[i]) for i in range(args.requests)]
+
+    t0 = time.perf_counter()
+    done = srv.drain()
+    dt = time.perf_counter() - t0
+    err = max(
+        float(np.abs(done[rid].x - x_true[i]).max()) for i, rid in enumerate(ids)
+    )
+    print(json.dumps({
+        "matrix": args.matrix, "n": m.shape[0],
+        "requests": args.requests, "coalesce": args.coalesce,
+        "batches": srv.stats["batches"], "padded_rhs": srv.stats["padded_rhs"],
+        "wall_s": round(dt, 3),
+        "solves_per_s": round(args.requests / dt, 2),
+        "verify_maxerr": err,
+    }, indent=1))
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--slots", action="store_true",
                     help="exercise the SlotServer continuous-batching path")
+    # sparse-solver serving path
+    ap.add_argument("--solver", action="store_true",
+                    help="serve sparse solves (request-coalescing batched path)")
+    ap.add_argument("--matrix", default="lap2d_32")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--coalesce", type=int, default=8,
+                    help="max RHS coalesced into one batched solve")
+    ap.add_argument("--method", default="pcg")
+    ap.add_argument("--precond", default="jacobi")
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--mesh-shape", default="",
+                    help="e.g. 2x2 -- empty = single device")
     args = ap.parse_args(argv)
+
+    if args.solver:
+        return _solver_main(args)
+    if args.arch is None:
+        ap.error("--arch is required unless --solver is given")
 
     from ..configs import get, get_smoke
     from ..models import model as M

@@ -1,2 +1,4 @@
-"""Serving substrate: generate loop + slot-based continuous batching."""
+"""Serving substrate: generate loop, slot-based continuous batching, and
+the request-coalescing batched sparse-solve server."""
 from .engine import generate, SlotServer  # noqa: F401
+from .solve_server import SolveServer, SolveOutcome, SolveRequest  # noqa: F401

@@ -1,0 +1,112 @@
+"""Request-coalescing front end for the batched sparse-solve path.
+
+Real solver traffic (circuit simulation steps, traffic assignment, any
+implicit time-stepper) repeatedly solves the *same* operator against many
+right-hand sides.  ``SolveServer`` is the serving-side half of that
+bargain: clients ``submit`` individual (n,) RHS; each ``step`` coalesces up
+to ``max_batch`` pending requests into one stacked (k, n) batched
+``AzulEngine.solve`` -- one matrix stream, one distributed program, k
+answers -- and returns per-request results.
+
+Batch shapes are bucketed to powers of two (capped at ``max_batch``) so the
+jit cache stays small: a burst of 5 requests runs as a k=8 batch with three
+zero RHS riding along (a zero RHS converges instantly and costs only the
+already-amortized vector math).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = ["SolveRequest", "SolveOutcome", "SolveServer"]
+
+
+class SolveRequest(NamedTuple):
+    req_id: int
+    b: np.ndarray                 # (n,) right-hand side
+
+
+class SolveOutcome(NamedTuple):
+    req_id: int
+    x: np.ndarray                 # (n,) solution
+    res_norms: np.ndarray         # (iters + 1,) this request's residual trace
+    batch_size: int               # how many RHS shared the solve
+
+
+class SolveServer:
+    """Coalesce single-RHS solve requests into batched engine solves.
+
+    Parameters
+    ----------
+    engine : AzulEngine        the (already-built) solver engine
+    max_batch : int            coalescing window: max RHS per batched solve
+    method / iters :           forwarded to ``engine.solve``
+    """
+
+    def __init__(self, engine, max_batch: int = 16, method: str = "pcg",
+                 iters: int = 200):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.method = method
+        self.iters = iters
+        self._queue: list[SolveRequest] = []
+        self._next_id = 0
+        # serving-side counters (fill ratio tells you if max_batch is sized
+        # to the actual arrival rate)
+        self.stats = {"requests": 0, "batches": 0, "padded_rhs": 0}
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, b) -> int:
+        """Queue one (n,) RHS; returns a request id resolved by ``step``."""
+        b = np.asarray(b)
+        if b.shape != (self.engine.n,):
+            raise ValueError(f"RHS shape {b.shape} != ({self.engine.n},)")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(SolveRequest(rid, b))
+        self.stats["requests"] += 1
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- serving side -------------------------------------------------------
+
+    def _bucket(self, k: int) -> int:
+        p = 1
+        while p < k:
+            p *= 2
+        return min(p, self.max_batch)
+
+    def step(self) -> dict[int, SolveOutcome]:
+        """Run ONE coalesced batched solve over up to max_batch pending
+        requests; returns {req_id: outcome}.  No-op ({}) when idle."""
+        if not self._queue:
+            return {}
+        take, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch:]
+        k = len(take)
+        k_pad = self._bucket(k)
+        batch = np.zeros((k_pad, self.engine.n))
+        for i, req in enumerate(take):
+            batch[i] = req.b
+        x, norms = self.engine.solve(batch, method=self.method, iters=self.iters)
+        self.stats["batches"] += 1
+        self.stats["padded_rhs"] += k_pad - k
+        # norms: (iters + 1, k_pad) -- hand each request its own column
+        return {
+            req.req_id: SolveOutcome(req.req_id, np.asarray(x[i]),
+                                     np.asarray(norms[:, i]), k)
+            for i, req in enumerate(take)
+        }
+
+    def drain(self) -> dict[int, SolveOutcome]:
+        """Step until the queue is empty; returns all outcomes."""
+        out: dict[int, SolveOutcome] = {}
+        while self._queue:
+            out.update(self.step())
+        return out

@@ -1,0 +1,190 @@
+"""Batched multi-RHS solve path: stacked (k, n) solves must match k
+independent single-RHS solves and the scipy oracle -- the functional-
+verification contract extended to the batched regime."""
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from scipy.sparse.linalg import spsolve
+
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core.engine import AzulEngine
+from repro.core.formats import csr_from_scipy, ell_from_csr
+from repro.core.solvers import pcg, pcg_tol
+from repro.core.spops import spmm_ell_padded, spmv_ell_padded
+from repro.data.matrices import laplacian_2d, random_spd
+from repro.kernels import ref
+from repro.kernels.ell_spmv import ell_spmm
+from repro.serve import SolveServer
+
+
+def _spd_pair(n, density, seed):
+    m = random_spd(n, density=density, seed=seed)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    return m, a
+
+
+# -- solver-level properties -------------------------------------------------
+
+
+@given(st.integers(20, 90), st.integers(1, 6), st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_batched_pcg_matches_independent_solves(n, k, seed):
+    m, a = _spd_pair(n, 0.05, seed)
+    e = ell_from_csr(m, dtype=np.float64)
+    rng = np.random.default_rng(seed)
+    b = rng.standard_normal((k, n))
+
+    def mv(x):
+        if x.ndim == 2:
+            return spmm_ell_padded(e.cols, e.vals, x)[..., :n]
+        return spmv_ell_padded(e.cols, e.vals, x)[:n]
+
+    batched = pcg(mv, jnp.asarray(b), psolve=lambda r: r, iters=120)
+    assert batched.x.shape == (k, n)
+    assert batched.res_norms.shape == (121, k)
+    assert batched.iters.shape == (k,)
+    for i in range(k):
+        single = pcg(mv, jnp.asarray(b[i]), psolve=lambda r: r, iters=120)
+        np.testing.assert_allclose(
+            np.asarray(batched.x[i]), np.asarray(single.x), atol=1e-9
+        )
+        np.testing.assert_allclose(
+            np.asarray(batched.res_norms[:, i]),
+            np.asarray(single.res_norms), atol=1e-9,
+        )
+
+
+@given(st.integers(24, 80), st.integers(2, 5), st.integers(0, 10**6),
+       st.sampled_from(["jacobi", "block_ic0", "none"]))
+@settings(max_examples=8, deadline=None)
+def test_engine_batched_solve_matches_scipy(n, k, seed, precond):
+    m, a = _spd_pair(n, 0.06, seed)
+    rng = np.random.default_rng(seed)
+    x_true = rng.standard_normal((k, n))
+    b = x_true @ a.T
+    eng = AzulEngine(m, mesh=None, precond=precond, dtype=np.float64)
+    x, norms = eng.solve(b, method="pcg", iters=150)
+    assert x.shape == (k, n)
+    assert norms.shape == (151, k)
+    x_ref = np.stack([spsolve(a, b[i]) for i in range(k)])
+    np.testing.assert_allclose(x, x_ref, atol=1e-6)
+    np.testing.assert_allclose(x, x_true, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype,atol", [(np.float32, 2e-3), (np.float64, 1e-8)])
+def test_engine_batched_solve_dtypes(dtype, atol):
+    m, a = _spd_pair(60, 0.08, 3)
+    rng = np.random.default_rng(3)
+    x_true = rng.standard_normal((4, 60))
+    b = x_true @ a.T
+    eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=dtype)
+    xb, _ = eng.solve(b, method="pcg", iters=150)
+    x1, _ = eng.solve(b[1], method="pcg", iters=150)
+    assert xb.dtype == dtype
+    np.testing.assert_allclose(xb, x_true, atol=atol)
+    np.testing.assert_allclose(xb[1], x1, atol=atol)  # batch == single path
+
+
+def test_batched_shapes_single_rhs_unchanged():
+    """(n,) inputs keep the legacy scalar/1-D result contract."""
+    m, a = _spd_pair(50, 0.08, 7)
+    eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
+    b = np.random.default_rng(0).standard_normal(50)
+    x, norms = eng.solve(b, method="pcg", iters=40)
+    assert x.shape == (50,)
+    assert norms.shape == (41,)
+
+
+def test_batched_pcg_tol_per_rhs_iters():
+    """Per-RHS iteration counts: an easy RHS must stop counting before a
+    hard one (zero RHS converges at iteration 0)."""
+    m, a = _spd_pair(60, 0.08, 11)
+    e = ell_from_csr(m, dtype=np.float64)
+    rng = np.random.default_rng(11)
+    b = np.stack([np.zeros(60), rng.standard_normal(60)])
+
+    def mv(x):
+        if x.ndim == 2:
+            return spmm_ell_padded(e.cols, e.vals, x)[..., :60]
+        return spmv_ell_padded(e.cols, e.vals, x)[:60]
+
+    res = pcg_tol(mv, jnp.asarray(b), psolve=lambda r: r, tol=1e-10,
+                  max_iters=500)
+    iters = np.asarray(res.iters)
+    assert iters.shape == (2,)
+    assert iters[0] == 0 and 0 < iters[1] < 500
+
+
+# -- batched solvers through jacobi / pipelined variants ---------------------
+
+
+@pytest.mark.parametrize("method", ["cg", "pcg", "pcg_pipe", "jacobi"])
+def test_engine_batched_methods_match_single(method):
+    m = laplacian_2d(10)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    rng = np.random.default_rng(5)
+    b = rng.standard_normal((3, m.shape[0]))
+    eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
+    xb, nb = eng.solve(b, method=method, iters=80)
+    for i in range(3):
+        xi, ni = eng.solve(b[i], method=method, iters=80)
+        np.testing.assert_allclose(xb[i], xi, atol=1e-10)
+        np.testing.assert_allclose(nb[:, i], ni, atol=1e-10)
+
+
+# -- multi-RHS kernel functional verification --------------------------------
+
+
+@given(st.integers(8, 96), st.integers(1, 8), st.floats(0.05, 0.3),
+       st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_ell_spmm_kernel_vs_ref_vs_scipy(n, k, density, seed):
+    a = sp.random(n, n, density=density, random_state=seed, format="csr")
+    a.setdiag(2.0)
+    m = csr_from_scipy(a.tocsr())
+    e = ell_from_csr(m, row_pad=8, width_pad=8)
+    x = np.random.default_rng(seed).standard_normal((n, k)).astype(np.float32)
+    y_k = np.asarray(ell_spmm(e.cols, e.vals, jnp.asarray(x), tm=8, tw=8,
+                              interpret=True))
+    y_r = np.asarray(ref.ell_spmm_ref(e.cols, e.vals, jnp.asarray(x)))
+    want = a @ x
+    np.testing.assert_allclose(y_k[:n], want, atol=5e-5)
+    np.testing.assert_allclose(y_r[:n], want, atol=5e-5)
+    # stacked (k, n) spops layout agrees with the (n, k) kernel layout
+    y_s = np.asarray(spmm_ell_padded(e.cols, e.vals, jnp.asarray(x.T)))
+    np.testing.assert_allclose(y_s[:, :n], want.T, atol=5e-5)
+
+
+def test_engine_batched_spmv_matches_scipy():
+    m, a = _spd_pair(70, 0.1, 2)
+    eng = AzulEngine(m, mesh=None, dtype=np.float64)
+    x = np.random.default_rng(2).standard_normal((6, 70))
+    np.testing.assert_allclose(eng.spmv(x), x @ a.T, atol=1e-10)
+    np.testing.assert_allclose(eng.spmv(x[0]), a @ x[0], atol=1e-10)
+
+
+# -- request-coalescing serve path -------------------------------------------
+
+
+def test_solve_server_coalesces_and_verifies():
+    m, a = _spd_pair(64, 0.08, 9)
+    eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
+    srv = SolveServer(eng, max_batch=4, method="pcg", iters=150)
+    rng = np.random.default_rng(9)
+    x_true = rng.standard_normal((7, 64))
+    ids = [srv.submit(a @ x_true[i]) for i in range(7)]
+    assert srv.pending() == 7
+    out = srv.drain()
+    assert srv.pending() == 0
+    assert srv.stats["batches"] == 2          # 4 + 3 -> two coalesced solves
+    assert srv.stats["padded_rhs"] == 1       # 3 bucketed up to 4
+    for i, rid in enumerate(ids):
+        assert out[rid].req_id == rid
+        np.testing.assert_allclose(out[rid].x, x_true[i], atol=1e-7)
+        assert out[rid].res_norms.ndim == 1
+
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros(3))

@@ -29,6 +29,13 @@ b = A @ x_true
 eng_loc = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
 x_loc, _ = eng_loc.solve(b, method="pcg", iters=80)
 
+# batched (k, n) RHS: ground truth = k independent scipy solves
+from scipy.sparse.linalg import spsolve
+K = 4
+Xt = rng.standard_normal((K, n))
+Bk = Xt @ A.T
+X_ref = np.stack([spsolve(A.tocsr(), Bk[i]) for i in range(K)])
+
 out = {}
 for mode in ("2d", "1d"):
     eng = AzulEngine(m, mesh=mesh, mode=mode, precond="jacobi", dtype=np.float64)
@@ -37,6 +44,14 @@ for mode in ("2d", "1d"):
     x, _ = eng.solve(b, method="pcg", iters=80)
     out[f"{mode}_err_vs_local"] = float(np.abs(x - x_loc).max())
     assert np.allclose(x, x_loc, atol=1e-6), f"{mode} vs local"
+    yk = eng.spmv(Xt)
+    assert np.allclose(yk, Bk, atol=1e-8), f"{mode} batched spmm"
+    xk, nk = eng.solve(Bk, method="pcg", iters=80)
+    assert xk.shape == (K, n) and nk.shape == (81, K), f"{mode} batched shapes"
+    assert np.allclose(xk, X_ref, atol=1e-6), f"{mode} batched vs scipy"
+    out[f"{mode}_batched_err_vs_scipy"] = float(np.abs(xk - X_ref).max())
+    xk0, _ = eng.solve(Bk, x0=np.zeros(n), method="pcg", iters=80)
+    assert np.allclose(xk0, X_ref, atol=1e-6), f"{mode} batched b + shared x0"
 
 eng2 = AzulEngine(m, mesh=mesh, mode="2d", precond="block_ic0", dtype=np.float64)
 x2, n2 = eng2.solve(b, method="pcg", iters=60)
@@ -62,6 +77,7 @@ print("DIST_OK", json.dumps(out))
 
 
 @pytest.mark.slow
+@pytest.mark.dist
 def test_distributed_equivalence():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 import scipy.sparse as sp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.formats import (
     bcsr_from_csr, bcsr_to_dense, csr_from_dense, csr_from_scipy,

@@ -3,7 +3,7 @@ solver built on it matching scipy."""
 
 import numpy as np
 import scipy.sparse as sp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.formats import csr_from_scipy
 from repro.core.levels import build_schedule, compute_levels, parallelism_profile

@@ -1,0 +1,112 @@
+"""NoC layer edge cases under real multi-device shard_map (subprocess with
+forced host devices): mesh_transpose on non-square meshes, gather/scatter of
+batch-stacked shards, and the 1D-plan fallback with batched vectors."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+import scipy.sparse as sp
+from repro.core import noc
+from repro.core.engine import AzulEngine, _shard_map
+from repro.core.formats import csr_from_scipy
+from repro.launch.mesh import make_mesh
+
+# --- mesh_transpose semantics on non-square meshes, incl. batched shards ---
+# L_row: segment q = i*pc + j lives on tile (i, j).  After the transpose,
+# tile (i, j) must hold segment q' = j*pr + i (the L_col layout).
+for (pr, pc) in ((2, 4), (4, 2), (2, 2)):
+    mesh = make_mesh((pr, pc), ("data", "model"))
+    u = 3
+    npad = pr * pc * u
+    x = np.arange(npad, dtype=np.float64)
+    xb = np.stack([x, -x, x * 2.0])            # (k, npad) batch-stacked
+
+    f = _shard_map(
+        lambda s: noc.mesh_transpose(s, ("data",), ("model",)),
+        mesh, in_specs=P(("data", "model")), out_specs=P(("data", "model")),
+    )
+    got = np.asarray(jax.jit(f)(jnp.asarray(x)))
+    want = np.concatenate([
+        x[((t % pc) * pr + t // pc) * u:((t % pc) * pr + t // pc + 1) * u]
+        for t in range(pr * pc)
+    ])
+    assert np.array_equal(got, want), f"mesh_transpose {pr}x{pc}"
+
+    fb = _shard_map(
+        lambda s: noc.mesh_transpose(s, ("data",), ("model",)),
+        mesh, in_specs=P(None, ("data", "model")),
+        out_specs=P(None, ("data", "model")),
+    )
+    gotb = np.asarray(jax.jit(fb)(jnp.asarray(xb)))
+    assert np.array_equal(gotb, np.stack([want, -want, want * 2.0])), \
+        f"batched mesh_transpose {pr}x{pc}"
+
+    # gather_along a batched shard reassembles the full vector on every tile
+    fg = _shard_map(
+        lambda s: noc.gather_along(s, ("data", "model"), vec_axis=1),
+        mesh, in_specs=P(None, ("data", "model")), out_specs=P(),
+    )
+    gg = np.asarray(jax.jit(fg)(jnp.asarray(xb)))
+    assert np.array_equal(gg, xb), f"batched gather {pr}x{pc}"
+
+    # reduce_scatter of batched partials: P tiles each contribute the full
+    # (k, npad) array -> every tile keeps its own (k, u) shard of P * x
+    fs = _shard_map(
+        lambda s: noc.reduce_scatter_along(
+            noc.gather_along(s, ("data", "model"), vec_axis=1),
+            ("data", "model"), vec_axis=1),
+        mesh, in_specs=P(None, ("data", "model")),
+        out_specs=P(None, ("data", "model")),
+    )
+    gs = np.asarray(jax.jit(fs)(jnp.asarray(xb)))
+    assert np.allclose(gs, pr * pc * xb), f"batched reduce_scatter {pr}x{pc}"
+
+# --- non-square 2d engines + 1D-plan fallback, batched end to end ----------
+rng = np.random.default_rng(0)
+n = 72
+Bm = sp.random(n, n, density=0.08, random_state=1, format="csr")
+A = (Bm @ Bm.T + sp.eye(n) * (n * 0.2)).tocsr()
+m = csr_from_scipy(A)
+Xt = rng.standard_normal((3, n))
+Bk = Xt @ A.toarray().T
+
+for shape in ((2, 4), (4, 2)):
+    mesh = make_mesh(shape, ("data", "model"))
+    eng = AzulEngine(m, mesh=mesh, mode="2d", precond="jacobi", dtype=np.float64)
+    assert (eng.pr, eng.pc) == shape
+    assert np.allclose(eng.spmv(Xt), Bk, atol=1e-8), f"{shape} 2d batched spmm"
+    xk, _ = eng.solve(Bk, method="pcg", iters=80)
+    assert np.allclose(xk, Xt, atol=1e-6), f"{shape} 2d batched solve"
+
+# 1D fallback: nnz-balanced row partition, full-x gather per tile
+mesh = make_mesh((2, 4), ("data", "model"))
+eng1 = AzulEngine(m, mesh=mesh, mode="1d", precond="jacobi", dtype=np.float64)
+assert np.allclose(eng1.spmv(Xt), Bk, atol=1e-8), "1d batched spmm"
+x1, n1 = eng1.solve(Bk, method="pcg", iters=80)
+assert x1.shape == (3, n) and n1.shape == (81, 3)
+assert np.allclose(x1, Xt, atol=1e-6), "1d batched solve"
+
+print("NOC_DIST_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.dist
+def test_noc_edge_cases_multidevice():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    env["JAX_ENABLE_X64"] = "1"
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=560,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "NOC_DIST_OK" in r.stdout

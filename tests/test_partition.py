@@ -3,7 +3,7 @@ monotone and load-balanced; 2D plan reconstructs the matrix."""
 
 import numpy as np
 import scipy.sparse as sp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.formats import csr_from_scipy
 from repro.core.partition import (

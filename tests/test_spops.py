@@ -2,7 +2,7 @@
 
 import numpy as np
 import scipy.sparse as sp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from scipy.linalg import solve_triangular
 
 import jax.numpy as jnp
