@@ -5,10 +5,19 @@ shape sweep -- the FPGA-vs-simulator-vs-Python triangle of the paper, with
 interpret-mode standing in for the FPGA bitstream.  us_per_call times the
 jit'd oracle path (the CPU-executable surrogate; TPU timings come from the
 roofline, not this container).
+
+``--autotune`` runs the tile-size autotuner over the bench shapes and
+persists the winners to the JSON cache (``autotune.cache_path()``); the
+``ops`` dispatch wrappers pick the cached tiles up automatically on later
+runs at the same shapes:
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels --autotune \
+        [--mode interpret] [--n 512]
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -16,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import bcsr_from_csr, ell_from_csr
 from repro.data.matrices import random_spd
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 
 
 def _t(f, *a, reps=20):
@@ -31,7 +40,8 @@ def _t(f, *a, reps=20):
 
 def run() -> list[tuple[str, float, str]]:
     rows = []
-    rng = np.random.default_rng(0)
+    prev_mode = ops.backend_mode()   # restore on exit: the CI smoke job
+    rng = np.random.default_rng(0)   # sets REPRO_KERNEL_MODE=interpret
     m = random_spd(512, 0.02, 3)
     x = jnp.asarray(rng.standard_normal(512), jnp.float32)
 
@@ -61,10 +71,111 @@ def run() -> list[tuple[str, float, str]]:
     err = float(jnp.abs(z_k[:512] - z_r).max())
     dt = _t(lambda: ref.axpy_dot_ref(0.3, x, x))
     rows.append(("kernel_axpy_dot", dt * 1e6, f"interpret_vs_ref_maxerr={err:.2e}"))
-    ops.backend_mode("auto")
+
+    # fused solver-iteration kernels
+    x_pad = jnp.asarray(rng.standard_normal(ell.rows_padded), jnp.float32)
+    ops.backend_mode("interpret")
+    y_k, pap_k = ops.ell_spmv_dot(ell.cols, ell.vals, x_pad, tm=8, tw=8)
+    ops.backend_mode("never")
+    y_r, pap_r = ref.ell_spmv_dot_ref(ell.cols, ell.vals, x_pad)
+    err = max(float(jnp.abs(y_k - y_r).max()), float(jnp.abs(pap_k - pap_r)))
+    dt = _t(lambda: ref.ell_spmv_dot_ref(ell.cols, ell.vals, x_pad))
+    rows.append(("kernel_ell_spmv_dot", dt * 1e6, f"interpret_vs_ref_maxerr={err:.2e}"))
+
+    vecs = [jnp.asarray(rng.standard_normal(500), jnp.float32) for _ in range(5)]
+    ops.backend_mode("interpret")
+    out_k = ops.cg_update(0.3, *vecs, tn=128)
+    ops.backend_mode("never")
+    out_r = ref.cg_update_ref(0.3, *vecs)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(out_k, out_r))
+    dt = _t(lambda: ref.cg_update_ref(0.3, *vecs))
+    rows.append(("kernel_cg_update", dt * 1e6, f"interpret_vs_ref_maxerr={err:.2e}"))
+    ops.backend_mode(prev_mode)
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def run_autotune(n: int = 512, density: float = 0.02,
+                 mode: str | None = None) -> list[tuple[str, float, str]]:
+    """Tune tiles for the solver-facing kernels at one suite shape and
+    persist them (see module docstring)."""
+    if mode:
+        ops.backend_mode(mode)
+    rows = []
+    if not ops.kernels_active():
+        rows.append(("autotune_skipped", 0.0,
+                     "kernels inactive on this backend (mode=auto on CPU); "
+                     "use --mode interpret to tune kernel bodies"))
+        return rows
+    rng = np.random.default_rng(0)
+    m = random_spd(n, density, 3)
+    ell = ell_from_csr(m, row_pad=8, width_pad=8)
+    cols, vals = ell.cols, ell.vals
+    rp, w = cols.shape
+    x = jnp.asarray(rng.standard_normal(rp), jnp.float32)
+    xm = jnp.asarray(rng.standard_normal((rp, 8)), jnp.float32)
+    cand2d = [
+        {"tm": tm, "tw": tw}
+        for tm in autotune.tile_candidates(rp)[:4]
+        for tw in autotune.tile_candidates(w)[:4]
+    ]
+    for op_name, fn in (
+        ("ell_spmv", lambda tm, tw: (lambda: ops.ell_spmv(cols, vals, x, tm=tm, tw=tw))),
+        ("ell_spmm", lambda tm, tw: (lambda: ops.ell_spmm(cols, vals, xm, tm=tm, tw=tw))),
+        ("ell_spmv_dot", lambda tm, tw: (lambda: ops.ell_spmv_dot(cols, vals, x, tm=tm, tw=tw))),
+    ):
+        best = autotune.autotune(op_name, (rp, w), vals.dtype, cand2d, fn)
+        rows.append((f"autotune_{op_name}", 0.0, f"best={best}"))
+
+    vecs = [jnp.asarray(rng.standard_normal(rp), jnp.float32) for _ in range(5)]
+    cand1d = [{"tn": tn} for tn in (128, 256, 512, 1024) if tn <= rp] or [{"tn": rp}]
+    best = autotune.autotune(
+        "cg_update", (rp,), jnp.float32, cand1d,
+        lambda tn: (lambda: ops.cg_update(0.3, *vecs, tn=tn)),
+    )
+    rows.append(("autotune_cg_update", 0.0, f"best={best}"))
+
+    # sptrsv level step: tune on the widest level of tril(A)
+    import scipy.sparse as sp
+    from repro.core.formats import csr_from_scipy
+    from repro.core.levels import build_schedule
+    from repro.core.spops import extract_diag_ell
+
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    l = csr_from_scipy(sp.tril(a).tocsr())
+    e = ell_from_csr(l, row_pad=8, width_pad=8)
+    sched = build_schedule(l)
+    diag = jnp.where(extract_diag_ell(e) == 0, 1.0, extract_diag_ell(e))
+    widths = np.asarray((np.asarray(sched.rows) < sched.n).sum(axis=1))
+    lv = int(np.argmax(widths))
+    level_rows = jnp.asarray(sched.rows[lv])
+    b = jnp.asarray(rng.standard_normal(e.rows_padded), jnp.float32)
+    xs = jnp.zeros((l.shape[0] + 1,), jnp.float32)
+    wl = level_rows.shape[0]
+    cand_tl = [{"tl": tl} for tl in autotune.tile_candidates(wl)[:6]]
+    best = autotune.autotune(
+        "sptrsv_level_step", (wl, e.width), jnp.float32, cand_tl,
+        lambda tl: (lambda: ops.sptrsv_level_step(
+            e.cols, e.vals, diag, b, xs, level_rows, tl=tl)),
+    )
+    rows.append(("autotune_sptrsv_level_step", 0.0, f"best={best}"))
+    rows.append(("autotune_cache", 0.0, f"path={autotune.cache_path()}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--mode", default=None,
+                    choices=("auto", "interpret", "never"))
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--density", type=float, default=0.02)
+    args = ap.parse_args(argv)
+    rows = (run_autotune(n=args.n, density=args.density, mode=args.mode)
+            if args.autotune else run())
+    for r in rows:
         print(",".join(str(x) for x in r))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

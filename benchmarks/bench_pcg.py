@@ -10,17 +10,26 @@ batched (k, n) solve vs k sequential single-RHS solves, reporting per-RHS
 throughput (the amortize-the-matrix-stream payoff of the batched path):
 
     PYTHONPATH=src python -m benchmarks.bench_pcg --batch-sizes 1,4,16
+
+``--fused-compare`` times the fused solver-iteration hot path against the
+reference op-per-line path on the same matrices (plus the modeled
+vector-HBM traffic from ``substrate.modeled_vector_traffic``), and
+``--json FILE`` writes the whole run as a machine-readable payload -- the
+perf-trajectory record CI archives per commit (see also
+``benchmarks.run --json``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 import scipy.sparse as sp
 
 from repro.core.engine import AzulEngine
+from repro.core.substrate import modeled_vector_traffic
 from repro.data.matrices import suite
 
 
@@ -51,10 +60,64 @@ def run() -> list[tuple[str, float, str]]:
     return rows
 
 
+def run_fused_compare(
+    iters: int = 60, matrices=("lap2d_32", "banded_1k", "rspd_1k"),
+) -> tuple[list[tuple[str, float, str]], list[dict]]:
+    """Fused solver-iteration hot path vs the reference op-per-line path.
+
+    Per matrix: per-iteration wall time for both paths, the residual-trace
+    agreement (they run the same recurrence, reassociated), and the modeled
+    vector-HBM traffic reduction the fusion buys at this matrix's ELL
+    width.  On CPU the fused path runs the fused jnp composition (or
+    interpret-mode kernel bodies under ``REPRO_KERNEL_MODE=interpret``);
+    compiled-kernel timings come from TPU runs of the same entry point.
+    """
+    rows, payload = [], []
+    rng = np.random.default_rng(0)
+    mats = suite("small")
+    for name in matrices:
+        m = mats[name]
+        a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+        b = a @ rng.standard_normal(m.shape[0])
+        eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
+
+        def timed(fused):
+            eng.solve(b, method="pcg", iters=iters, fused=fused)   # warm jit
+            t0 = time.perf_counter()
+            x, norms = eng.solve(b, method="pcg", iters=iters, fused=fused)
+            return (time.perf_counter() - t0) / iters, x, norms
+
+        dt_f, x_f, n_f = timed(True)
+        dt_u, x_u, n_u = timed(False)
+        trace_diff = float(np.abs((n_f - n_u) / (np.abs(n_u) + 1e-300)).max())
+        model = modeled_vector_traffic(eng.ell.width)
+        rows.append((
+            f"pcg_fused_{name}", dt_f * 1e6,
+            f"unfused_us={dt_u * 1e6:.1f} speedup={dt_u / dt_f:.2f}x "
+            f"trace_reldiff={trace_diff:.2e} "
+            f"modeled_traffic_reduction={model['reduction']:.2f}x",
+        ))
+        payload.append({
+            "matrix": name,
+            "n": int(m.shape[0]),
+            "nnz": int(m.nnz),
+            "ell_width": int(eng.ell.width),
+            "iters": int(iters),
+            "us_per_iter_fused": round(dt_f * 1e6, 3),
+            "us_per_iter_unfused": round(dt_u * 1e6, 3),
+            "speedup": round(dt_u / dt_f, 4),
+            "trace_rel_maxdiff": trace_diff,
+            "x_maxdiff": float(np.abs(x_f - x_u).max()),
+            "modeled_traffic": model,
+        })
+    return rows, payload
+
+
 def run_batch_sweep(batch_sizes, iters: int = 60,
-                    matrices=("lap2d_32", "rspd_1k")) -> list[tuple[str, float, str]]:
-    """Multi-RHS sweep: batched (k, n) PCG vs k sequential solves."""
-    rows = []
+                    matrices=("lap2d_32", "rspd_1k")):
+    """Multi-RHS sweep: batched (k, n) PCG vs k sequential solves.
+    Returns (csv_rows, json_payload)."""
+    rows, payload = [], []
     rng = np.random.default_rng(0)
     mats = suite("small")
     for name in matrices:
@@ -87,7 +150,34 @@ def run_batch_sweep(batch_sizes, iters: int = 60,
                 f"rhs_per_s={k/dt_batch:.2f} seq_rhs_per_s={k/dt_seq:.2f} "
                 f"speedup={dt_seq/dt_batch:.2f}x batch_vs_seq_maxerr={err:.2e}",
             ))
-    return rows
+            payload.append({
+                "matrix": name,
+                "k": int(k),
+                "iters": int(iters),
+                "us_per_iter_per_rhs": round(dt_batch / k / iters * 1e6, 3),
+                "rhs_per_s_batched": round(k / dt_batch, 4),
+                "rhs_per_s_sequential": round(k / dt_seq, 4),
+                "speedup_vs_sequential": round(dt_seq / dt_batch, 4),
+                "batch_vs_seq_maxerr": err,
+            })
+    return rows, payload
+
+
+def collect_json(fused_payload, batch_payload) -> dict:
+    """Assemble the machine-readable perf-trajectory record (BENCH_pcg.json
+    schema: see README "Performance")."""
+    import jax
+
+    from repro.kernels import ops
+
+    return {
+        "schema": "bench_pcg/v1",
+        "backend": jax.default_backend(),
+        "kernel_mode": ops.backend_mode(),
+        "x64": bool(jax.config.jax_enable_x64),
+        "fused_vs_unfused": fused_payload,
+        "batch_sweep": batch_payload,
+    }
 
 
 def main(argv=None) -> int:
@@ -99,15 +189,31 @@ def main(argv=None) -> int:
                     help="comma-separated multi-RHS sweep, e.g. 1,4,16")
     ap.add_argument("--iters", type=int, default=60)
     ap.add_argument("--skip-convergence", action="store_true",
-                    help="only run the batch sweep")
+                    help="only run the batch sweep / fused compare")
+    ap.add_argument("--fused-compare", action="store_true",
+                    help="time the fused hot path vs the reference path")
+    ap.add_argument("--matrices", default="lap2d_32,banded_1k,rspd_1k",
+                    help="suite matrices for --fused-compare")
+    ap.add_argument("--json", default="",
+                    help="write the machine-readable payload to this file")
     args = ap.parse_args(argv)
 
     rows = [] if args.skip_convergence else run()
+    fused_payload, batch_payload = [], []
+    if args.fused_compare or args.json:
+        mats = tuple(s for s in args.matrices.split(",") if s)
+        frows, fused_payload = run_fused_compare(iters=args.iters, matrices=mats)
+        rows += frows
     if args.batch_sizes:
         ks = [int(x) for x in args.batch_sizes.split(",")]
-        rows += run_batch_sweep(ks, iters=args.iters)
+        brows, batch_payload = run_batch_sweep(ks, iters=args.iters)
+        rows += brows
     for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collect_json(fused_payload, batch_payload), f, indent=1)
+        print(f"# wrote {args.json}")
     return 0
 
 

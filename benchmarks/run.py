@@ -7,10 +7,21 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline tables (dry-run derived)
 live in EXPERIMENTS.md and are produced by repro.roofline, not here.
+
+``--json BENCH_pcg.json`` additionally records the PCG perf trajectory
+(fused vs unfused per-iteration timing, multi-RHS batch sweep, modeled
+vector-HBM traffic) as machine-readable JSON -- the artifact CI archives
+per commit.  ``--smoke`` shrinks everything to tiny sizes/iterations so the
+CI job (interpret-mode kernels on CPU) finishes in minutes:
+
+    PYTHONPATH=src REPRO_KERNEL_MODE=interpret \
+        python -m benchmarks.run --smoke --json BENCH_pcg.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
@@ -19,15 +30,52 @@ import jax
 jax.config.update("jax_enable_x64", True)  # solver benches verify at f64
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write the bench_pcg payload (perf trajectory) here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes/iters: CI smoke of the whole harness")
+    ap.add_argument("--batch-sizes", default="1,4",
+                    help="multi-RHS sweep for the JSON payload")
+    args = ap.parse_args(argv)
+
     from . import bench_kernels, bench_pcg, bench_spmv, bench_sptrsv
 
     ok = True
     print("name,us_per_call,derived")
-    for mod in (bench_spmv, bench_sptrsv, bench_pcg, bench_kernels):
+    modules = (bench_kernels,) if args.smoke else (
+        bench_spmv, bench_sptrsv, bench_pcg, bench_kernels,
+    )
+    for mod in modules:
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            ok = False
+            traceback.print_exc()
+
+    if args.json:
+        try:
+            iters = 5 if args.smoke else 60
+            matrices = ("lap2d_32",) if args.smoke else (
+                "lap2d_32", "banded_1k", "rspd_1k",
+            )
+            ks = [int(x) for x in args.batch_sizes.split(",") if x]
+            if args.smoke:
+                ks = ks[:2]
+            frows, fused_payload = bench_pcg.run_fused_compare(
+                iters=iters, matrices=matrices
+            )
+            brows, batch_payload = bench_pcg.run_batch_sweep(
+                ks, iters=iters, matrices=matrices[:1]
+            )
+            for name, us, derived in frows + brows:
+                print(f"{name},{us:.1f},{derived}")
+            with open(args.json, "w") as f:
+                json.dump(bench_pcg.collect_json(fused_payload, batch_payload),
+                          f, indent=1)
+            print(f"# wrote {args.json}")
         except Exception:
             ok = False
             traceback.print_exc()

@@ -35,10 +35,20 @@ blocks stay device-resident and untouched; only (k, u) stacked vector
 shards traverse the NoC (one message per hop regardless of k), and the
 per-tile compute switches to the multi-RHS ``spmm`` path that amortizes the
 single matrix stream over all k right-hand sides.
+
+Fused hot path: the engine threads a solver *substrate*
+(:mod:`repro.core.substrate`) through ``solve`` -- fused Pallas kernels
+(SpMV with the CG denominator emitted in the matrix stream; one-pass
+x/r/z update with both dots) locally, and a collective-fused shard
+substrate (single stacked psum for [rr, rz]) under ``shard_map``.  The
+``fused`` knob ("auto" default / True / False) applies wherever the
+method/preconditioner pair supports it (pcg/cg/pcg_pipe with jacobi or
+none); unsupported combinations fall back to the reference path.
 """
 
 from __future__ import annotations
 
+import hashlib
 from typing import Callable
 
 import numpy as np
@@ -53,6 +63,7 @@ from .levels import build_schedule
 from .partition import plan_1d, plan_2d, tile_csr
 from .precond import ic0 as host_ic0
 from .spops import spmm_ell_padded, spmv_ell_padded
+from .substrate import fused_local_substrate, fused_shard_substrate
 
 __all__ = ["AzulEngine", "local_sptrsv"]
 
@@ -102,13 +113,31 @@ def local_sptrsv(cols, vals, diag_inv, b, sched_rows):
 
 
 def _host_diag(m: CSR, r0: int, r1: int) -> np.ndarray:
+    """Diagonal entries of rows [r0, r1) (0.0 where absent), host side.
+
+    Vectorized: one boolean compare over the row range's nnz slice instead
+    of the former per-entry Python loop -- this is a task-compiler hot spot
+    (called per engine build and per SpTRSV compile; the loop was O(nnz)
+    interpreted bytecode, ~two orders of magnitude slower at suite sizes).
+    """
+    indptr = np.asarray(m.indptr)
+    lo, hi = int(indptr[r0]), int(indptr[r1])
+    rows = np.repeat(np.arange(r0, r1), np.diff(indptr[r0 : r1 + 1]))
+    idx = np.asarray(m.indices)[lo:hi]
+    sel = idx == rows
     d = np.zeros(r1 - r0, dtype=np.float64)
-    for r in range(r0, r1):
-        s, e = int(m.indptr[r]), int(m.indptr[r + 1])
-        for p in range(s, e):
-            if int(m.indices[p]) == r:
-                d[r - r0] = m.data[p]
+    d[rows[sel] - r0] = np.asarray(m.data)[lo:hi][sel]
     return d
+
+
+def _csr_fingerprint(m: CSR) -> tuple:
+    """Content-based cache key for a host CSR matrix.  ``id()`` keys are
+    unsafe here: CPython reuses addresses after GC, so a *fresh* matrix
+    could silently hit a stale compiled entry."""
+    h = hashlib.sha1()
+    for a in (m.indptr, m.indices, m.data):
+        h.update(np.ascontiguousarray(a).tobytes())
+    return (tuple(m.shape), h.hexdigest())
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +158,11 @@ class AzulEngine:
                                  ("data",) x ("model",); multi-pod solvers
                                  pass row_axes=("pod", "data").
     precond : "jacobi" | "block_ic0" | "none"
+    fused : "auto" | True | False
+        Fused-kernel hot path (see module docstring).  "auto"/True enable
+        it wherever the method/preconditioner support it; False forces the
+        reference op-per-line path everywhere.  Per-solve override:
+        ``solve(..., fused=...)``.
     """
 
     def __init__(
@@ -143,9 +177,13 @@ class AzulEngine:
         dtype=np.float32,
         row_pad: int = 8,
         width_pad: int = 8,
+        fused="auto",
     ):
         if a.shape[0] != a.shape[1]:
             raise ValueError("engine expects a square matrix")
+        if fused not in ("auto", True, False):
+            raise ValueError(f"fused must be 'auto', True or False, got {fused!r}")
+        self.fused = fused
         self.a = a
         self.n = a.shape[0]
         self.mesh = mesh
@@ -320,12 +358,12 @@ class AzulEngine:
                 cols[s, :rp, :ww] = np.asarray(e.cols)
                 vals[s, :rp, :ww] = np.asarray(e.vals)
                 dd = np.zeros(rows_p, np.float64)
-                ee_cols = np.asarray(e.cols)
-                ee_vals = np.asarray(e.vals)
-                for r in range(min(rp, rows_p)):
-                    sel = (ee_cols[r] == r) & (ee_vals[r] != 0)
-                    if sel.any():
-                        dd[r] = ee_vals[r][sel][0]
+                rpm = min(rp, rows_p)
+                ee_cols = np.asarray(e.cols)[:rpm]
+                ee_vals = np.asarray(e.vals)[:rpm]
+                hit = (ee_cols == np.arange(rpm)[:, None]) & (ee_vals != 0)
+                has = hit.any(axis=1)
+                dd[:rpm][has] = ee_vals[np.arange(rpm)[has], np.argmax(hit, axis=1)[has]]
                 dinv[s] = np.where(dd == 0, 1.0, 1.0 / np.where(dd == 0, 1.0, dd))
                 sr = np.asarray(sc.rows)
                 sr = np.where(sr >= sc.n, rows_p, sr)
@@ -380,8 +418,13 @@ class AzulEngine:
         col_axis = col_axes[0] if len(col_axes) == 1 else col_axes
 
         def _local(cols_loc, vals_loc, xj):
+            from ..kernels import ops
             if xj.ndim == 2:                              # (k, bc) stacked
+                if ops.kernels_active():                  # Pallas path (TPU)
+                    return ops.ell_spmm(cols_loc[0], vals_loc[0], xj.T).T
                 return spmm_ell_padded(cols_loc[0], vals_loc[0], xj)
+            if ops.kernels_active():
+                return ops.ell_spmv(cols_loc[0], vals_loc[0], xj)
             return spmv_ell_padded(cols_loc[0], vals_loc[0], xj)
 
         if mode == "2d":
@@ -454,17 +497,34 @@ class AzulEngine:
         y = self._compiled[key](self.to_device_vec(x), self.cols, self.vals)
         return self.from_device_vec(y)
 
-    def solve(self, b, method: str = "pcg", iters: int = 200, x0=None):
+    def _resolve_fused(self, method: str, fused) -> bool:
+        """Map the tri-state knob to a concrete bool for this method.  Both
+        "auto" and True mean "fused wherever supported": pcg/cg with
+        jacobi/none preconditioning everywhere, plus pcg_pipe in local mode
+        (its substrate supplies the kernel-backed matvec; the distributed
+        CG-CG recurrence already fuses its reductions, so there a substrate
+        would change nothing and we report the path as unfused)."""
+        f = self.fused if fused is None else fused
+        supported = self.precond in ("jacobi", "none") and (
+            method in ("pcg", "cg")
+            or (method == "pcg_pipe" and self.mode == "local")
+        )
+        return supported if f in ("auto", True) else False
+
+    def solve(self, b, method: str = "pcg", iters: int = 200, x0=None, fused=None):
         """Solve A x = b; returns (x_global numpy, res_norms numpy).
 
         ``b`` may be (n,) or stacked (k, n) -- the batched form solves all k
         right-hand sides against the one device-resident matrix in a single
-        distributed program (per-RHS traces come back as (iters + 1, k))."""
+        distributed program (per-RHS traces come back as (iters + 1, k)).
+        ``fused`` overrides the engine-level knob for this solve."""
         b = np.asarray(b)
+        use_fused = self._resolve_fused(method, fused)
         if self.mode == "local":
-            res = self._solve_local(method, iters, b, x0)
+            res = self._solve_local(method, iters, b, x0, use_fused)
             return np.asarray(res.x)[..., : self.n], np.asarray(res.res_norms)
-        fn = self._solve_compiled(method, iters, batched=b.ndim == 2)
+        fn = self._solve_compiled(method, iters, batched=b.ndim == 2,
+                                  fused=use_fused)
         bd = self.to_device_vec(b)
         x0 = np.zeros(b.shape) if x0 is None else np.asarray(x0)
         if b.ndim == 2 and x0.ndim == 1:
@@ -475,7 +535,7 @@ class AzulEngine:
         x, norms = fn(bd, x0d)
         return self.from_device_vec(x), np.asarray(norms)
 
-    def _solve_local(self, method, iters, b, x0):
+    def _solve_local(self, method, iters, b, x0, fused=False):
         b = jnp.asarray(np.asarray(b), self.dtype)
         b_pad = jnp.zeros(b.shape[:-1] + (self.n_pad,), self.dtype)
         b_pad = b_pad.at[..., : self.n].set(b)
@@ -492,13 +552,23 @@ class AzulEngine:
             return spmv_ell_padded(ell.cols, ell.vals, x)
 
         dinv = self._dinv_pad
+        sub = None
+        if fused:
+            sub = fused_local_substrate(
+                ell.cols, ell.vals,
+                dinv=dinv if self.precond == "jacobi" else None,
+            )
         if method == "jacobi":
             return solvers.jacobi(mv, dinv, b_pad, x0=x0_pad, iters=iters)
         if method == "cg":
-            return solvers.cg(mv, b_pad, x0=x0_pad, iters=iters)
+            return solvers.cg(
+                mv, b_pad, x0=x0_pad, iters=iters,
+                substrate=fused_local_substrate(ell.cols, ell.vals) if fused else None,
+            )
         if method == "pcg_pipe":
             ps = (lambda r: r * dinv) if self.precond == "jacobi" else (lambda r: r)
-            return solvers.pcg_pipelined(mv, b_pad, psolve=ps, x0=x0_pad, iters=iters)
+            return solvers.pcg_pipelined(mv, b_pad, psolve=ps, x0=x0_pad,
+                                         iters=iters, substrate=sub)
         if method == "pcg":
             if self.precond == "block_ic0":
                 from .precond import apply_ic0
@@ -515,11 +585,13 @@ class AzulEngine:
                 ps = lambda r: r * dinv
             else:
                 ps = lambda r: r
-            return solvers.pcg(mv, b_pad, psolve=ps, x0=x0_pad, iters=iters)
+            return solvers.pcg(mv, b_pad, psolve=ps, x0=x0_pad, iters=iters,
+                               substrate=sub)
         raise ValueError(method)
 
-    def _solve_compiled(self, method, iters, batched: bool = False):
-        key = (method, iters, self.precond, batched)
+    def _solve_compiled(self, method, iters, batched: bool = False,
+                        fused: bool = False):
+        key = (method, iters, self.precond, batched, fused)
         if key in self._compiled:
             return self._compiled[key]
 
@@ -547,6 +619,7 @@ class AzulEngine:
             extra_specs = (s3, s3, s2, s3, s3, s3, s2, s3, vec)
 
         dot2 = self._dot2()
+        psum_axes = self._all_axes
 
         def prog(b_loc, x0_loc, cols_loc, vals_loc, *extra):
             amv = lambda x: mv(x, cols_loc, vals_loc)
@@ -592,8 +665,18 @@ class AzulEngine:
                         return jax.vmap(ps1)(r_loc) if r_loc.ndim == 2 else ps1(r_loc)
                 else:
                     ps = lambda r: r
+                sub = None
+                if fused and precond in ("jacobi", "none"):
+                    # collective-fused shard substrate: one stacked psum
+                    # carries [rr, rz]; the local update is the one-pass
+                    # cg_update kernel on this tile's vector shard.
+                    sub = fused_shard_substrate(
+                        amv,
+                        extra[0] if precond == "jacobi" else None,
+                        lambda s: lax.psum(s, psum_axes),
+                    )
                 res = solvers.pcg(amv, b_loc, psolve=ps, x0=x0_loc,
-                                  iters=iters, dot=dot)
+                                  iters=iters, dot=dot, substrate=sub)
             return res.x, res.res_norms
 
         f = _shard_map(
@@ -620,7 +703,7 @@ class AzulEngine:
         """
         if self.mode != "2d" or self.pr != self.pc:
             raise ValueError("distributed SpTRSV needs a square 2d engine")
-        key = id(l_csr)
+        key = _csr_fingerprint(l_csr)
         if key in self._trsv_cache:
             return self._trsv_cache[key]
 

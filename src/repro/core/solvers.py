@@ -23,6 +23,15 @@ is exactly the amortize-the-matrix-stream regime the batched kernels
 (``ell_spmm``) exploit.  Residual traces become ``(iters + 1, k)`` and
 iteration counts ``(k,)``.
 
+Fused hot path: ``pcg``/``pcg_pipelined`` accept a ``substrate``
+(:mod:`repro.core.substrate`) bundling fused implementations of the
+iteration's ops -- SpMV with the dot(p, Ap) denominator emitted from the
+matrix stream, and a one-pass vector update producing x', r', z and both
+dots.  With ``substrate=None`` a reference substrate is composed from the
+``matvec``/``psolve``/``dot`` arguments, reproducing the historical unfused
+op sequence exactly; the engine injects fused substrates (Pallas kernels
+locally, collective-fused shard substrates under ``shard_map``).
+
 Convergence bookkeeping (residual-norm trace) is carried through the scan so
 benchmarks can plot paper-style convergence curves without re-running.
 """
@@ -34,6 +43,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from .substrate import SolverSubstrate, reference_substrate
 
 __all__ = ["SolveResult", "cg", "pcg", "pcg_pipelined", "jacobi", "pcg_tol"]
 
@@ -71,9 +82,11 @@ def cg(
     x0: Vec | None = None,
     iters: int = 100,
     dot: Dot = _default_dot,
+    substrate: SolverSubstrate | None = None,
 ) -> SolveResult:
     """Conjugate gradients, fixed iteration count (scan)."""
-    return pcg(matvec, b, x0=x0, iters=iters, psolve=lambda r: r, dot=dot)
+    return pcg(matvec, b, x0=x0, iters=iters, psolve=lambda r: r, dot=dot,
+               substrate=substrate)
 
 
 def pcg(
@@ -83,6 +96,7 @@ def pcg(
     x0: Vec | None = None,
     iters: int = 100,
     dot: Dot = _default_dot,
+    substrate: SolverSubstrate | None = None,
 ) -> SolveResult:
     """Preconditioned CG (fixed iterations, residual trace carried).
 
@@ -91,27 +105,33 @@ def pcg(
     exact op mix Azul keeps on-chip.  ``b`` may be ``(k, n)``: the per-RHS
     alpha/beta arrive as ``(k, 1)`` from ``dot`` and broadcast, so the k
     solves advance in lockstep off one matvec per iteration.
+
+    The iteration is phrased against a :class:`SolverSubstrate`: with
+    ``substrate=None`` a reference substrate wraps the ``matvec``/
+    ``psolve``/``dot`` arguments (the historical unfused sequence); a fused
+    substrate runs the same recurrence with the denominator emitted from
+    the matrix stream and the three vector updates + two dots in one pass.
+    Only ``p = z + beta p`` stays a separate op -- beta depends on the rz
+    this iteration's update just produced.
     """
+    sub = substrate if substrate is not None else reference_substrate(
+        matvec, psolve, dot
+    )
     x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - matvec(x)
-    z = psolve(r)
+    r = b - sub.matvec(x)
+    z = sub.psolve(r)
     p = z
-    rz = dot(r, z)
-    r0 = _norm(dot(r, r))
+    rz = sub.dot(r, z)
+    r0 = _norm(sub.dot(r, r))
 
     def step(carry, _):
         x, r, p, rz = carry
-        ap = matvec(p)
-        denom = dot(p, ap)
+        ap, denom = sub.matvec_dot(p)
         alpha = rz / jnp.where(denom == 0, 1.0, denom)
-        x = x + alpha * p
-        r = r - alpha * ap
-        z = psolve(r)
-        rz_new = dot(r, z)
+        x, r, z, rr, rz_new = sub.update(alpha, x, r, p, ap)
         beta = rz_new / jnp.where(rz == 0, 1.0, rz)
         p = z + beta * p
-        rn = _norm(dot(r, r))
-        return (x, r, p, rz_new), rn
+        return (x, r, p, rz_new), _norm(rr)
 
     (x, r, p, rz), norms = lax.scan(step, (x, r, p, rz), None, length=iters)
     return SolveResult(x, jnp.concatenate([r0[None], norms]), _iters_like(b, iters))
@@ -125,6 +145,7 @@ def pcg_pipelined(
     iters: int = 100,
     dot2: Callable[[Vec, Vec, Vec, Vec], jnp.ndarray] | None = None,
     dot: Dot = _default_dot,
+    substrate: SolverSubstrate | None = None,
 ) -> SolveResult:
     """Chronopoulos-Gear pipelined PCG: ONE fused reduction per iteration.
 
@@ -137,8 +158,12 @@ def pcg_pipelined(
     exact arithmetic (Tiwari & Vadhiyar 2022, the paper's ref [5]).
 
     ``dot2(a1, b1, a2, b2)`` returns stacked [dot(a1,b1), dot(a2,b2)] with
-    a single collective; the engine injects a psum-of-stack version.
+    a single collective; the engine injects a psum-of-stack version.  A
+    ``substrate`` supplies kernel-backed ``matvec``/``psolve`` (the CG-CG
+    recurrence already fuses its reductions, so only those two ops differ).
     """
+    if substrate is not None:
+        matvec, psolve = substrate.matvec, substrate.psolve
     if dot2 is None:
         def dot2(a1, b1, a2, b2):
             return jnp.stack([dot(a1, b1), dot(a2, b2)])

@@ -1,0 +1,174 @@
+"""Solver substrates: fused-kernel vs. reference implementations of the
+PCG iteration's hot ops.
+
+A *substrate* bundles the four callables one PCG iteration consumes:
+
+  ``matvec(v)``                 -- y = A v
+  ``psolve(r)``                 -- z = M^-1 r
+  ``dot(u, v)``                 -- (global) dot product
+  ``matvec_dot(p)``             -- (A p, dot(p, A p)) fused: the CG
+                                   denominator emitted from the matrix
+                                   stream itself (kernels.spmv_dot)
+  ``update(alpha, x, r, p, ap)``-- (x', r', z, rr, rz) fused one-pass CG
+                                   vector update (kernels.vecops.cg_update)
+
+``solvers.pcg`` is written against this interface; which implementation
+backs it is a deployment decision:
+
+* ``reference_substrate`` composes the caller's matvec/psolve/dot with
+  plain jnp -- bit-identical to the historical unfused iteration.  This is
+  the oracle the fused paths are property-verified against.
+* ``fused_local_substrate`` runs the Pallas fused kernels on a
+  device-resident padded-ELL operator (TPU compiled; interpret mode for CPU
+  validation via ``kernels.ops.backend_mode``).  On backends where the
+  kernels are inactive it falls back to the *fused jnp composition* --
+  the same arithmetic in the same order, so fused results are
+  backend-independent.
+* ``fused_shard_substrate`` is the ``shard_map`` flavor the engine builds
+  per tile: local fused update + ONE stacked psum for [rr, rz] (the
+  reduction-fusion trick of pipelined CG applied to standard PCG), and the
+  NoC matvec with a psum'd denominator.
+
+The traffic model behind the fusion (see README "Performance") is exposed
+as :func:`modeled_vector_traffic` so benchmarks can record it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import spops
+
+__all__ = [
+    "SolverSubstrate",
+    "reference_substrate",
+    "fused_local_substrate",
+    "fused_shard_substrate",
+    "modeled_vector_traffic",
+]
+
+
+def _dot(u, v):
+    """Solver dot convention: () for (n,), (k, 1) for (k, n) batches."""
+    return jnp.sum(u * v, axis=-1, keepdims=u.ndim > 1)
+
+
+class SolverSubstrate(NamedTuple):
+    """The per-iteration op bundle PCG runs against (see module docstring)."""
+
+    kind: str
+    matvec: Callable
+    psolve: Callable
+    dot: Callable
+    matvec_dot: Callable
+    update: Callable
+
+
+def reference_substrate(matvec, psolve, dot=None) -> SolverSubstrate:
+    """Unfused jnp composition -- the historical PCG op sequence, used as
+    the verification oracle and for preconditioners without a fused path."""
+    dot = dot or _dot
+
+    def matvec_dot(p):
+        ap = matvec(p)
+        return ap, dot(p, ap)
+
+    def update(alpha, x, r, p, ap):
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = psolve(r)
+        rz = dot(r, z)
+        rr = dot(r, r)
+        return x, r, z, rr, rz
+
+    return SolverSubstrate("reference", matvec, psolve, dot, matvec_dot, update)
+
+
+def fused_local_substrate(cols, vals, dinv=None) -> SolverSubstrate:
+    """Fused kernels over a local (single-device) padded-ELL operator.
+
+    ``cols``/``vals``: (rows_p, w) square padded ELL; ``dinv``: (rows_p,)
+    Jacobi inverse diagonal, or None for an identity preconditioner.
+    Vectors are (rows_p,) or batched (k, rows_p) in solver layout; the
+    batched kernel calls transpose to the (n, k) kernel layout only when
+    the Pallas path is active.
+    """
+
+    def matvec(v):
+        if v.ndim == 2:
+            if ops.kernels_active():
+                return ops.ell_spmm(cols, vals, v.T).T
+            return spops.spmm_ell_padded(cols, vals, v)
+        return ops.ell_spmv(cols, vals, v)
+
+    def psolve(r):
+        return r * dinv if dinv is not None else r
+
+    def matvec_dot(p):
+        if p.ndim == 2:
+            if ops.kernels_active():
+                y, pap = ops.ell_spmm_dot(cols, vals, p.T)
+                return y.T, pap[:, None]
+            y = spops.spmm_ell_padded(cols, vals, p)
+            return y, _dot(p, y)
+        return ops.ell_spmv_dot(cols, vals, p)
+
+    def update(alpha, x, r, p, ap):
+        return ops.cg_update(alpha, x, r, p, ap, dinv)
+
+    return SolverSubstrate("fused", matvec, psolve, _dot, matvec_dot, update)
+
+
+def fused_shard_substrate(matvec, dinv, psum) -> SolverSubstrate:
+    """Per-tile substrate for the engine's ``shard_map`` programs.
+
+    ``matvec`` is the NoC-composed distributed SpMV closure (collectives
+    inside); ``dinv`` the local (u,) shard of the Jacobi inverse diagonal
+    (or None); ``psum`` the engine's all-axes psum.  The fused win here is
+    collective fusion: the one-pass update emits local [rr, rz] partials
+    that ride a SINGLE stacked psum instead of two back-to-back
+    latency-bound reductions (plus the local Pallas kernel on TPU).
+    """
+
+    def dot(u, v):
+        return psum(_dot(u, v))
+
+    def psolve(r):
+        return r * dinv if dinv is not None else r
+
+    def matvec_dot(p):
+        ap = matvec(p)
+        return ap, psum(_dot(p, ap))
+
+    def update(alpha, x, r, p, ap):
+        x, r, z, rr, rz = ops.cg_update(alpha, x, r, p, ap, dinv)
+        s = psum(jnp.stack([rr, rz]))      # ONE collective for both dots
+        return x, r, z, s[0], s[1]
+
+    return SolverSubstrate("fused_shard", matvec, psolve, dot, matvec_dot, update)
+
+
+def modeled_vector_traffic(ell_width: float) -> dict:
+    """Vector words moved HBM<->VMEM per Jacobi-PCG iteration, per RHS, in
+    units of n (the README "Performance" model; matrix values/cols stream
+    identically in both paths and are excluded).
+
+    Unfused (one XLA op per solver line, x gathered per nonzero from HBM):
+      SpMV gather w + ap write 1; dot(p,ap) 2; x-axpy 3; r-axpy 3;
+      z = dinv*r 3; dot(r,z) 2; dot(r,r) 1; p-update 3   -> 18 + w.
+    Fused (x VMEM-resident in the SpMV kernel, dots emitted in-stream):
+      spmv_dot 2 (p in, ap out); cg_update 8 (x,r,p,ap,dinv in; x,r,z
+      out); p-update 3 (beta depends on rz, so it cannot join the same
+      pass)                                               -> 13.
+    """
+    unfused = 18.0 + float(ell_width)
+    fused = 13.0
+    return {
+        "ell_width": float(ell_width),
+        "unfused_words_per_n": unfused,
+        "fused_words_per_n": fused,
+        "reduction": round(unfused / fused, 3),
+    }

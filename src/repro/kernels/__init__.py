@@ -1,10 +1,12 @@
 """Pallas TPU kernels for the Azul engine's compute hot-spots.
 
 Modules:
-  ell_spmv   -- ELLPACK SpMV (VPU gather path), the per-tile solver hot loop
+  ell_spmv   -- ELLPACK SpMV/SpMM (VPU gather path), the per-tile hot loop
+  spmv_dot   -- fused SpMV + dot: the CG denominator in the matrix stream
   bcsr_spmm  -- block-sparse x multi-RHS dense (MXU path, scalar prefetch)
   sptrsv     -- level-wavefront triangular-solve step
-  vecops     -- fused axpy+dot CG pipeline stage
+  vecops     -- fused CG vector stages: axpy+dot and the one-pass cg_update
+  autotune   -- tile-size autotuner with a persistent JSON cache
   ops        -- jit'd dispatch wrappers (TPU kernel / interpret / jnp ref)
   ref        -- pure-jnp oracles (functional-verification testbench)
 """

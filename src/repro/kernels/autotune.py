@@ -1,0 +1,142 @@
+"""Tile-size autotuner for the Pallas kernels, with a persistent JSON cache.
+
+The kernels' default tiles (128 rows x 128 width, 1024-element vector tiles)
+are good generic TPU choices, but the best tile depends on the matrix shape
+(VMEM budget vs. pipeline depth) and the backend.  This module measures
+candidate tilings for an op at a concrete shape and records the winner in a
+JSON cache keyed by ``(op, shape, dtype, backend)``; the dispatch wrappers
+in ``ops.py`` consult the cache whenever the caller does not pin tiles
+explicitly, so a one-time ``bench_kernels --autotune`` run speeds up every
+later solve at the same shapes.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.  Writes are atomic (tmp + rename); the
+cache is a flat ``{key: {"tiles": {...}, "us": float}}`` map so it diffs
+cleanly and can be committed per deployment if desired.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+__all__ = [
+    "cache_path", "clear_memo", "make_key", "lookup", "record",
+    "tile_candidates", "autotune",
+]
+
+_ENV = "REPRO_AUTOTUNE_CACHE"
+_memo: dict | None = None
+_memo_path: str | None = None
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        _ENV, os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+    )
+
+
+def _load() -> dict:
+    global _memo, _memo_path
+    path = cache_path()
+    if _memo is not None and _memo_path == path:
+        return _memo
+    try:
+        with open(path) as f:
+            _memo = json.load(f)
+    except (OSError, ValueError):
+        _memo = {}
+    _memo_path = path
+    return _memo
+
+
+def clear_memo() -> None:
+    """Drop the in-process cache memo (tests; after external cache edits)."""
+    global _memo, _memo_path
+    _memo, _memo_path = None, None
+
+
+def _save(cache: dict) -> None:
+    path = cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+def make_key(op: str, shape: Iterable[int], dtype, backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    dt = np.dtype(dtype).name  # normalize np.dtype / jnp scalar types / strs
+    return f"{op}|{'x'.join(str(int(s)) for s in shape)}|{dt}|{backend}"
+
+
+def lookup(op: str, shape: Iterable[int], dtype, backend: str | None = None) -> dict | None:
+    """Cached tile dict for this op/shape/dtype/backend, or None."""
+    ent = _load().get(make_key(op, shape, dtype, backend))
+    return dict(ent["tiles"]) if ent else None
+
+
+def record(op: str, shape, dtype, tiles: dict, us: float,
+           backend: str | None = None) -> None:
+    cache = _load()
+    cache[make_key(op, shape, dtype, backend)] = {
+        "tiles": {k: int(v) for k, v in tiles.items()}, "us": round(float(us), 3),
+    }
+    _save(cache)
+
+
+def tile_candidates(total: int, quantum: int = 8, cap: int = 512) -> list[int]:
+    """Divisors of ``total`` that are multiples of ``quantum`` (plus
+    ``total`` itself if small) -- the valid tile sizes for one axis."""
+    out = [d for d in range(quantum, min(total, cap) + 1, quantum) if total % d == 0]
+    if not out:
+        out = [total]
+    return out
+
+
+def autotune(
+    op: str,
+    shape: Iterable[int],
+    dtype,
+    candidates: Iterable[dict],
+    build: Callable[..., Callable[[], object]],
+    reps: int = 5,
+    backend: str | None = None,
+) -> dict | None:
+    """Time each candidate tiling and persist the winner.
+
+    ``build(**tiles)`` returns a zero-arg callable running the op with that
+    tiling; candidates that fail to build/run (invalid tiles for the shape,
+    VMEM overflow) are skipped.  Returns the winning tile dict (also
+    recorded in the cache) or None if nothing ran.
+    """
+    best_tiles, best_us = None, float("inf")
+    for tiles in candidates:
+        try:
+            f = build(**tiles)
+            jax.block_until_ready(f())            # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = f()
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / reps * 1e6
+        except Exception:
+            continue
+        if us < best_us:
+            best_tiles, best_us = tiles, us
+    if best_tiles is not None:
+        record(op, shape, dtype, best_tiles, best_us, backend=backend)
+    return best_tiles

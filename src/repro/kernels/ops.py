@@ -5,28 +5,46 @@ backend (TPU, or interpret mode for CPU validation) and otherwise falls
 back to the jnp oracle in ``ref.py`` -- the two are allclose-verified in
 tests, so the choice is purely a performance/backend decision.
 
-``use_pallas(mode)``: "auto" (TPU -> compiled kernel, CPU -> jnp),
-"interpret" (kernel body in Python -- CI validation), "never".
+``backend_mode(mode)``: "auto" (TPU -> compiled kernel, CPU -> jnp),
+"interpret" (kernel body in Python -- CI validation), "never".  The initial
+mode can be set with the ``REPRO_KERNEL_MODE`` environment variable (used
+by the CI bench smoke job to exercise kernels on CPU runners).
+
+Tile selection: explicit tile args always win; otherwise the wrappers
+consult the autotune cache (``autotune.py``, populated by
+``bench_kernels --autotune``) for this op/shape/dtype/backend, and finally
+fall back to the kernel defaults clamped to valid divisors of the shape.
 """
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .ell_spmv import ell_spmv as _ell_spmv_pallas
 from .ell_spmv import ell_spmm as _ell_spmm_pallas
+from .ell_spmv import DEFAULT_TM, DEFAULT_TW
 from .bcsr_spmm import bcsr_spmm as _bcsr_spmm_pallas
+from .spmv_dot import ell_spmv_dot as _ell_spmv_dot_pallas
+from .spmv_dot import ell_spmm_dot as _ell_spmm_dot_pallas
 from .sptrsv import sptrsv_level_step as _sptrsv_step_pallas
+from .sptrsv import DEFAULT_TL
 from .vecops import axpy_dot as _axpy_dot_pallas
+from .vecops import cg_update as _cg_update_pallas
+from .vecops import DEFAULT_TN
 
 __all__ = [
-    "ell_spmv", "ell_spmm", "bcsr_spmm", "sptrsv_level_step", "axpy_dot",
-    "backend_mode",
+    "ell_spmv", "ell_spmm", "ell_spmv_dot", "ell_spmm_dot", "bcsr_spmm",
+    "sptrsv_level_step", "axpy_dot", "cg_update",
+    "backend_mode", "kernels_active",
 ]
 
-_MODE = "auto"
+_MODE = os.environ.get("REPRO_KERNEL_MODE", "auto")
+if _MODE not in ("auto", "interpret", "never"):
+    _MODE = "auto"
 
 
 def backend_mode(mode: str | None = None) -> str:
@@ -49,15 +67,45 @@ def _dispatch() -> tuple[bool, bool]:
     return on_tpu, False
 
 
+def kernels_active() -> bool:
+    """True when ops dispatch to Pallas kernels (compiled or interpret)."""
+    return _dispatch()[0]
+
+
+def _fit(total: int, pref: int, quantum: int = 1) -> int:
+    """Largest divisor of ``total`` that is <= pref (preferring multiples of
+    ``quantum``) -- clamps a preferred tile to a valid one for the shape."""
+    pref = max(1, min(pref, total))
+    for d in range(pref, 0, -1):
+        if total % d == 0 and d % quantum == 0:
+            return d
+    for d in range(pref, 0, -1):
+        if total % d == 0:
+            return d
+    return total
+
+
+def _tiles_2d(op: str, cols, dtype, tm, tw):
+    """Resolve (tm, tw) for an ELL-shaped kernel.  Explicit args pass
+    through untouched (the kernel raises on invalid tiles -- callers pin
+    tiles deliberately, e.g. for VMEM budgets or autotune candidates);
+    missing args come from the autotune cache, else clamped defaults."""
+    rows_p, w = cols.shape
+    hit = None
+    if tm is None or tw is None:
+        hit = autotune.lookup(op, (rows_p, w), dtype) or {}
+    if tm is None:
+        tm = _fit(rows_p, hit.get("tm") or DEFAULT_TM, 8)
+    if tw is None:
+        tw = _fit(w, hit.get("tw") or DEFAULT_TW, 8)
+    return tm, tw
+
+
 def ell_spmv(cols, vals, x, tm: int | None = None, tw: int | None = None):
     use, interp = _dispatch()
     if use:
-        kw = {}
-        if tm:
-            kw["tm"] = tm
-        if tw:
-            kw["tw"] = tw
-        return _ell_spmv_pallas(cols, vals, x, interpret=interp, **kw)
+        tm, tw = _tiles_2d("ell_spmv", cols, vals.dtype, tm, tw)
+        return _ell_spmv_pallas(cols, vals, x, tm=tm, tw=tw, interpret=interp)
     return ref.ell_spmv_ref(cols, vals, x)
 
 
@@ -65,13 +113,27 @@ def ell_spmm(cols, vals, x, tm: int | None = None, tw: int | None = None):
     """Multi-RHS SpMM; x is (n, k) dense, one matrix stream for all k."""
     use, interp = _dispatch()
     if use:
-        kw = {}
-        if tm:
-            kw["tm"] = tm
-        if tw:
-            kw["tw"] = tw
-        return _ell_spmm_pallas(cols, vals, x, interpret=interp, **kw)
+        tm, tw = _tiles_2d("ell_spmm", cols, vals.dtype, tm, tw)
+        return _ell_spmm_pallas(cols, vals, x, tm=tm, tw=tw, interpret=interp)
     return ref.ell_spmm_ref(cols, vals, x)
+
+
+def ell_spmv_dot(cols, vals, x, tm: int | None = None, tw: int | None = None):
+    """Fused SpMV + dot: (y, pap) = (A @ x, dot(x, y)) in one matrix pass."""
+    use, interp = _dispatch()
+    if use:
+        tm, tw = _tiles_2d("ell_spmv_dot", cols, vals.dtype, tm, tw)
+        return _ell_spmv_dot_pallas(cols, vals, x, tm=tm, tw=tw, interpret=interp)
+    return ref.ell_spmv_dot_ref(cols, vals, x)
+
+
+def ell_spmm_dot(cols, vals, x, tm: int | None = None, tw: int | None = None):
+    """Multi-RHS fused SpMM + dot; x (n, k) -> (Y (n, k), pap (k,))."""
+    use, interp = _dispatch()
+    if use:
+        tm, tw = _tiles_2d("ell_spmm_dot", cols, vals.dtype, tm, tw)
+        return _ell_spmm_dot_pallas(cols, vals, x, tm=tm, tw=tw, interpret=interp)
+    return ref.ell_spmm_dot_ref(cols, vals, x)
 
 
 def bcsr_spmm(block_cols, blocks, x):
@@ -81,13 +143,17 @@ def bcsr_spmm(block_cols, blocks, x):
     return ref.bcsr_spmm_ref(block_cols, blocks, x)
 
 
-def sptrsv_level_step(cols, vals, diag, b, x, level_rows):
+def sptrsv_level_step(cols, vals, diag, b, x, level_rows, tl: int | None = None):
     """Level wavefront: gathers rows, runs the kernel (or ref), scatters."""
     use, interp = _dispatch()
     if not use:
         return ref.sptrsv_level_step_ref(cols, vals, diag, b, x, level_rows)
     n = x.shape[0] - 1
     rows_p = cols.shape[0]
+    wl = level_rows.shape[0]
+    if tl is None:
+        hit = autotune.lookup("sptrsv_level_step", (wl, cols.shape[1]), vals.dtype) or {}
+        tl = _fit(wl, hit.get("tl") or DEFAULT_TL, 8)
     lr = jnp.minimum(level_rows, rows_p - 1)
     xr = _sptrsv_step_pallas(
         cols[lr],
@@ -96,13 +162,29 @@ def sptrsv_level_step(cols, vals, diag, b, x, level_rows):
         b[lr],
         diag[jnp.minimum(level_rows, n - 1)],
         x,
+        tl=tl,
         interpret=interp,
     )
     return x.at[level_rows].set(xr, mode="drop")
 
 
-def axpy_dot(a, x, y):
+def axpy_dot(a, x, y, tn: int | None = None):
     use, interp = _dispatch()
     if use:
-        return _axpy_dot_pallas(a, x, y, interpret=interp)
+        if tn is None:
+            hit = autotune.lookup("axpy_dot", x.shape, x.dtype) or {}
+            tn = _fit(x.shape[0], hit.get("tn") or DEFAULT_TN, 8)
+        return _axpy_dot_pallas(a, x, y, tn=tn, interpret=interp)
     return ref.axpy_dot_ref(a, x, y)
+
+
+def cg_update(alpha, x, r, p, ap, dinv=None, tn: int | None = None):
+    """One-pass CG update (see ``vecops.cg_update``): handles arbitrary n
+    via masked tail tiles, (k, n) batches via per-RHS alphas."""
+    use, interp = _dispatch()
+    if use:
+        if tn is None:
+            hit = autotune.lookup("cg_update", x.shape, r.dtype) or {}
+            tn = min(hit.get("tn") or DEFAULT_TN, x.shape[-1])
+        return _cg_update_pallas(alpha, x, r, p, ap, dinv, tn=tn, interpret=interp)
+    return ref.cg_update_ref(alpha, x, r, p, ap, dinv)

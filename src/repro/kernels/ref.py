@@ -11,6 +11,7 @@ import jax.numpy as jnp
 __all__ = [
     "ell_spmv_ref", "ell_spmm_ref", "bcsr_spmm_ref",
     "sptrsv_level_step_ref", "axpy_dot_ref",
+    "ell_spmv_dot_ref", "ell_spmm_dot_ref", "cg_update_ref",
 ]
 
 
@@ -72,3 +73,35 @@ def axpy_dot_ref(a, x: jnp.ndarray, y: jnp.ndarray):
     """Fused z = y + a*x ; returns (z, dot(z, z)) -- one CG pipeline stage."""
     z = y + a * x
     return z, jnp.sum(z * z)
+
+
+def ell_spmv_dot_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray):
+    """Fused SpMV + dot: (y, pap) = (A @ x, dot(x, y)) -- square padded
+    operator, x.shape == (rows_p,)."""
+    y = jnp.sum(vals * x[cols], axis=1)
+    return y, jnp.sum(x * y)
+
+
+def ell_spmm_dot_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray):
+    """Multi-RHS fused SpMM + dot in kernel layout: x (rows_p, k) dense ->
+    (Y, pap) with Y = A @ X (rows_p, k), pap[j] = dot(X[:, j], Y[:, j])."""
+    y = jnp.sum(vals[..., None] * x[cols], axis=1)
+    return y, jnp.sum(x * y, axis=0)
+
+
+def cg_update_ref(alpha, x, r, p, ap, dinv=None):
+    """One-pass CG update contract (solvers' dot convention: scalars for
+    (n,) vectors, (k, 1) for (k, n) batches):
+
+        x' = x + alpha p;  r' = r - alpha ap;  z = dinv r' (or r');
+        rr = dot(r', r');  rz = dot(r', z).
+    """
+    xo = x + alpha * p
+    ro = r - alpha * ap
+    kd = ro.ndim > 1
+    rr = jnp.sum(ro * ro, axis=-1, keepdims=kd)
+    if dinv is None:
+        return xo, ro, ro, rr, rr
+    z = ro * dinv
+    rz = jnp.sum(ro * z, axis=-1, keepdims=kd)
+    return xo, ro, z, rr, rz

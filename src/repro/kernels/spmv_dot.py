@@ -1,0 +1,171 @@
+"""Pallas TPU kernels: fused ELL SpMV + dot -- the CG denominator in the
+matrix stream.
+
+Every PCG iteration needs ``ap = A @ p`` *and* ``pap = dot(p, ap)``: unfused,
+the dot is a second full HBM pass over ``p`` and ``ap`` right after the SpMV
+wrote them.  Azul's PE computes the reduction while the matrix block streams
+past; the TPU analogue is to emit per-row-tile dot partials from the SpMV
+kernel itself, on the last width step, when the accumulated ``y`` tile is
+complete and still VMEM-resident.  The wrapper sums the (rows_p / TM,)
+partials -- a deterministic, tiny reduction.
+
+Requires a square padded operator (``x.shape[-1] == rows_p``) -- the layout
+the solvers run in (vectors padded to ``n_pad == rows_padded``), where the
+row tile of ``x`` aligns with the row tile of ``y``.
+
+Tiling matches ``ell_spmv``: grid = (rows_p / TM, width / TW), width
+innermost so the output row tile accumulates in VMEM; ``x`` is fully
+VMEM-resident for the gather (Azul's "x halo in SRAM").  The multi-RHS
+variant (``ell_spmm_dot``) amortizes the one matrix stream over k stacked
+vectors and emits per-RHS dot partials.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_spmv_dot", "ell_spmm_dot"]
+
+DEFAULT_TM = 128
+DEFAULT_TW = 128
+
+
+def _spmv_dot_kernel(cols_ref, vals_ref, x_ref, xr_ref, y_ref, pap_ref):
+    j = pl.program_id(1)
+    nw = pl.num_programs(1)
+    c = cols_ref[...]          # (TM, TW) int32
+    v = vals_ref[...]          # (TM, TW) f32/f64
+    x = x_ref[...]             # (N,)     fully resident
+    partial = jnp.sum(v * x[c], axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+    @pl.when(j == nw - 1)
+    def _dot():
+        # y tile is complete and still in VMEM: fold the dot partial here,
+        # against the row-aligned tile of x -- no second pass over ap.
+        pap_ref[0] = jnp.sum(y_ref[...] * xr_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tw", "interpret"))
+def ell_spmv_dot(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    x: jnp.ndarray,
+    tm: int = DEFAULT_TM,
+    tw: int = DEFAULT_TW,
+    interpret: bool = False,
+):
+    """Returns (y, pap) with y = A @ x and pap = dot(x, y), one matrix pass.
+
+    A is padded ELL ((rows_p, W) cols/vals, padding vals == 0) and must be
+    square in the padded layout: x.shape == (rows_p,).
+    """
+    rows_p, w = cols.shape
+    if x.shape != (rows_p,):
+        raise ValueError(
+            f"ell_spmv_dot needs a square padded operator: x {x.shape} vs rows {rows_p}"
+        )
+    tm = min(tm, rows_p)
+    tw = min(tw, w)
+    if rows_p % tm or w % tw:
+        raise ValueError(f"ELL shape ({rows_p},{w}) not divisible by tile ({tm},{tw})")
+    grid = (rows_p // tm, w // tw)
+    y, partials = pl.pallas_call(
+        _spmv_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((x.shape[0],), lambda i, j: (0,)),
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_p,), vals.dtype),
+            jax.ShapeDtypeStruct((rows_p // tm,), vals.dtype),
+        ],
+        interpret=interpret,
+    )(cols, vals, x, x)
+    return y, jnp.sum(partials)
+
+
+def _spmm_dot_kernel(cols_ref, vals_ref, x_ref, xr_ref, y_ref, pap_ref):
+    j = pl.program_id(1)
+    nw = pl.num_programs(1)
+    c = cols_ref[...]          # (TM, TW) int32
+    v = vals_ref[...]          # (TM, TW)
+    x = x_ref[...]             # (N, K)   fully resident
+    partial = jnp.sum(v[..., None] * x[c], axis=1)   # (TM, K)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+    @pl.when(j == nw - 1)
+    def _dot():
+        pap_ref[0, :] = jnp.sum(y_ref[...] * xr_ref[...], axis=0)   # (K,)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tw", "interpret"))
+def ell_spmm_dot(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    x: jnp.ndarray,
+    tm: int = DEFAULT_TM,
+    tw: int = DEFAULT_TW,
+    interpret: bool = False,
+):
+    """Multi-RHS fused SpMM + dot: x is (rows_p, k) dense (kernel layout),
+    returns (Y, pap) with Y = A @ X (rows_p, k) and pap[j] = dot(X[:, j],
+    Y[:, j]) -- k per-RHS CG denominators from the one matrix stream."""
+    if x.ndim != 2:
+        raise ValueError(f"ell_spmm_dot expects x of shape (n, k), got {x.shape}")
+    rows_p, w = cols.shape
+    k = x.shape[1]
+    if x.shape[0] != rows_p:
+        raise ValueError(
+            f"ell_spmm_dot needs a square padded operator: x {x.shape} vs rows {rows_p}"
+        )
+    tm = min(tm, rows_p)
+    tw = min(tw, w)
+    if rows_p % tm or w % tw:
+        raise ValueError(f"ELL shape ({rows_p},{w}) not divisible by tile ({tm},{tw})")
+    grid = (rows_p // tm, w // tw)
+    y, partials = pl.pallas_call(
+        _spmm_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((x.shape[0], k), lambda i, j: (0, 0)),
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_p, k), vals.dtype),
+            jax.ShapeDtypeStruct((rows_p // tm, k), vals.dtype),
+        ],
+        interpret=interpret,
+    )(cols, vals, x, x)
+    return y, jnp.sum(partials, axis=0)

@@ -1,16 +1,28 @@
-"""Pallas TPU kernel: fused CG vector-op pipeline stage.
+"""Pallas TPU kernels: fused CG vector-op pipeline stages.
 
-Each CG iteration runs a handful of length-n vector ops (axpy, dots, norms).
-Unfused, every op streams the vectors HBM->VMEM again; the memory roofline
-term is 2-3x larger than necessary.  This kernel fuses
+Each CG iteration runs a handful of length-n vector ops (axpys, dots,
+preconditioner scaling).  Unfused, every op streams the vectors HBM->VMEM
+again; the memory roofline term is 2-3x larger than necessary.
 
-    z = y + a * x          (axpy)
-    partial = dot(z, z)    (the norm the next CG step needs)
+``axpy_dot`` is the original two-op fusion (z = y + a*x with dot(z, z)).
+``cg_update`` is the generalized one-pass CG update the solvers actually
+need:
 
-into one pass: read x, y once; write z once; emit one partial per tile that
-the wrapper sums (deterministic tree-free reduction, tiny).
+    x' = x + alpha * p
+    r' = r - alpha * ap
+    z  = dinv * r'            (Jacobi psolve; identity when dinv is None)
+    rr = dot(r', r')          (residual norm for the trace)
+    rz = dot(r', z)           (the next beta's numerator)
 
-grid = (n / TN,); VMEM = 3*TN*4 + 4.
+Five vector reads, three writes, both dots emitted as per-tile partials in
+the same pass -- vs. five separate XLA ops re-streaming everything.  Tail
+tiles are masked (a VMEM iota against the true ``n``), so arbitrary vector
+lengths work: the wrapper zero-pads to the tile multiple and the mask keeps
+the dot partials exact even for non-divisible ``n``.  The batched variant
+takes ``(k, n)`` stacked vectors with per-RHS ``(k, 1)`` alphas and emits
+per-RHS dot partials, matching the solvers' multi-RHS layout.
+
+grid = (ceil(n / TN),); VMEM ~ (5 reads + 3 writes) * TN words + partials.
 """
 
 from __future__ import annotations
@@ -21,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["axpy_dot"]
+__all__ = ["axpy_dot", "cg_update"]
 
 DEFAULT_TN = 1024
 
@@ -67,3 +79,134 @@ def axpy_dot(
         interpret=interpret,
     )(a_arr, x, y)
     return z, jnp.sum(partials)
+
+
+# ---------------------------------------------------------------------------
+# fused CG update: x', r', z and both dots in one pass
+# ---------------------------------------------------------------------------
+
+
+def _cg_update_kernel(a_ref, nv_ref, x_ref, r_ref, p_ref, ap_ref, d_ref,
+                      xo_ref, ro_ref, zo_ref, pp_ref):
+    i = pl.program_id(0)
+    a = a_ref[0]
+    xo_ref[...] = x_ref[...] + a * p_ref[...]
+    ro = r_ref[...] - a * ap_ref[...]
+    z = ro * d_ref[...]
+    ro_ref[...] = ro
+    zo_ref[...] = z
+    tn = x_ref.shape[0]
+    idx = i * tn + jax.lax.broadcasted_iota(jnp.int32, (tn,), 0)
+    rm = jnp.where(idx < nv_ref[0], ro, jnp.zeros_like(ro))  # mask tail tile
+    pp_ref[0, 0] = jnp.sum(rm * ro)
+    pp_ref[0, 1] = jnp.sum(rm * z)
+
+
+def _cg_update_kernel_b(a_ref, nv_ref, x_ref, r_ref, p_ref, ap_ref, d_ref,
+                        xo_ref, ro_ref, zo_ref, pp_ref):
+    i = pl.program_id(0)
+    a = a_ref[...]                       # (K, 1) per-RHS alphas
+    xo_ref[...] = x_ref[...] + a * p_ref[...]
+    ro = r_ref[...] - a * ap_ref[...]    # (K, TN)
+    z = ro * d_ref[...]                  # (TN,) dinv broadcasts over K
+    ro_ref[...] = ro
+    zo_ref[...] = z
+    tn = x_ref.shape[1]
+    idx = i * tn + jax.lax.broadcasted_iota(jnp.int32, (tn,), 0)
+    rm = jnp.where(idx < nv_ref[0], ro, jnp.zeros_like(ro))
+    pp_ref[0, 0, :] = jnp.sum(rm * ro, axis=1)
+    pp_ref[0, 1, :] = jnp.sum(rm * z, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def cg_update(
+    alpha,
+    x: jnp.ndarray,
+    r: jnp.ndarray,
+    p: jnp.ndarray,
+    ap: jnp.ndarray,
+    dinv: jnp.ndarray | None = None,
+    tn: int = DEFAULT_TN,
+    interpret: bool = False,
+):
+    """One-pass CG update (see module docstring).
+
+    ``x``/``r``/``p``/``ap``: (n,) or batched (k, n); ``alpha``: scalar or
+    (k, 1); ``dinv``: (n,) Jacobi inverse diagonal or None (identity
+    psolve -- z comes back equal to r').  Returns (x', r', z, rr, rz) with
+    rr/rz following the solvers' dot convention: () scalars for (n,)
+    vectors, (k, 1) for batches.  Arbitrary n: inputs are zero-padded to
+    the tile multiple and tail tiles are masked in-kernel.
+    """
+    n = x.shape[-1]
+    batched = x.ndim == 2
+    dt = r.dtype
+    if dinv is None:
+        dinv = jnp.ones((n,), dt)
+    tn = min(tn, n)
+    npad = -(-n // tn) * tn
+    pad = npad - n
+
+    def padv(v):
+        if pad == 0:
+            return v
+        cfg = [(0, 0)] * (v.ndim - 1) + [(0, pad)]
+        return jnp.pad(v, cfg)
+
+    x, r, p, ap, dinv = (padv(jnp.asarray(v, dt)) for v in (x, r, p, ap, dinv))
+    nv = jnp.full((1,), n, jnp.int32)
+    grid = (npad // tn,)
+
+    if batched:
+        k = x.shape[0]
+        a_arr = jnp.broadcast_to(jnp.asarray(alpha, dt), (k, 1))
+        vec = lambda: pl.BlockSpec((k, tn), lambda i: (0, i))
+        xo, ro, zo, pp = pl.pallas_call(
+            _cg_update_kernel_b,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((k, 1), lambda i: (0, 0)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+                vec(), vec(), vec(), vec(),
+                pl.BlockSpec((tn,), lambda i: (i,)),
+            ],
+            out_specs=[
+                vec(), vec(), vec(),
+                pl.BlockSpec((1, 2, k), lambda i: (i, 0, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((k, npad), dt),
+                jax.ShapeDtypeStruct((k, npad), dt),
+                jax.ShapeDtypeStruct((k, npad), dt),
+                jax.ShapeDtypeStruct((npad // tn, 2, k), dt),
+            ],
+            interpret=interpret,
+        )(a_arr, nv, x, r, p, ap, dinv)
+        sums = jnp.sum(pp, axis=0)                       # (2, k)
+        return (xo[:, :n], ro[:, :n], zo[:, :n],
+                sums[0][:, None], sums[1][:, None])
+
+    a_arr = jnp.reshape(jnp.asarray(alpha, dt), (1,))
+    vec = lambda: pl.BlockSpec((tn,), lambda i: (i,))
+    xo, ro, zo, pp = pl.pallas_call(
+        _cg_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            vec(), vec(), vec(), vec(), vec(),
+        ],
+        out_specs=[
+            vec(), vec(), vec(),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), dt),
+            jax.ShapeDtypeStruct((npad,), dt),
+            jax.ShapeDtypeStruct((npad,), dt),
+            jax.ShapeDtypeStruct((npad // tn, 2), dt),
+        ],
+        interpret=interpret,
+    )(a_arr, nv, x, r, p, ap, dinv)
+    sums = jnp.sum(pp, axis=0)
+    return xo[:n], ro[:n], zo[:n], sums[0], sums[1]

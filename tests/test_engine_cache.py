@@ -1,0 +1,96 @@
+"""Engine compiled-program caches.
+
+Regression for the ``build_sptrsv`` cache: it used to key on ``id(l_csr)``,
+and CPython reuses object addresses after GC -- a *fresh* triangular matrix
+could silently hit the stale compiled solve of a dead one.  The key is now
+a content fingerprint: equal content hits, different content misses, and
+address reuse cannot alias.  The mesh-dependent checks run in a subprocess
+with forced host devices (the repo's ``dist`` convention).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.engine import _csr_fingerprint
+from repro.core.formats import CSR
+from repro.data.matrices import random_spd
+
+
+def test_fingerprint_content_based():
+    m = random_spd(32, 0.1, 0)
+    copy = CSR(m.indptr.copy(), m.indices.copy(), m.data.copy(), m.shape)
+    assert _csr_fingerprint(m) == _csr_fingerprint(copy)
+    bumped = CSR(m.indptr, m.indices, m.data * 2.0, m.shape)
+    assert _csr_fingerprint(m) != _csr_fingerprint(bumped)
+    wider = CSR(m.indptr, m.indices, m.data, (m.shape[0], m.shape[1] + 1))
+    assert _csr_fingerprint(m) != _csr_fingerprint(wider)
+
+
+_SCRIPT = r"""
+import gc
+import numpy as np, scipy.sparse as sp
+from scipy.linalg import solve_triangular
+from repro.core.engine import AzulEngine
+from repro.core.formats import csr_from_scipy
+from repro.data.matrices import random_spd
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 2), ("data", "model"))
+m = random_spd(48, 0.08, 1)
+a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+b = np.random.default_rng(0).standard_normal(48)
+eng = AzulEngine(m, mesh=mesh, mode="2d", precond="jacobi", dtype=np.float64)
+
+def tril(shift):
+    return csr_from_scipy((sp.tril(a, k=-1) + sp.eye(48) * shift).tocsr())
+
+def dense_ref(shift):
+    l = np.asarray((sp.tril(a, k=-1) + sp.eye(48) * shift).todense())
+    return solve_triangular(l, b, lower=True)
+
+l1 = tril(2.0)
+s1 = eng.build_sptrsv(l1)
+assert np.allclose(s1(b), dense_ref(2.0), atol=1e-8), "first solve"
+
+# same content, different object -> cache hit (no recompile)
+assert eng.build_sptrsv(tril(2.0)) is s1, "content hit"
+assert len(eng._trsv_cache) == 1
+
+# free l1 so its address can be reused, then build a DIFFERENT matrix:
+# with id() keys this could silently return the stale 2.0-shift solver.
+del l1
+gc.collect()
+l2 = tril(5.0)
+s2 = eng.build_sptrsv(l2)
+assert s2 is not s1, "stale alias"
+assert len(eng._trsv_cache) == 2
+assert np.allclose(s2(b), dense_ref(5.0), atol=1e-8), "second solve"
+assert np.allclose(s1(b), dense_ref(2.0), atol=1e-8), "first still valid"
+
+# solve cache keys carry the resolved fused flag
+x1, _ = eng.solve(b, method="pcg", iters=30, fused=True)
+x2, _ = eng.solve(b, method="pcg", iters=30, fused=False)
+assert ("pcg", 30, "jacobi", False, True) in eng._compiled
+assert ("pcg", 30, "jacobi", False, False) in eng._compiled
+assert np.allclose(x1, x2, atol=1e-9), "fused == unfused dist"
+print("CACHE_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.dist
+def test_sptrsv_cache_not_fooled_by_id_reuse():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    env["JAX_ENABLE_X64"] = "1"
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=560,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "CACHE_OK" in r.stdout
