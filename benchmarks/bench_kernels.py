@@ -118,10 +118,17 @@ def run_autotune(n: int = 512, density: float = 0.02,
         for tm in autotune.tile_candidates(rp)[:4]
         for tw in autotune.tile_candidates(w)[:4]
     ]
+    x2 = jnp.asarray(rng.standard_normal(rp), jnp.float32)
+    xm2 = jnp.asarray(rng.standard_normal((rp, 8)), jnp.float32)
+    bk = jnp.asarray(rng.standard_normal(8), jnp.float32)
     for op_name, fn in (
         ("ell_spmv", lambda tm, tw: (lambda: ops.ell_spmv(cols, vals, x, tm=tm, tw=tw))),
         ("ell_spmm", lambda tm, tw: (lambda: ops.ell_spmm(cols, vals, xm, tm=tm, tw=tw))),
         ("ell_spmv_dot", lambda tm, tw: (lambda: ops.ell_spmv_dot(cols, vals, x, tm=tm, tw=tw))),
+        ("ell_spmv_pfold_dot", lambda tm, tw: (lambda: ops.ell_spmv_pfold_dot(
+            cols, vals, x, x2, 0.5, tm=tm, tw=tw))),
+        ("ell_spmm_pfold_dot", lambda tm, tw: (lambda: ops.ell_spmm_pfold_dot(
+            cols, vals, xm, xm2, bk, tm=tm, tw=tw))),
     ):
         best = autotune.autotune(op_name, (rp, w), vals.dtype, cand2d, fn)
         rows.append((f"autotune_{op_name}", 0.0, f"best={best}"))
@@ -158,6 +165,18 @@ def run_autotune(n: int = 512, density: float = 0.02,
             e.cols, e.vals, diag, b, xs, level_rows, tl=tl)),
     )
     rows.append(("autotune_sptrsv_level_step", 0.0, f"best={best}"))
+
+    # fused whole-solve SpTRSV: tune the level-tile at the full schedule
+    dinv = jnp.asarray(np.where(np.asarray(diag) == 0, 1.0, 1.0 / np.asarray(diag)),
+                       jnp.float32)
+    nl, wl_full = sched.rows.shape
+    cand_solve = [{"tl": tl} for tl in autotune.tile_candidates(wl_full)[:6]]
+    best = autotune.autotune(
+        "sptrsv_solve_dot", (nl, wl_full, e.width), jnp.float32, cand_solve,
+        lambda tl: (lambda: ops.sptrsv_solve_dot(
+            e.cols, e.vals, dinv, b, sched.rows, b, n_rows=l.shape[0], tl=tl)),
+    )
+    rows.append(("autotune_sptrsv_solve_dot", 0.0, f"best={best}"))
     rows.append(("autotune_cache", 0.0, f"path={autotune.cache_path()}"))
     return rows
 

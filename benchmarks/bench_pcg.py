@@ -29,7 +29,7 @@ import numpy as np
 import scipy.sparse as sp
 
 from repro.core.engine import AzulEngine
-from repro.core.substrate import modeled_vector_traffic
+from repro.core.substrate import modeled_ic0_traffic, modeled_vector_traffic
 from repro.data.matrices import suite
 
 
@@ -163,20 +163,83 @@ def run_batch_sweep(batch_sizes, iters: int = 60,
     return rows, payload
 
 
-def collect_json(fused_payload, batch_payload) -> dict:
+def run_tol_solves(
+    tol: float = 1e-8, max_iters: int = 400,
+    matrices=("lap2d_32", "banded_1k"),
+    preconds=("jacobi", "block_ic0"),
+) -> tuple[list[tuple[str, float, str]], list[dict]]:
+    """Tolerance-stopped solves, fused vs reference: the CI regression
+    gate's primary signal.  Iteration counts are *discrete* -- any change
+    to the recurrence, the preconditioner factorization, or the stopping
+    test moves them, so the gate compares them exactly (timings only get a
+    generous cross-machine ratio).  Also records the per-path substrate and
+    the modeled IC(0) traffic at this matrix's level counts."""
+    rows, payload = [], []
+    rng = np.random.default_rng(0)
+    mats = suite("small")
+    for name in matrices:
+        m = mats[name]
+        a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+        b = a @ rng.standard_normal(m.shape[0])
+        for pc in preconds:
+            eng = AzulEngine(m, mesh=None, precond=pc, dtype=np.float64)
+
+            def timed(fused):
+                eng.solve(b, method="pcg_tol", tol=tol, max_iters=max_iters,
+                          fused=fused)                      # warm jit
+                t0 = time.perf_counter()
+                x, _ = eng.solve(b, method="pcg_tol", tol=tol,
+                                 max_iters=max_iters, fused=fused)
+                dt = time.perf_counter() - t0
+                return dt, x, int(np.asarray(eng.last_solve_info["iters"])), \
+                    eng.last_solve_info["substrate"]
+
+            dt_f, x_f, it_f, sub_f = timed(True)
+            dt_u, x_u, it_u, _ = timed(False)
+            entry = {
+                "matrix": name,
+                "precond": pc,
+                "n": int(m.shape[0]),
+                "tol": tol,
+                "substrate_fused": sub_f,
+                "iters_fused": it_f,
+                "iters_reference": it_u,
+                "iters_match": it_f == it_u,
+                "x_maxdiff": float(np.abs(x_f - x_u).max()),
+                "us_per_iter_fused": round(dt_f / max(it_f, 1) * 1e6, 3),
+                "us_per_iter_unfused": round(dt_u / max(it_u, 1) * 1e6, 3),
+            }
+            if pc == "block_ic0":
+                f = eng._ic0
+                entry["modeled_ic0_traffic"] = modeled_ic0_traffic(
+                    eng.ell.width, f.sched_l.n_levels, f.sched_u_rev.n_levels
+                )
+            payload.append(entry)
+            rows.append((
+                f"pcg_tol_{name}_{pc}", dt_f / max(it_f, 1) * 1e6,
+                f"substrate={sub_f} iters={it_f} iters_ref={it_u} "
+                f"x_maxdiff={entry['x_maxdiff']:.2e}",
+            ))
+    return rows, payload
+
+
+def collect_json(fused_payload, batch_payload, tol_payload=None) -> dict:
     """Assemble the machine-readable perf-trajectory record (BENCH_pcg.json
-    schema: see README "Performance")."""
+    schema: see README "Performance").  v2 adds the tolerance-solve section
+    (fused-vs-reference iteration counts, the regression gate's exact-match
+    signal)."""
     import jax
 
     from repro.kernels import ops
 
     return {
-        "schema": "bench_pcg/v1",
+        "schema": "bench_pcg/v2",
         "backend": jax.default_backend(),
         "kernel_mode": ops.backend_mode(),
         "x64": bool(jax.config.jax_enable_x64),
         "fused_vs_unfused": fused_payload,
         "batch_sweep": batch_payload,
+        "tol_solves": tol_payload or [],
     }
 
 
@@ -199,11 +262,15 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     rows = [] if args.skip_convergence else run()
-    fused_payload, batch_payload = [], []
+    fused_payload, batch_payload, tol_payload = [], [], []
     if args.fused_compare or args.json:
         mats = tuple(s for s in args.matrices.split(",") if s)
         frows, fused_payload = run_fused_compare(iters=args.iters, matrices=mats)
         rows += frows
+        trows, tol_payload = run_tol_solves(
+            matrices=tuple(m for m in mats if m in suite("small"))
+        )
+        rows += trows
     if args.batch_sizes:
         ks = [int(x) for x in args.batch_sizes.split(",")]
         brows, batch_payload = run_batch_sweep(ks, iters=args.iters)
@@ -212,7 +279,8 @@ def main(argv=None) -> int:
         print(",".join(str(x) for x in r))
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(collect_json(fused_payload, batch_payload), f, indent=1)
+            json.dump(collect_json(fused_payload, batch_payload, tol_payload),
+                      f, indent=1)
         print(f"# wrote {args.json}")
     return 0
 

@@ -22,7 +22,6 @@ import jax.numpy as jnp
 
 from repro.core.formats import ell_from_csr
 from repro.core.partition import plan_1d, plan_2d
-from repro.core.spops import spmv_ell
 from repro.data.matrices import suite
 
 

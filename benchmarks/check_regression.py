@@ -1,0 +1,187 @@
+"""CI perf-regression gate over the BENCH_pcg.json trajectory.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --current BENCH_pcg.json --baseline benchmarks/BENCH_baseline.json
+
+Compares the bench-smoke payload just produced against the committed
+baseline and exits non-zero on regression, so the ``bench-smoke`` CI job
+*enforces* the perf trajectory instead of merely archiving it.  What is
+compared, and how strictly, follows what is actually stable across
+machines:
+
+* **Iteration counts** (``tol_solves``): exact match, fused and reference,
+  plus the fused/reference agreement flags.  Iteration counts are discrete
+  and deterministic -- any drift means the recurrence, preconditioner, or
+  stopping test changed behaviour.
+* **Numeric equivalence fields** (``trace_rel_maxdiff``, ``x_maxdiff``,
+  ``batch_vs_seq_maxerr``): absolute thresholds.  The fused path must stay
+  numerically indistinguishable from the reference oracle.
+* **Modeled traffic** (``modeled_traffic`` / ``modeled_ic0_traffic``):
+  exact match -- the model only moves when someone changes the fusion
+  itself, which should be a deliberate, baseline-updating act.
+* **Timings** (``us_per_iter*``): within ``--timing-ratio`` (default 10x)
+  of baseline.  Interpret-mode CPU timings are noisy and machine-dependent;
+  the generous ratio still catches order-of-magnitude regressions (an
+  accidentally-unfused hot path, a jit cache miss per iteration).
+* **Coverage**: every baseline entry must still be present (dropping a
+  benchmark silently is itself a regression).
+
+Escape hatch -- when a change legitimately moves the trajectory (better
+preconditioner => fewer iterations, new traffic model), refresh and commit
+the baseline:
+
+    python -m benchmarks.check_regression --current BENCH_pcg.json \
+        --baseline benchmarks/BENCH_baseline.json --update-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+EQUIV_TOL = 1e-8     # fused-vs-reference agreement fields (f64 payloads)
+
+
+def _index(entries: list[dict], keys: tuple[str, ...]) -> dict:
+    return {tuple(e.get(k) for k in keys): e for e in entries}
+
+
+class Gate:
+    def __init__(self, timing_ratio: float):
+        self.ratio = timing_ratio
+        self.failures: list[str] = []
+        self.checks = 0
+
+    def fail(self, msg: str) -> None:
+        self.failures.append(msg)
+
+    def exact(self, where: str, field: str, cur, base) -> None:
+        self.checks += 1
+        if cur != base:
+            self.fail(f"{where}: {field} changed {base!r} -> {cur!r} "
+                      f"(exact-match field)")
+
+    def leq(self, where: str, field: str, cur, limit) -> None:
+        self.checks += 1
+        if cur is None or not (cur <= limit):
+            self.fail(f"{where}: {field} = {cur!r} exceeds {limit}")
+
+    def timing(self, where: str, field: str, cur, base) -> None:
+        self.checks += 1
+        if cur is None or base is None:
+            self.fail(f"{where}: {field} missing ({base!r} -> {cur!r})")
+            return
+        if base > 0 and cur > base * self.ratio:
+            self.fail(f"{where}: {field} regressed {base:.1f} -> {cur:.1f} us "
+                      f"(> {self.ratio:.0f}x baseline)")
+
+    def section(self, name: str, keys: tuple[str, ...], cur: list, base: list):
+        """Pair up entries; every baseline entry must exist in current."""
+        ci, bi = _index(cur, keys), _index(base, keys)
+        for k, be in bi.items():
+            ce = ci.get(k)
+            if ce is None:
+                self.fail(f"{name}{list(k)}: entry missing from current payload")
+                continue
+            yield f"{name}{list(k)}", ce, be
+
+
+def check(cur: dict, base: dict, timing_ratio: float = 10.0) -> Gate:
+    g = Gate(timing_ratio)
+    g.exact("payload", "schema", cur.get("schema"), base.get("schema"))
+
+    for where, ce, be in g.section("tol_solves", ("matrix", "precond"),
+                                   cur.get("tol_solves", []),
+                                   base.get("tol_solves", [])):
+        g.exact(where, "iters_fused", ce.get("iters_fused"), be.get("iters_fused"))
+        g.exact(where, "iters_reference", ce.get("iters_reference"),
+                be.get("iters_reference"))
+        g.exact(where, "iters_match", ce.get("iters_match"), True)
+        g.exact(where, "substrate_fused", ce.get("substrate_fused"),
+                be.get("substrate_fused"))
+        g.leq(where, "x_maxdiff", ce.get("x_maxdiff"), EQUIV_TOL)
+        if "modeled_ic0_traffic" in be:
+            g.exact(where, "modeled_ic0_traffic", ce.get("modeled_ic0_traffic"),
+                    be.get("modeled_ic0_traffic"))
+        g.timing(where, "us_per_iter_fused", ce.get("us_per_iter_fused"),
+                 be.get("us_per_iter_fused"))
+
+    for where, ce, be in g.section("fused_vs_unfused", ("matrix",),
+                                   cur.get("fused_vs_unfused", []),
+                                   base.get("fused_vs_unfused", [])):
+        g.leq(where, "trace_rel_maxdiff", ce.get("trace_rel_maxdiff"), EQUIV_TOL)
+        g.leq(where, "x_maxdiff", ce.get("x_maxdiff"), EQUIV_TOL)
+        g.exact(where, "modeled_traffic", ce.get("modeled_traffic"),
+                be.get("modeled_traffic"))
+        g.timing(where, "us_per_iter_fused", ce.get("us_per_iter_fused"),
+                 be.get("us_per_iter_fused"))
+        g.timing(where, "us_per_iter_unfused", ce.get("us_per_iter_unfused"),
+                 be.get("us_per_iter_unfused"))
+
+    for where, ce, be in g.section("batch_sweep", ("matrix", "k"),
+                                   cur.get("batch_sweep", []),
+                                   base.get("batch_sweep", [])):
+        g.leq(where, "batch_vs_seq_maxerr", ce.get("batch_vs_seq_maxerr"),
+              EQUIV_TOL)
+        g.timing(where, "us_per_iter_per_rhs", ce.get("us_per_iter_per_rhs"),
+                 be.get("us_per_iter_per_rhs"))
+    return g
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="freshly produced BENCH_pcg.json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline payload")
+    ap.add_argument("--timing-ratio", type=float, default=10.0,
+                    help="allowed current/baseline timing ratio (generous: "
+                         "interpret-mode CPU timings are machine-dependent)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the baseline with the current payload "
+                         "(the documented escape hatch for intentional "
+                         "trajectory changes) and exit 0")
+    args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        # refuse to install a baseline the gate could never check against:
+        # an empty/truncated payload would make every future run vacuously
+        # pass (the gate iterates baseline entries)
+        with open(args.current) as f:
+            cur = json.load(f)
+        problems = []
+        if cur.get("schema") != "bench_pcg/v2":
+            problems.append(f"unexpected schema {cur.get('schema')!r}")
+        for section in ("fused_vs_unfused", "tol_solves"):
+            if not cur.get(section):
+                problems.append(f"section {section!r} is empty/missing")
+        if problems:
+            print("refusing to update baseline from a degenerate payload:")
+            for msg in problems:
+                print(f"  - {msg}")
+            return 1
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.current} -> {args.baseline}")
+        return 0
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    g = check(cur, base, timing_ratio=args.timing_ratio)
+    if g.failures:
+        print(f"PERF REGRESSION: {len(g.failures)} failure(s) "
+              f"({g.checks} checks):")
+        for msg in g.failures:
+            print(f"  - {msg}")
+        print("intentional change?  re-baseline with --update-baseline and "
+              "commit the result (see README).")
+        return 1
+    print(f"perf gate OK: {g.checks} checks against {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,11 +70,17 @@ def main(argv=None) -> None:
             brows, batch_payload = bench_pcg.run_batch_sweep(
                 ks, iters=iters, matrices=matrices[:1]
             )
-            for name, us, derived in frows + brows:
+            tol_mats = matrices[:1] if args.smoke else ("lap2d_32", "banded_1k")
+            trows, tol_payload = bench_pcg.run_tol_solves(
+                max_iters=120 if args.smoke else 400, matrices=tol_mats
+            )
+            for name, us, derived in frows + brows + trows:
                 print(f"{name},{us:.1f},{derived}")
             with open(args.json, "w") as f:
-                json.dump(bench_pcg.collect_json(fused_payload, batch_payload),
-                          f, indent=1)
+                json.dump(
+                    bench_pcg.collect_json(fused_payload, batch_payload,
+                                           tol_payload),
+                    f, indent=1)
             print(f"# wrote {args.json}")
         except Exception:
             ok = False

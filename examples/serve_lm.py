@@ -38,10 +38,10 @@ def main():
     print("batched greedy generation:", np.asarray(out))
 
     srv = SlotServer(params, cfg, batch_slots=2, max_len=64)
-    r0 = srv.submit(np.asarray(prompts[0]), gen_len=8)
-    r1 = srv.submit(np.asarray(prompts[1]), gen_len=5)
+    ids = [srv.submit(np.asarray(prompts[0]), gen_len=8),
+           srv.submit(np.asarray(prompts[1]), gen_len=5)]
     done = {}
-    while len(done) < 2:
+    while len(done) < len(ids):
         done.update(srv.step())
     print("continuous batching finished:", {k: v for k, v in sorted(done.items())})
 

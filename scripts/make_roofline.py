@@ -7,7 +7,6 @@
 
 import argparse
 import json
-import os
 import sys
 
 sys.path.insert(0, "src")

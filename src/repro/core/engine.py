@@ -63,7 +63,8 @@ from .levels import build_schedule
 from .partition import plan_1d, plan_2d, tile_csr
 from .precond import ic0 as host_ic0
 from .spops import spmm_ell_padded, spmv_ell_padded
-from .substrate import fused_local_substrate, fused_shard_substrate
+from .substrate import (fused_ic0_local_substrate, fused_local_substrate,
+                        fused_shard_ic0_substrate, fused_shard_substrate)
 
 __all__ = ["AzulEngine", "local_sptrsv"]
 
@@ -196,6 +197,9 @@ class AzulEngine:
         self._width_pad = width_pad
         self._compiled: dict = {}
         self._trsv_cache: dict = {}
+        # populated by every solve(): method, fused flag, substrate kind,
+        # and (post-solve) the per-RHS iteration counts
+        self.last_solve_info: dict = {}
 
         if self.mode == "local":
             self._build_local()
@@ -219,7 +223,6 @@ class AzulEngine:
 
     def _build_local(self):
         from .formats import ell_from_csr
-        from .spops import extract_diag_ell
 
         self.ell = ell_from_csr(
             self.a, width_pad=self._width_pad, row_pad=self._row_pad, dtype=self.dtype
@@ -499,32 +502,70 @@ class AzulEngine:
 
     def _resolve_fused(self, method: str, fused) -> bool:
         """Map the tri-state knob to a concrete bool for this method.  Both
-        "auto" and True mean "fused wherever supported": pcg/cg with
-        jacobi/none preconditioning everywhere, plus pcg_pipe in local mode
-        (its substrate supplies the kernel-backed matvec; the distributed
-        CG-CG recurrence already fuses its reductions, so there a substrate
-        would change nothing and we report the path as unfused)."""
+        "auto" and True mean "fused wherever supported": pcg/cg/pcg_tol
+        with jacobi/none/block_ic0 preconditioning everywhere (IC(0) runs
+        the fused whole-solve SpTRSV substrate locally and the
+        collective-fused block-IC(0) shard substrate distributed), plus
+        pcg_pipe in local mode (its substrate supplies the kernel-backed
+        matvec; the distributed CG-CG recurrence already fuses its
+        reductions, so there a substrate would change nothing and we report
+        the path as unfused)."""
         f = self.fused if fused is None else fused
-        supported = self.precond in ("jacobi", "none") and (
-            method in ("pcg", "cg")
-            or (method == "pcg_pipe" and self.mode == "local")
-        )
+        if method in ("pcg", "cg", "pcg_tol"):
+            supported = self.precond in ("jacobi", "none", "block_ic0")
+        elif method == "pcg_pipe":
+            supported = (self.mode == "local"
+                         and self.precond in ("jacobi", "none"))
+        else:
+            supported = False
         return supported if f in ("auto", True) else False
 
-    def solve(self, b, method: str = "pcg", iters: int = 200, x0=None, fused=None):
+    def substrate_kind(self, method: str = "pcg", fused=None) -> str:
+        """The substrate a ``solve(method=...)`` call will run on:
+        "reference", "fused", "fused_ic0", "fused_shard" or
+        "fused_shard_ic0".  Tests and the launch driver use this to assert
+        path selection without re-deriving the dispatch rules."""
+        if not self._resolve_fused(method, fused):
+            return "reference"
+        ic0 = self.precond == "block_ic0" and method in ("pcg", "pcg_tol")
+        if self.mode == "local":
+            return "fused_ic0" if ic0 else "fused"
+        return "fused_shard_ic0" if ic0 else "fused_shard"
+
+    def solve(self, b, method: str = "pcg", iters: int = 200, x0=None,
+              fused=None, tol: float = 1e-8, max_iters: int | None = None):
         """Solve A x = b; returns (x_global numpy, res_norms numpy).
 
         ``b`` may be (n,) or stacked (k, n) -- the batched form solves all k
         right-hand sides against the one device-resident matrix in a single
         distributed program (per-RHS traces come back as (iters + 1, k)).
-        ``fused`` overrides the engine-level knob for this solve."""
+        ``fused`` overrides the engine-level knob for this solve.
+
+        ``method="pcg_tol"`` runs the tolerance-stopped while_loop solver:
+        ``tol`` is the relative residual target and ``max_iters`` the
+        iteration cap (default: ``iters``); per-RHS iteration counts land
+        in ``self.last_solve_info["iters"]`` after the call (the serving
+        path reads them per request)."""
         b = np.asarray(b)
         use_fused = self._resolve_fused(method, fused)
+        max_iters = iters if max_iters is None else max_iters
+        self.last_solve_info = {
+            "method": method,
+            "fused": use_fused,
+            "substrate": self.substrate_kind(method, fused),
+        }
         if self.mode == "local":
-            res = self._solve_local(method, iters, b, x0, use_fused)
+            res = self._solve_local(method, iters, b, x0, use_fused,
+                                    tol=tol, max_iters=max_iters)
+            self.last_solve_info["iters"] = np.asarray(res.iters)
             return np.asarray(res.x)[..., : self.n], np.asarray(res.res_norms)
+        if method != "pcg_tol":
+            # only the tolerance solver reads these; keying them for the
+            # fixed-iteration methods would recompile bit-identical programs
+            tol, max_iters = None, None
         fn = self._solve_compiled(method, iters, batched=b.ndim == 2,
-                                  fused=use_fused)
+                                  fused=use_fused, tol=tol,
+                                  max_iters=max_iters)
         bd = self.to_device_vec(b)
         x0 = np.zeros(b.shape) if x0 is None else np.asarray(x0)
         if b.ndim == 2 and x0.ndim == 1:
@@ -532,10 +573,12 @@ class AzulEngine:
             # b and x0 agree on the batched sharding spec
             x0 = np.broadcast_to(x0, b.shape)
         x0d = self.to_device_vec(x0)
-        x, norms = fn(bd, x0d)
+        x, norms, its = fn(bd, x0d)
+        self.last_solve_info["iters"] = np.asarray(its)
         return self.from_device_vec(x), np.asarray(norms)
 
-    def _solve_local(self, method, iters, b, x0, fused=False):
+    def _solve_local(self, method, iters, b, x0, fused=False, tol=1e-8,
+                     max_iters=200):
         b = jnp.asarray(np.asarray(b), self.dtype)
         b_pad = jnp.zeros(b.shape[:-1] + (self.n_pad,), self.dtype)
         b_pad = b_pad.at[..., : self.n].set(b)
@@ -552,8 +595,14 @@ class AzulEngine:
             return spmv_ell_padded(ell.cols, ell.vals, x)
 
         dinv = self._dinv_pad
+        # single source of truth for path selection: the same kind that
+        # last_solve_info reports and the tests assert on
+        kind = self.substrate_kind(method, fused)
         sub = None
-        if fused:
+        if kind == "fused_ic0":
+            sub = fused_ic0_local_substrate(ell.cols, ell.vals, self._ic0,
+                                            self.n, self.n_pad)
+        elif kind == "fused":
             sub = fused_local_substrate(
                 ell.cols, ell.vals,
                 dinv=dinv if self.precond == "jacobi" else None,
@@ -569,7 +618,7 @@ class AzulEngine:
             ps = (lambda r: r * dinv) if self.precond == "jacobi" else (lambda r: r)
             return solvers.pcg_pipelined(mv, b_pad, psolve=ps, x0=x0_pad,
                                          iters=iters, substrate=sub)
-        if method == "pcg":
+        if method in ("pcg", "pcg_tol"):
             if self.precond == "block_ic0":
                 from .precond import apply_ic0
                 f = self._ic0
@@ -585,15 +634,22 @@ class AzulEngine:
                 ps = lambda r: r * dinv
             else:
                 ps = lambda r: r
+            if method == "pcg_tol":
+                return solvers.pcg_tol(mv, b_pad, psolve=ps, x0=x0_pad,
+                                       tol=tol, max_iters=max_iters,
+                                       substrate=sub)
             return solvers.pcg(mv, b_pad, psolve=ps, x0=x0_pad, iters=iters,
                                substrate=sub)
         raise ValueError(method)
 
     def _solve_compiled(self, method, iters, batched: bool = False,
-                        fused: bool = False):
-        key = (method, iters, self.precond, batched, fused)
+                        fused: bool = False, tol: float | None = 1e-8,
+                        max_iters: int | None = 200):
+        key = (method, iters, self.precond, batched, fused, tol, max_iters)
         if key in self._compiled:
             return self._compiled[key]
+        # single source of truth for path selection (matches last_solve_info)
+        kind = self.substrate_kind(method, fused)
 
         mv = self._mk_matvec()
         dot = self._dot()
@@ -603,7 +659,7 @@ class AzulEngine:
         s3 = P(self._all_axes, None, None)
         s2 = P(self._all_axes, None)
         cols, vals = self.cols, self.vals
-        precond = self.precond if method in ("pcg", "pcg_pipe") else "none"
+        precond = self.precond if method in ("pcg", "pcg_tol", "pcg_pipe") else "none"
         if method == "jacobi":
             precond = "jacobi"
         if method == "pcg_pipe" and precond == "block_ic0":
@@ -666,7 +722,7 @@ class AzulEngine:
                 else:
                     ps = lambda r: r
                 sub = None
-                if fused and precond in ("jacobi", "none"):
+                if kind == "fused_shard":
                     # collective-fused shard substrate: one stacked psum
                     # carries [rr, rz]; the local update is the one-pass
                     # cg_update kernel on this tile's vector shard.
@@ -675,14 +731,25 @@ class AzulEngine:
                         extra[0] if precond == "jacobi" else None,
                         lambda s: lax.psum(s, psum_axes),
                     )
-                res = solvers.pcg(amv, b_loc, psolve=ps, x0=x0_loc,
-                                  iters=iters, dot=dot, substrate=sub)
-            return res.x, res.res_norms
+                elif kind == "fused_shard_ic0":
+                    # same collective fusion with the per-tile block-IC(0)
+                    # triangular solves as the (collective-free) psolve
+                    sub = fused_shard_ic0_substrate(
+                        amv, ps, lambda s: lax.psum(s, psum_axes)
+                    )
+                if method == "pcg_tol":
+                    res = solvers.pcg_tol(amv, b_loc, psolve=ps, x0=x0_loc,
+                                          tol=tol, max_iters=max_iters,
+                                          dot=dot, substrate=sub)
+                else:
+                    res = solvers.pcg(amv, b_loc, psolve=ps, x0=x0_loc,
+                                      iters=iters, dot=dot, substrate=sub)
+            return res.x, res.res_norms, res.iters
 
         f = _shard_map(
             prog, mesh=mesh,
             in_specs=(io_vec, io_vec, blk, blk) + extra_specs,
-            out_specs=(io_vec, P()),
+            out_specs=(io_vec, P(), P()),
         )
         fn = jax.jit(lambda b, x0: f(b, x0, cols, vals, *extra_args))
         self._compiled[key] = fn

@@ -217,7 +217,6 @@ def bcsr_from_csr(
     """
     n_rows, n_cols = m.shape
     nbr = pad_to(max(n_rows, 1), bm) // bm
-    nbc = pad_to(max(n_cols, 1), bn) // bn
 
     # bucket nnz by (block_row, block_col)
     buckets: dict[tuple[int, int], list[tuple[int, int, float]]] = {}

@@ -20,7 +20,6 @@ All functions must be called *inside* shard_map with the axis names bound.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -29,7 +29,7 @@ from typing import NamedTuple
 import numpy as np
 import jax.numpy as jnp
 
-from .formats import CSR, ELL, csr_from_dense, ell_from_csr, pad_to
+from .formats import CSR, pad_to
 
 __all__ = ["Plan1D", "Plan2D", "plan_1d", "plan_2d", "split_rows", "tile_csr"]
 

@@ -20,7 +20,8 @@ from .formats import CSR, ELL, ell_from_csr
 from .levels import LevelSchedule, build_schedule
 from .spops import sptrsv_ell
 
-__all__ = ["ic0", "IC0Factors", "jacobi_inv_diag", "csr_transpose"]
+__all__ = ["ic0", "IC0Factors", "jacobi_inv_diag", "csr_transpose",
+           "apply_ic0", "make_fused_ic0_apply"]
 
 
 def jacobi_inv_diag(m: CSR) -> np.ndarray:
@@ -148,7 +149,57 @@ def ic0(m: CSR, dtype=np.float32, width_pad: int = 8, row_pad: int = 8) -> IC0Fa
 
 
 def apply_ic0(f: IC0Factors, r: jnp.ndarray) -> jnp.ndarray:
-    """z = (L L^T)^-1 r via two level-scheduled SpTRSVs."""
+    """z = (L L^T)^-1 r via two level-scheduled SpTRSVs (the reference
+    op-per-wavefront composition; each level round-trips the full solution
+    vector through an XLA gather/scatter pair)."""
     zp = sptrsv_ell(f.ell_l, f.sched_l, r)
     z_rev = sptrsv_ell(f.ell_u_rev, f.sched_u_rev, zp[::-1])
     return z_rev[::-1]
+
+
+def make_fused_ic0_apply(f: IC0Factors, n: int, n_pad: int, dtype):
+    """Build the fused IC(0) application for the solver substrates.
+
+    Returns ``apply_dot(r_pad) -> (z_pad, rz)`` operating on the solver's
+    (n_pad,) padded layout: both triangular solves run as single
+    ``kernels.ops.sptrsv_solve_dot`` launches (whole wavefront sequence per
+    kernel, solution VMEM-resident -- no per-level HBM round trip), and the
+    second (reversed-U) solve emits ``rz = dot(r, z)`` in-stream:
+    dot(r, z) == dot(flip(r), z_rev), so the dot weight vector is just the
+    flipped residual.  Numerically this is the same per-level arithmetic as
+    :func:`apply_ic0` (the kernel's reference path IS that composition),
+    property-verified in tests.
+    """
+    from ..kernels import ops
+
+    ell_l, ell_u = f.ell_l, f.ell_u_rev
+    rp_l, rp_u = ell_l.rows_padded, ell_u.rows_padded
+    sched_l, sched_u = f.sched_l.rows, f.sched_u_rev.rows
+
+    def _inv_diag(e):
+        from .spops import extract_diag_ell
+
+        d = extract_diag_ell(e)
+        d = jnp.where(d == 0, 1.0, d)
+        di = jnp.ones((e.rows_padded,), dtype)
+        return di.at[: e.n_rows].set(1.0 / d)
+
+    dinv_l, dinv_u = _inv_diag(ell_l), _inv_diag(ell_u)
+    # the factor-row gathers are call-invariant and this closure runs
+    # inside scan/while_loop bodies (twice per PCG iteration): pack ONCE
+    # here, so only the O(n)-word b/wdot gathers happen per call
+    pack_l = ops.sptrsv_solve_pack(ell_l.cols, ell_l.vals, dinv_l, sched_l, n)
+    pack_u = ops.sptrsv_solve_pack(ell_u.cols, ell_u.vals, dinv_u, sched_u, n)
+
+    def apply_dot(r_pad):
+        b_l = jnp.zeros((rp_l,), dtype).at[:n].set(r_pad[:n])
+        zp, _ = ops.sptrsv_solve_dot(ell_l.cols, ell_l.vals, dinv_l, b_l,
+                                     sched_l, None, n_rows=n, pack=pack_l)
+        b_u = jnp.zeros((rp_u,), dtype).at[:n].set(zp[:n][::-1])
+        w_u = jnp.zeros((rp_u,), dtype).at[:n].set(r_pad[:n][::-1])
+        z_rev, rz = ops.sptrsv_solve_dot(ell_u.cols, ell_u.vals, dinv_u, b_u,
+                                         sched_u, w_u, n_rows=n, pack=pack_u)
+        z = jnp.zeros((n_pad,), dtype).at[:n].set(z_rev[:n][::-1])
+        return z, rz
+
+    return apply_dot

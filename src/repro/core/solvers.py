@@ -23,14 +23,16 @@ is exactly the amortize-the-matrix-stream regime the batched kernels
 (``ell_spmm``) exploit.  Residual traces become ``(iters + 1, k)`` and
 iteration counts ``(k,)``.
 
-Fused hot path: ``pcg``/``pcg_pipelined`` accept a ``substrate``
+Fused hot path: ``pcg``/``pcg_tol``/``pcg_pipelined`` accept a ``substrate``
 (:mod:`repro.core.substrate`) bundling fused implementations of the
 iteration's ops -- SpMV with the dot(p, Ap) denominator emitted from the
-matrix stream, and a one-pass vector update producing x', r', z and both
-dots.  With ``substrate=None`` a reference substrate is composed from the
-``matvec``/``psolve``/``dot`` arguments, reproducing the historical unfused
-op sequence exactly; the engine injects fused substrates (Pallas kernels
-locally, collective-fused shard substrates under ``shard_map``).
+matrix stream, the p-update folded into the SpMV gather, and a one-pass
+vector update producing x', r', z and both dots (for IC(0), with the two
+triangular solves as single whole-solve kernels).  With ``substrate=None``
+a reference substrate is composed from the ``matvec``/``psolve``/``dot``
+arguments, reproducing the historical unfused op sequence exactly; the
+engine injects fused substrates (Pallas kernels locally, collective-fused
+shard substrates under ``shard_map``).
 
 Convergence bookkeeping (residual-norm trace) is carried through the scan so
 benchmarks can plot paper-style convergence curves without re-running.
@@ -40,7 +42,6 @@ from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -111,8 +112,10 @@ def pcg(
     ``psolve``/``dot`` arguments (the historical unfused sequence); a fused
     substrate runs the same recurrence with the denominator emitted from
     the matrix stream and the three vector updates + two dots in one pass.
-    Only ``p = z + beta p`` stays a separate op -- beta depends on the rz
-    this iteration's update just produced.
+    The loop is phrased in *folded* form: ``p = z + beta p`` executes at
+    the top of the step through ``fold_matvec_dot``, so fused substrates
+    can compute it at SpMV-gather time (same recurrence, same values --
+    the scan simply carries (z, beta) instead of a pre-updated p).
     """
     sub = substrate if substrate is not None else reference_substrate(
         matvec, psolve, dot
@@ -120,20 +123,22 @@ def pcg(
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - sub.matvec(x)
     z = sub.psolve(r)
-    p = z
     rz = sub.dot(r, z)
     r0 = _norm(sub.dot(r, r))
+    p = jnp.zeros_like(b)
+    beta = jnp.zeros_like(rz)          # first fold: p = z + 0*0 = z
 
     def step(carry, _):
-        x, r, p, rz = carry
-        ap, denom = sub.matvec_dot(p)
+        x, r, z, p, rz, beta = carry
+        p, ap, denom = sub.fold_matvec_dot(z, p, beta)
         alpha = rz / jnp.where(denom == 0, 1.0, denom)
         x, r, z, rr, rz_new = sub.update(alpha, x, r, p, ap)
         beta = rz_new / jnp.where(rz == 0, 1.0, rz)
-        p = z + beta * p
-        return (x, r, p, rz_new), _norm(rr)
+        return (x, r, z, p, rz_new, beta), _norm(rr)
 
-    (x, r, p, rz), norms = lax.scan(step, (x, r, p, rz), None, length=iters)
+    (x, r, z, p, rz, beta), norms = lax.scan(
+        step, (x, r, z, p, rz, beta), None, length=iters
+    )
     return SolveResult(x, jnp.concatenate([r0[None], norms]), _iters_like(b, iters))
 
 
@@ -214,49 +219,54 @@ def pcg_tol(
     tol: float = 1e-8,
     max_iters: int = 1000,
     dot: Dot = _default_dot,
+    substrate: SolverSubstrate | None = None,
 ) -> SolveResult:
     """PCG with relative-tolerance stopping (while_loop).
+
+    The body runs the same folded, substrate-phrased recurrence as
+    :func:`pcg` -- with a fused substrate every iteration of the tolerance
+    loop is the fused hot path (in-stream denominator, one-pass update,
+    p-fold), and the stopping test reuses the ``rr`` the update already
+    produced instead of paying a fresh dot.  ``substrate=None`` composes
+    the reference substrate from the arguments: identical values, and in
+    particular *identical iteration counts*, fused vs reference.
 
     Batched ``(k, n)`` b: the loop runs until *every* RHS meets the
     tolerance (or max_iters); already-converged RHS keep iterating
     harmlessly while ``iters`` records, per RHS, how many iterations it
     was still active."""
+    sub = substrate if substrate is not None else reference_substrate(
+        matvec, psolve, dot
+    )
     x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - matvec(x)
-    z = psolve(r)
-    p = z
-    rz = dot(r, z)
-    bnorm = _norm(dot(b, b))
+    r = b - sub.matvec(x)
+    z = sub.psolve(r)
+    rz = sub.dot(r, z)
+    bnorm = _norm(sub.dot(b, b))
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+    p = jnp.zeros_like(b)
+    beta = jnp.zeros_like(rz)          # first fold: p = z + 0*0 = z
 
-    def active(r):
-        return _norm(dot(r, r)) / bnorm > tol
-
-    # the per-RHS active mask rides the carry so each iteration pays dot(r,r)
-    # exactly once (in body), matching the single-RHS cost of the old loop
     def cond(state):
-        _, _, _, _, act, _, k = state
+        act, k = state[6], state[8]
         return jnp.any(act) & (k < max_iters)
 
     def body(state):
-        x, r, p, rz, act, it, k = state
+        x, r, z, p, rz, beta, act, it, k = state
         it = it + act.astype(jnp.int32)
-        ap = matvec(p)
-        denom = dot(p, ap)
+        p, ap, denom = sub.fold_matvec_dot(z, p, beta)
         alpha = rz / jnp.where(denom == 0, 1.0, denom)
-        x = x + alpha * p
-        r = r - alpha * ap
-        z = psolve(r)
-        rz_new = dot(r, z)
+        x, r, z, rr, rz_new = sub.update(alpha, x, r, p, ap)
         beta = rz_new / jnp.where(rz == 0, 1.0, rz)
-        p = z + beta * p
-        return (x, r, p, rz_new, active(r), it, k + 1)
+        act = _norm(rr) / bnorm > tol
+        return (x, r, z, p, rz_new, beta, act, it, k + 1)
 
+    act0 = _norm(sub.dot(r, r)) / bnorm > tol
     it0 = _iters_like(b, 0)
-    x, r, p, rz, act, it, k = lax.while_loop(
-        cond, body, (x, r, p, rz, active(r), it0, jnp.int32(0))
+    x, r, z, p, rz, beta, act, it, k = lax.while_loop(
+        cond, body, (x, r, z, p, rz, beta, act0, it0, jnp.int32(0))
     )
-    rn = _norm(dot(r, r))
+    rn = _norm(sub.dot(r, r))
     return SolveResult(x, jnp.stack([rn]), it)
 
 

@@ -80,7 +80,6 @@ def sptrsv_ell(m: ELL, sched: LevelSchedule, b: jnp.ndarray) -> jnp.ndarray:
     # x carries one extra slot (index n) that absorbs padded scatter/gather.
     x0 = jnp.zeros((n + 1,), b.dtype)
     cols, vals = m.cols, m.vals
-    r_idx = jnp.arange(m.rows_padded)[:, None]
 
     def level_step(x, level_rows):
         # level_rows: (max_width,) row ids, padded with n (dropped on scatter)
@@ -95,5 +94,4 @@ def sptrsv_ell(m: ELL, sched: LevelSchedule, b: jnp.ndarray) -> jnp.ndarray:
         return x, None
 
     x, _ = jax.lax.scan(level_step, x0, sched.rows)
-    del r_idx
     return x[:n]

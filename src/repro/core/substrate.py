@@ -1,19 +1,27 @@
 """Solver substrates: fused-kernel vs. reference implementations of the
 PCG iteration's hot ops.
 
-A *substrate* bundles the four callables one PCG iteration consumes:
+A *substrate* bundles the callables one PCG iteration consumes:
 
   ``matvec(v)``                 -- y = A v
   ``psolve(r)``                 -- z = M^-1 r
   ``dot(u, v)``                 -- (global) dot product
-  ``matvec_dot(p)``             -- (A p, dot(p, A p)) fused: the CG
+  ``fold_matvec_dot(z, p, b)``  -- (p', A p', dot(p', A p')): the CG
                                    denominator emitted from the matrix
-                                   stream itself (kernels.spmv_dot)
+                                   stream itself, with the p-update
+                                   p' = z + beta*p folded into the SpMV
+                                   gather -- the separate 3n p-update
+                                   stream disappears (kernels.spmv_dot
+                                   p-fold variants; beta = 0 recovers the
+                                   plain fused SpMV + dot)
   ``update(alpha, x, r, p, ap)``-- (x', r', z, rr, rz) fused one-pass CG
-                                   vector update (kernels.vecops.cg_update)
+                                   vector update (kernels.vecops.cg_update;
+                                   for IC(0) the preconditioner application
+                                   itself fuses in via the whole-solve
+                                   SpTRSV kernel)
 
-``solvers.pcg`` is written against this interface; which implementation
-backs it is a deployment decision:
+``solvers.pcg``/``solvers.pcg_tol`` are written against this interface;
+which implementation backs it is a deployment decision:
 
 * ``reference_substrate`` composes the caller's matvec/psolve/dot with
   plain jnp -- bit-identical to the historical unfused iteration.  This is
@@ -24,19 +32,30 @@ backs it is a deployment decision:
   kernels are inactive it falls back to the *fused jnp composition* --
   the same arithmetic in the same order, so fused results are
   backend-independent.
+* ``fused_ic0_local_substrate`` extends the local flavor to the paper's
+  heavyweight preconditioner: the CG vector update runs ``cg_update`` and
+  the IC(0) application runs ``kernels.sptrsv_solve_dot`` -- BOTH
+  triangular solves execute as single kernel launches with the solution
+  vector VMEM-resident across every wavefront (no per-level HBM round
+  trip), and the second solve emits dot(r', z) = rz in-stream, so the
+  preconditioned residual never takes a second pass.
 * ``fused_shard_substrate`` is the ``shard_map`` flavor the engine builds
   per tile: local fused update + ONE stacked psum for [rr, rz] (the
   reduction-fusion trick of pipelined CG applied to standard PCG), and the
-  NoC matvec with a psum'd denominator.
+  NoC matvec with a psum'd denominator.  ``fused_shard_ic0_substrate`` is
+  the same collective fusion with the per-tile block-IC(0) triangular
+  solves as the local psolve.
 
-The traffic model behind the fusion (see README "Performance") is exposed
-as :func:`modeled_vector_traffic` so benchmarks can record it.
+The traffic models behind the fusions (see README "Performance") are
+exposed as :func:`modeled_vector_traffic` / :func:`modeled_ic0_traffic` so
+benchmarks can record them.
 """
 
 from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
@@ -46,8 +65,11 @@ __all__ = [
     "SolverSubstrate",
     "reference_substrate",
     "fused_local_substrate",
+    "fused_ic0_local_substrate",
     "fused_shard_substrate",
+    "fused_shard_ic0_substrate",
     "modeled_vector_traffic",
+    "modeled_ic0_traffic",
 ]
 
 
@@ -63,7 +85,7 @@ class SolverSubstrate(NamedTuple):
     matvec: Callable
     psolve: Callable
     dot: Callable
-    matvec_dot: Callable
+    fold_matvec_dot: Callable
     update: Callable
 
 
@@ -72,9 +94,10 @@ def reference_substrate(matvec, psolve, dot=None) -> SolverSubstrate:
     the verification oracle and for preconditioners without a fused path."""
     dot = dot or _dot
 
-    def matvec_dot(p):
+    def fold_matvec_dot(z, p, beta):
+        p = z + beta * p
         ap = matvec(p)
-        return ap, dot(p, ap)
+        return p, ap, dot(p, ap)
 
     def update(alpha, x, r, p, ap):
         x = x + alpha * p
@@ -84,7 +107,40 @@ def reference_substrate(matvec, psolve, dot=None) -> SolverSubstrate:
         rr = dot(r, r)
         return x, r, z, rr, rz
 
-    return SolverSubstrate("reference", matvec, psolve, dot, matvec_dot, update)
+    return SolverSubstrate("reference", matvec, psolve, dot,
+                           fold_matvec_dot, update)
+
+
+def _ell_stream_ops(cols, vals):
+    """The shared ELL-operator pair (matvec, fold_matvec_dot) for local
+    fused substrates: Pallas kernels when active, the fused jnp
+    composition otherwise.  Vectors arrive in solver layout ((n,) or
+    (k, n)); kernel calls transpose to the (n, k) kernel layout."""
+
+    def matvec(v):
+        if v.ndim == 2:
+            if ops.kernels_active():
+                return ops.ell_spmm(cols, vals, v.T).T
+            return spops.spmm_ell_padded(cols, vals, v)
+        return ops.ell_spmv(cols, vals, v)
+
+    def fold_matvec_dot(z, p, beta):
+        if z.ndim == 2:
+            if ops.kernels_active():
+                pn, y, pap = ops.ell_spmm_pfold_dot(
+                    cols, vals, z.T, p.T, jnp.reshape(beta, (-1,))
+                )
+                return pn.T, y.T, pap[:, None]
+            pn = z + beta * p
+            y = spops.spmm_ell_padded(cols, vals, pn)
+            return pn, y, _dot(pn, y)
+        if ops.kernels_active():
+            return ops.ell_spmv_pfold_dot(cols, vals, z, p, beta)
+        pn = z + beta * p
+        y = spops.spmv_ell_padded(cols, vals, pn)
+        return pn, y, _dot(pn, y)
+
+    return matvec, fold_matvec_dot
 
 
 def fused_local_substrate(cols, vals, dinv=None) -> SolverSubstrate:
@@ -96,30 +152,73 @@ def fused_local_substrate(cols, vals, dinv=None) -> SolverSubstrate:
     batched kernel calls transpose to the (n, k) kernel layout only when
     the Pallas path is active.
     """
-
-    def matvec(v):
-        if v.ndim == 2:
-            if ops.kernels_active():
-                return ops.ell_spmm(cols, vals, v.T).T
-            return spops.spmm_ell_padded(cols, vals, v)
-        return ops.ell_spmv(cols, vals, v)
+    matvec, fold_matvec_dot = _ell_stream_ops(cols, vals)
 
     def psolve(r):
         return r * dinv if dinv is not None else r
 
-    def matvec_dot(p):
-        if p.ndim == 2:
-            if ops.kernels_active():
-                y, pap = ops.ell_spmm_dot(cols, vals, p.T)
-                return y.T, pap[:, None]
-            y = spops.spmm_ell_padded(cols, vals, p)
-            return y, _dot(p, y)
-        return ops.ell_spmv_dot(cols, vals, p)
-
     def update(alpha, x, r, p, ap):
         return ops.cg_update(alpha, x, r, p, ap, dinv)
 
-    return SolverSubstrate("fused", matvec, psolve, _dot, matvec_dot, update)
+    return SolverSubstrate("fused", matvec, psolve, _dot,
+                           fold_matvec_dot, update)
+
+
+def fused_ic0_local_substrate(cols, vals, factors, n: int,
+                              n_pad: int) -> SolverSubstrate:
+    """Local fused substrate for ``precond="block_ic0"``.
+
+    ``cols``/``vals``: the engine's (n_pad, w) padded ELL of A; ``factors``:
+    :class:`repro.core.precond.IC0Factors`; ``n``: true row count.  The
+    preconditioner application z = (L L^T)^-1 r' runs as two
+    ``sptrsv_solve_dot`` launches -- each keeps its solution VMEM-resident
+    across all wavefronts instead of round-tripping full vectors per level,
+    and the second (reversed-U) solve emits rz = dot(r', z) in-stream:
+    dot(r', z) == dot(flip(r'), z_rev), so the dot weight vector is just
+    the flipped residual.  Batched (k, n_pad) inputs vmap the triangular
+    part (the factors are shared; each RHS is an independent solve).
+    """
+    from .precond import make_fused_ic0_apply
+
+    matvec, fold_matvec_dot = _ell_stream_ops(cols, vals)
+    # (n_pad,) residual -> (z (n_pad,), rz scalar), fully fused
+    _apply_dot = make_fused_ic0_apply(factors, n, n_pad, vals.dtype)
+
+    def psolve(r):
+        if r.ndim == 2:
+            return jax.vmap(lambda v: _apply_dot(v)[0])(r)
+        return _apply_dot(r)[0]
+
+    def update(alpha, x, r, p, ap):
+        # one-pass x/r update + rr (identity z discarded), then the fused
+        # two-solve preconditioner application with rz in-stream
+        xo, ro, _, rr, _ = ops.cg_update(alpha, x, r, p, ap, None)
+        if ro.ndim == 2:
+            z, rz = jax.vmap(_apply_dot)(ro)
+            return xo, ro, z, rr, rz[:, None]
+        z, rz = _apply_dot(ro)
+        return xo, ro, z, rr, rz
+
+    return SolverSubstrate("fused_ic0", matvec, psolve, _dot,
+                           fold_matvec_dot, update)
+
+
+def _shard_stream_ops(matvec, psum):
+    """The shared per-tile pair (dot, fold_matvec_dot) for the shard_map
+    substrates.  The p-fold stays a local jnp composition -- under
+    shard_map the SpMV is the NoC closure, so there is no single matrix
+    stream to fold into; the fused win is collective fusion (see the
+    flavors below)."""
+
+    def dot(u, v):
+        return psum(_dot(u, v))
+
+    def fold_matvec_dot(z, p, beta):
+        p = z + beta * p
+        ap = matvec(p)
+        return p, ap, psum(_dot(p, ap))
+
+    return dot, fold_matvec_dot
 
 
 def fused_shard_substrate(matvec, dinv, psum) -> SolverSubstrate:
@@ -130,25 +229,44 @@ def fused_shard_substrate(matvec, dinv, psum) -> SolverSubstrate:
     (or None); ``psum`` the engine's all-axes psum.  The fused win here is
     collective fusion: the one-pass update emits local [rr, rz] partials
     that ride a SINGLE stacked psum instead of two back-to-back
-    latency-bound reductions (plus the local Pallas kernel on TPU).
+    latency-bound reductions (plus the local Pallas kernel on TPU).  The
+    p-fold stays a local jnp composition -- under shard_map the SpMV is the
+    NoC closure, so there is no single matrix stream to fold into.
     """
 
-    def dot(u, v):
-        return psum(_dot(u, v))
+    dot, fold_matvec_dot = _shard_stream_ops(matvec, psum)
 
     def psolve(r):
         return r * dinv if dinv is not None else r
-
-    def matvec_dot(p):
-        ap = matvec(p)
-        return ap, psum(_dot(p, ap))
 
     def update(alpha, x, r, p, ap):
         x, r, z, rr, rz = ops.cg_update(alpha, x, r, p, ap, dinv)
         s = psum(jnp.stack([rr, rz]))      # ONE collective for both dots
         return x, r, z, s[0], s[1]
 
-    return SolverSubstrate("fused_shard", matvec, psolve, dot, matvec_dot, update)
+    return SolverSubstrate("fused_shard", matvec, psolve, dot,
+                           fold_matvec_dot, update)
+
+
+def fused_shard_ic0_substrate(matvec, psolve_local, psum) -> SolverSubstrate:
+    """``shard_map`` flavor for ``precond="block_ic0"``: the per-tile
+    block-IC(0) triangular solves (``psolve_local``, collective-free --
+    each tile factors its own diagonal block) compose with the one-pass
+    ``cg_update``, and [rr, rz] ride a single stacked psum exactly as in
+    :func:`fused_shard_substrate`.  The reference path for the same
+    preconditioner issues three separate reductions per iteration."""
+
+    dot, fold_matvec_dot = _shard_stream_ops(matvec, psum)
+
+    def update(alpha, x, r, p, ap):
+        xo, ro, _, rr, _ = ops.cg_update(alpha, x, r, p, ap, None)
+        z = psolve_local(ro)
+        rz = _dot(ro, z)
+        s = psum(jnp.stack([rr, rz]))      # ONE collective for both dots
+        return xo, ro, z, s[0], s[1]
+
+    return SolverSubstrate("fused_shard_ic0", matvec, psolve_local, dot,
+                           fold_matvec_dot, update)
 
 
 def modeled_vector_traffic(ell_width: float) -> dict:
@@ -161,13 +279,50 @@ def modeled_vector_traffic(ell_width: float) -> dict:
       z = dinv*r 3; dot(r,z) 2; dot(r,r) 1; p-update 3   -> 18 + w.
     Fused (x VMEM-resident in the SpMV kernel, dots emitted in-stream):
       spmv_dot 2 (p in, ap out); cg_update 8 (x,r,p,ap,dinv in; x,r,z
-      out); p-update 3 (beta depends on rz, so it cannot join the same
-      pass)                                               -> 13.
+      out); p-update 3 (beta known only after the update)  -> 13.
+    Fused + p-fold (p = z + beta*p computed at gather time inside the
+    SpMV kernel): the standalone p-update disappears; the fold pass
+    streams z in, p in, p' out, ap out = 4; cg_update 8    -> 12.
     """
     unfused = 18.0 + float(ell_width)
     fused = 13.0
+    fused_fold = 12.0
     return {
         "ell_width": float(ell_width),
+        "unfused_words_per_n": unfused,
+        "fused_words_per_n": fused,
+        "fused_fold_words_per_n": fused_fold,
+        "reduction": round(unfused / fused_fold, 3),
+    }
+
+
+def modeled_ic0_traffic(ell_width: float, n_levels_l: int,
+                        n_levels_u: int) -> dict:
+    """Vector words per IC(0)-PCG iteration, per RHS, in units of n.
+
+    The preconditioner application is two level-scheduled SpTRSVs.
+    Reference (one XLA op per wavefront): every level gathers the full
+    solution vector and scatters it back -- 2n per level -- plus b in /
+    x out / the two ordering flips per solve.  On top of the Jacobi
+    model's non-psolve terms (18 + w - 3, dropping the 3-word diagonal
+    scale) that is:
+
+      unfused = (15 + w) + 2*(2 + 2) + 2 * (L_l + L_u)
+
+    Fused (``sptrsv_solve_dot``): each solve keeps x VMEM-resident across
+    ALL wavefronts -- b in, x out, plus the dot weight vector for the
+    second solve and the two flips: ~7 words total, level-count
+    independent; with the p-fold SpMV (12 - 3 non-psolve words):
+
+      fused = 9 + 7 = 16
+    """
+    levels = float(n_levels_l + n_levels_u)
+    unfused = (15.0 + float(ell_width)) + 8.0 + 2.0 * levels
+    fused = 16.0
+    return {
+        "ell_width": float(ell_width),
+        "n_levels_l": int(n_levels_l),
+        "n_levels_u": int(n_levels_u),
         "unfused_words_per_n": unfused,
         "fused_words_per_n": fused,
         "reduction": round(unfused / fused, 3),

@@ -19,7 +19,6 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 
-import jax
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager

@@ -2,9 +2,11 @@
 
 Modules:
   ell_spmv   -- ELLPACK SpMV/SpMM (VPU gather path), the per-tile hot loop
-  spmv_dot   -- fused SpMV + dot: the CG denominator in the matrix stream
+  spmv_dot   -- fused SpMV + dot: the CG denominator in the matrix stream,
+                plus the p-fold variants (p = z + beta*p at gather time)
   bcsr_spmm  -- block-sparse x multi-RHS dense (MXU path, scalar prefetch)
-  sptrsv     -- level-wavefront triangular-solve step
+  sptrsv     -- level-wavefront triangular solve: per-level step and the
+                fused whole-solve kernel (x VMEM-resident, in-stream dot)
   vecops     -- fused CG vector stages: axpy+dot and the one-pass cg_update
   autotune   -- tile-size autotuner with a persistent JSON cache
   ops        -- jit'd dispatch wrappers (TPU kernel / interpret / jnp ref)

@@ -10,9 +10,16 @@ explicitly, so a one-time ``bench_kernels --autotune`` run speeds up every
 later solve at the same shapes.
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
-``~/.cache/repro/autotune.json``.  Writes are atomic (tmp + rename); the
-cache is a flat ``{key: {"tiles": {...}, "us": float}}`` map so it diffs
-cleanly and can be committed per deployment if desired.
+``~/.cache/repro/autotune.json``.  Writes are crash/concurrency-safe:
+every save goes to a fresh temp file in the same directory, is fsync'd,
+and lands via an atomic ``os.replace`` -- concurrent bench/CI processes
+can interleave records without ever exposing a torn/corrupted JSON file
+to a reader.  ``record`` additionally re-reads the file and *merges*
+before replacing, so two processes tuning different ops lose at most a
+same-key race, never each other's entries.  A reader that does encounter
+a corrupted cache (hand-edited, pre-fix writer) recovers by treating it
+as empty.  The cache is a flat ``{key: {"tiles": {...}, "us": float}}``
+map so it diffs cleanly and can be committed per deployment if desired.
 """
 
 from __future__ import annotations
@@ -47,11 +54,7 @@ def _load() -> dict:
     path = cache_path()
     if _memo is not None and _memo_path == path:
         return _memo
-    try:
-        with open(path) as f:
-            _memo = json.load(f)
-    except (OSError, ValueError):
-        _memo = {}
+    _memo = _read_disk(path)
     _memo_path = path
     return _memo
 
@@ -62,13 +65,30 @@ def clear_memo() -> None:
     _memo, _memo_path = None, None
 
 
+def _read_disk(path: str) -> dict:
+    """Parse the on-disk cache, treating missing/corrupted files as empty
+    (a torn write from a pre-atomic-rename version, or a hand edit, must
+    never poison the process or block future records)."""
+    try:
+        with open(path) as f:
+            out = json.load(f)
+        return out if isinstance(out, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
 def _save(cache: dict) -> None:
+    """Atomic, durable write: temp file in the destination directory,
+    fsync, then ``os.replace`` -- a concurrent reader sees either the old
+    complete file or the new complete file, never a partial one."""
     path = cache_path()
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
     try:
         with os.fdopen(fd, "w") as f:
             json.dump(cache, f, indent=1, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
     except OSError:
         try:
@@ -89,13 +109,51 @@ def lookup(op: str, shape: Iterable[int], dtype, backend: str | None = None) -> 
     return dict(ent["tiles"]) if ent else None
 
 
+class _cache_lock:
+    """Advisory cross-process lock for read-merge-replace (``flock`` on a
+    sidecar file; degrades to lock-free -- still atomic-rename safe -- on
+    platforms without fcntl)."""
+
+    def __init__(self, path: str):
+        self._path = path + ".lock"
+        self._fd = None
+
+    def __enter__(self):
+        try:
+            import fcntl
+        except ImportError:
+            return self
+        os.makedirs(os.path.dirname(self._path) or ".", exist_ok=True)
+        self._fd = os.open(self._path, os.O_CREAT | os.O_RDWR)
+        fcntl.flock(self._fd, fcntl.LOCK_EX)
+        return self
+
+    def __exit__(self, *exc):
+        if self._fd is not None:
+            import fcntl
+            fcntl.flock(self._fd, fcntl.LOCK_UN)
+            os.close(self._fd)
+        return False
+
+
 def record(op: str, shape, dtype, tiles: dict, us: float,
            backend: str | None = None) -> None:
-    cache = _load()
-    cache[make_key(op, shape, dtype, backend)] = {
-        "tiles": {k: int(v) for k, v in tiles.items()}, "us": round(float(us), 3),
-    }
-    _save(cache)
+    """Persist one winner.  Locked read-merge-replace against the *on-disk*
+    state (not just the in-process memo): concurrent bench/CI processes
+    each recording different ops interleave without dropping each other's
+    entries, and the atomic rename keeps every intermediate state a valid
+    JSON document for lock-free readers."""
+    global _memo, _memo_path
+    path = cache_path()
+    with _cache_lock(path):
+        cache = dict(_load())    # entries this process already knows...
+        cache.update(_read_disk(path))   # ...but the disk state is newer
+        cache[make_key(op, shape, dtype, backend)] = {
+            "tiles": {k: int(v) for k, v in tiles.items()},
+            "us": round(float(us), 3),
+        }
+        _memo, _memo_path = cache, path
+        _save(cache)
 
 
 def tile_candidates(total: int, quantum: int = 8, cap: int = 512) -> list[int]:

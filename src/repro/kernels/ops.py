@@ -30,7 +30,10 @@ from .ell_spmv import DEFAULT_TM, DEFAULT_TW
 from .bcsr_spmm import bcsr_spmm as _bcsr_spmm_pallas
 from .spmv_dot import ell_spmv_dot as _ell_spmv_dot_pallas
 from .spmv_dot import ell_spmm_dot as _ell_spmm_dot_pallas
+from .spmv_dot import ell_spmv_pfold_dot as _ell_spmv_pfold_dot_pallas
+from .spmv_dot import ell_spmm_pfold_dot as _ell_spmm_pfold_dot_pallas
 from .sptrsv import sptrsv_level_step as _sptrsv_step_pallas
+from .sptrsv import sptrsv_solve_dot as _sptrsv_solve_dot_pallas
 from .sptrsv import DEFAULT_TL
 from .vecops import axpy_dot as _axpy_dot_pallas
 from .vecops import cg_update as _cg_update_pallas
@@ -38,7 +41,9 @@ from .vecops import DEFAULT_TN
 
 __all__ = [
     "ell_spmv", "ell_spmm", "ell_spmv_dot", "ell_spmm_dot", "bcsr_spmm",
-    "sptrsv_level_step", "axpy_dot", "cg_update",
+    "ell_spmv_pfold_dot", "ell_spmm_pfold_dot",
+    "sptrsv_level_step", "sptrsv_solve_dot", "sptrsv_solve_pack",
+    "axpy_dot", "cg_update",
     "backend_mode", "kernels_active",
 ]
 
@@ -136,6 +141,29 @@ def ell_spmm_dot(cols, vals, x, tm: int | None = None, tw: int | None = None):
     return ref.ell_spmm_dot_ref(cols, vals, x)
 
 
+def ell_spmv_pfold_dot(cols, vals, z, p, beta,
+                       tm: int | None = None, tw: int | None = None):
+    """p-fold SpMV + dot: p' = z + beta*p at gather time, y = A @ p',
+    pap = dot(p', y) -- kills the separate 3n p-update stream."""
+    use, interp = _dispatch()
+    if use:
+        tm, tw = _tiles_2d("ell_spmv_pfold_dot", cols, vals.dtype, tm, tw)
+        return _ell_spmv_pfold_dot_pallas(cols, vals, z, p, beta,
+                                          tm=tm, tw=tw, interpret=interp)
+    return ref.ell_spmv_pfold_dot_ref(cols, vals, z, p, beta)
+
+
+def ell_spmm_pfold_dot(cols, vals, z, p, beta,
+                       tm: int | None = None, tw: int | None = None):
+    """Multi-RHS p-fold (kernel layout (n, k), beta (k,))."""
+    use, interp = _dispatch()
+    if use:
+        tm, tw = _tiles_2d("ell_spmm_pfold_dot", cols, vals.dtype, tm, tw)
+        return _ell_spmm_pfold_dot_pallas(cols, vals, z, p, beta,
+                                          tm=tm, tw=tw, interpret=interp)
+    return ref.ell_spmm_pfold_dot_ref(cols, vals, z, p, beta)
+
+
 def bcsr_spmm(block_cols, blocks, x):
     use, interp = _dispatch()
     if use:
@@ -166,6 +194,70 @@ def sptrsv_level_step(cols, vals, diag, b, x, level_rows, tl: int | None = None)
         interpret=interp,
     )
     return x.at[level_rows].set(xr, mode="drop")
+
+
+def sptrsv_solve_pack(cols, vals, dinv, sched_rows, n_rows: int) -> dict:
+    """Pre-gather the call-invariant kernel inputs of ``sptrsv_solve_dot``
+    (the factor rows per level, the clamped/scatter row-id planes, the
+    padding mask and the per-level inverse diagonal).  These are
+    O(n_levels * W * w) gathers -- loop-invariant for a fixed factor, so
+    callers that run the solve inside a scan/while_loop (the IC(0)
+    substrates: twice per PCG iteration) must build the pack ONCE and pass
+    it via ``pack=`` instead of re-gathering the factor every iteration."""
+    rows_p = cols.shape[0]
+    lr_g = jnp.minimum(sched_rows, rows_p - 1)     # (L, W) gather-safe ids
+    return {
+        "cols_l": cols[lr_g],
+        "vals_l": vals[lr_g],
+        "lr_g": lr_g,
+        "lr_s": jnp.minimum(sched_rows, rows_p),   # sentinel -> absorber
+        "mask": (sched_rows < n_rows).astype(vals.dtype),
+        "dinv_l": dinv[lr_g],
+        # constant zero dot-weight plane for wdot=None calls (the IC(0)
+        # L-solve): avoids materializing + gathering an n-word zeros
+        # vector every call on the solver hot loop
+        "wdot0": jnp.zeros(sched_rows.shape, vals.dtype),
+        "rows_p": rows_p,
+    }
+
+
+def sptrsv_solve_dot(cols, vals, dinv, b, sched_rows, wdot=None,
+                     n_rows: int | None = None, tl: int | None = None,
+                     pack: dict | None = None):
+    """Whole level-scheduled lower solve in ONE kernel launch, with
+    dot(wdot, x) emitted in-stream as rows solve (see ``sptrsv.py``).
+
+    cols/vals: (rows_p, w) padded ELL; dinv: (rows_p,) inverse diagonal;
+    b/wdot: (rows_p,); sched_rows: (n_levels, W) padded with a sentinel
+    >= ``n_rows`` (default rows_p).  Returns (x (rows_p,), dot(wdot, x)).
+    The reference path runs the identical per-level arithmetic as a scan;
+    the kernel keeps x VMEM-resident across every wavefront instead of
+    round-tripping it per level.  ``pack``: optional pre-gathered factor
+    planes from :func:`sptrsv_solve_pack` (hoists the loop-invariant
+    gathers out of solver loops); only the per-call b/wdot gathers remain.
+    """
+    rows_p, w = cols.shape
+    n_rows = rows_p if n_rows is None else n_rows
+    use, interp = _dispatch()
+    if not use:
+        if wdot is None:
+            wdot = jnp.zeros((rows_p,), vals.dtype)
+        return ref.sptrsv_solve_dot_ref(cols, vals, dinv, b, sched_rows,
+                                        wdot, n_rows)
+    nl, wl = sched_rows.shape
+    if tl is None:
+        hit = autotune.lookup("sptrsv_solve_dot", (nl, wl, w), vals.dtype) or {}
+        tl = _fit(wl, hit.get("tl") or DEFAULT_TL, 8)
+    if pack is None:
+        pack = sptrsv_solve_pack(cols, vals, dinv, sched_rows, n_rows)
+    lr_g = pack["lr_g"]
+    w_l = pack["wdot0"] if wdot is None else wdot[lr_g]
+    x, pp = _sptrsv_solve_dot_pallas(
+        pack["cols_l"], pack["vals_l"], lr_g, pack["lr_s"],
+        b[lr_g], pack["dinv_l"], w_l, pack["mask"],
+        rows_p=pack["rows_p"], tl=tl, interpret=interp,
+    )
+    return x, pp
 
 
 def axpy_dot(a, x, y, tn: int | None = None):

@@ -10,8 +10,9 @@ import jax.numpy as jnp
 
 __all__ = [
     "ell_spmv_ref", "ell_spmm_ref", "bcsr_spmm_ref",
-    "sptrsv_level_step_ref", "axpy_dot_ref",
+    "sptrsv_level_step_ref", "sptrsv_solve_dot_ref", "axpy_dot_ref",
     "ell_spmv_dot_ref", "ell_spmm_dot_ref", "cg_update_ref",
+    "ell_spmv_pfold_dot_ref", "ell_spmm_pfold_dot_ref",
 ]
 
 
@@ -69,6 +70,43 @@ def sptrsv_level_step_ref(
     return x.at[level_rows].set(xr, mode="drop")
 
 
+def sptrsv_solve_dot_ref(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    dinv: jnp.ndarray,
+    b: jnp.ndarray,
+    sched_rows: jnp.ndarray,
+    wdot: jnp.ndarray,
+    n_rows: int,
+):
+    """Whole level-scheduled lower solve plus dot(wdot, x), the contract of
+    the fused ``sptrsv_solve_dot`` kernel.
+
+    cols/vals: (rows_p, w) padded ELL of L; dinv: (rows_p,) inverse diagonal
+    (1.0 in padded rows); b/wdot: (rows_p,); sched_rows: (n_levels, W) row
+    ids padded with a sentinel >= n_rows.  Returns (x (rows_p,), pp scalar).
+    """
+    import jax
+
+    rows_p = cols.shape[0]
+    x0 = jnp.zeros((rows_p + 1,), vals.dtype)
+
+    def level_step(x, level_rows):
+        lr = jnp.minimum(level_rows, rows_p - 1)
+        c = cols[lr]
+        v = vals[lr]
+        off = jnp.where(c != lr[:, None], v, 0.0)
+        contrib = jnp.sum(off * x[c], axis=1)
+        xr = (b[lr] - contrib) * dinv[lr]
+        xr = jnp.where(level_rows < n_rows, xr, 0.0)
+        sc = jnp.minimum(level_rows, rows_p)       # sentinel -> absorber slot
+        return x.at[sc].add(xr), None
+
+    x, _ = jax.lax.scan(level_step, x0, sched_rows)
+    x = x[:rows_p]
+    return x, jnp.sum(wdot * x)
+
+
 def axpy_dot_ref(a, x: jnp.ndarray, y: jnp.ndarray):
     """Fused z = y + a*x ; returns (z, dot(z, z)) -- one CG pipeline stage."""
     z = y + a * x
@@ -87,6 +125,22 @@ def ell_spmm_dot_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray):
     (Y, pap) with Y = A @ X (rows_p, k), pap[j] = dot(X[:, j], Y[:, j])."""
     y = jnp.sum(vals[..., None] * x[cols], axis=1)
     return y, jnp.sum(x * y, axis=0)
+
+
+def ell_spmv_pfold_dot_ref(cols, vals, z, p, beta):
+    """p-fold contract: p' = z + beta*p computed at gather time, then
+    (p', y, pap) = (p', A @ p', dot(p', y)) from the one matrix stream."""
+    pn = z + beta * p
+    y = jnp.sum(vals * pn[cols], axis=1)
+    return pn, y, jnp.sum(pn * y)
+
+
+def ell_spmm_pfold_dot_ref(cols, vals, z, p, beta):
+    """Multi-RHS p-fold in kernel layout: z/p (rows_p, k), beta (k,).
+    Returns (p', Y, pap) with pap[j] = dot(p'[:, j], Y[:, j])."""
+    pn = z + jnp.reshape(beta, (1, -1)) * p
+    y = jnp.sum(vals[..., None] * pn[cols], axis=1)
+    return pn, y, jnp.sum(pn * y, axis=0)
 
 
 def cg_update_ref(alpha, x, r, p, ap, dinv=None):

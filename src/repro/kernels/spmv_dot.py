@@ -18,6 +18,12 @@ innermost so the output row tile accumulates in VMEM; ``x`` is fully
 VMEM-resident for the gather (Azul's "x halo in SRAM").  The multi-RHS
 variant (``ell_spmm_dot``) amortizes the one matrix stream over k stacked
 vectors and emits per-RHS dot partials.
+
+The ``*_pfold_dot`` variants additionally fold the CG search-direction
+update into the same stream: ``p = z + beta * p`` is computed once, on the
+first grid step, into the VMEM-resident output block that every subsequent
+gather reads -- the iteration's last standalone vector op (a 3n
+read-modify-write) disappears from HBM traffic entirely.
 """
 
 from __future__ import annotations
@@ -28,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["ell_spmv_dot", "ell_spmm_dot"]
+__all__ = ["ell_spmv_dot", "ell_spmm_dot", "ell_spmv_pfold_dot", "ell_spmm_pfold_dot"]
 
 DEFAULT_TM = 128
 DEFAULT_TW = 128
@@ -169,3 +175,172 @@ def ell_spmm_dot(
         interpret=interpret,
     )(cols, vals, x, x)
     return y, jnp.sum(partials, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# p-fold variants: p = z + beta * p computed AT GATHER TIME, inside the same
+# matrix stream that consumes it -- the separate 3n p-update op disappears
+# ---------------------------------------------------------------------------
+
+
+def _spmv_pfold_dot_kernel(beta_ref, z_ref, pold_ref, cols_ref, vals_ref,
+                           p_ref, y_ref, pap_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nw = pl.num_programs(1)
+    tm = y_ref.shape[0]
+
+    @pl.when((i == 0) & (j == 0))
+    def _fold():
+        # the whole p update happens once, on the first grid step, into the
+        # VMEM-resident output block every later gather reads from
+        p_ref[...] = z_ref[...] + beta_ref[0] * pold_ref[...]
+
+    p = p_ref[...]
+    partial = jnp.sum(vals_ref[...] * p[cols_ref[...]], axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+    @pl.when(j == nw - 1)
+    def _dot():
+        pr = jax.lax.dynamic_slice(p, (i * tm,), (tm,))
+        pap_ref[0] = jnp.sum(y_ref[...] * pr)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tw", "interpret"))
+def ell_spmv_pfold_dot(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    z: jnp.ndarray,
+    p: jnp.ndarray,
+    beta,
+    tm: int = DEFAULT_TM,
+    tw: int = DEFAULT_TW,
+    interpret: bool = False,
+):
+    """Fused p-update + SpMV + dot: p' = z + beta*p, y = A @ p', pap =
+    dot(p', y) -- one matrix stream, no separate p-update pass.  Square
+    padded operator as in ``ell_spmv_dot``; returns (p', y, pap)."""
+    rows_p, w = cols.shape
+    if z.shape != (rows_p,) or p.shape != (rows_p,):
+        raise ValueError(
+            f"ell_spmv_pfold_dot needs square padded vectors: z {z.shape} / "
+            f"p {p.shape} vs rows {rows_p}"
+        )
+    tm = min(tm, rows_p)
+    tw = min(tw, w)
+    if rows_p % tm or w % tw:
+        raise ValueError(f"ELL shape ({rows_p},{w}) not divisible by tile ({tm},{tw})")
+    grid = (rows_p // tm, w // tw)
+    beta_arr = jnp.reshape(jnp.asarray(beta, vals.dtype), (1,))
+    p_new, y, partials = pl.pallas_call(
+        _spmv_pfold_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((rows_p,), lambda i, j: (0,)),
+            pl.BlockSpec((rows_p,), lambda i, j: (0,)),
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows_p,), lambda i, j: (0,)),
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_p,), vals.dtype),
+            jax.ShapeDtypeStruct((rows_p,), vals.dtype),
+            jax.ShapeDtypeStruct((rows_p // tm,), vals.dtype),
+        ],
+        interpret=interpret,
+    )(beta_arr, z, p, cols, vals)
+    return p_new, y, jnp.sum(partials)
+
+
+def _spmm_pfold_dot_kernel(beta_ref, z_ref, pold_ref, cols_ref, vals_ref,
+                           p_ref, y_ref, pap_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nw = pl.num_programs(1)
+    tm, k = y_ref.shape
+
+    @pl.when((i == 0) & (j == 0))
+    def _fold():
+        p_ref[...] = z_ref[...] + beta_ref[...] * pold_ref[...]   # (N, K)
+
+    p = p_ref[...]
+    partial = jnp.sum(vals_ref[...][..., None] * p[cols_ref[...]], axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+    @pl.when(j == nw - 1)
+    def _dot():
+        pr = jax.lax.dynamic_slice(p, (i * tm, jnp.int32(0)), (tm, k))
+        pap_ref[0, :] = jnp.sum(y_ref[...] * pr, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tw", "interpret"))
+def ell_spmm_pfold_dot(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    z: jnp.ndarray,
+    p: jnp.ndarray,
+    beta: jnp.ndarray,
+    tm: int = DEFAULT_TM,
+    tw: int = DEFAULT_TW,
+    interpret: bool = False,
+):
+    """Multi-RHS p-fold: z/p are (rows_p, k) in kernel layout, beta (k,)
+    per-RHS.  Returns (p', Y, pap) with p' = z + beta*p, Y = A @ p', and
+    pap[j] = dot(p'[:, j], Y[:, j]) -- one matrix stream for everything."""
+    if z.ndim != 2:
+        raise ValueError(f"ell_spmm_pfold_dot expects (n, k) vectors, got {z.shape}")
+    rows_p, w = cols.shape
+    k = z.shape[1]
+    if z.shape[0] != rows_p or p.shape != z.shape:
+        raise ValueError(
+            f"ell_spmm_pfold_dot needs square padded vectors: z {z.shape} / "
+            f"p {p.shape} vs rows {rows_p}"
+        )
+    tm = min(tm, rows_p)
+    tw = min(tw, w)
+    if rows_p % tm or w % tw:
+        raise ValueError(f"ELL shape ({rows_p},{w}) not divisible by tile ({tm},{tw})")
+    grid = (rows_p // tm, w // tw)
+    beta_arr = jnp.broadcast_to(jnp.asarray(beta, vals.dtype).reshape(1, -1), (1, k))
+    full = lambda: pl.BlockSpec((rows_p, k), lambda i, j: (0, 0))
+    p_new, y, partials = pl.pallas_call(
+        _spmm_pfold_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, j: (0, 0)),
+            full(), full(),
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tw), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            full(),
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_p, k), vals.dtype),
+            jax.ShapeDtypeStruct((rows_p, k), vals.dtype),
+            jax.ShapeDtypeStruct((rows_p // tm, k), vals.dtype),
+        ],
+        interpret=interpret,
+    )(beta_arr, z, p, cols, vals)
+    return p_new, y, jnp.sum(partials, axis=0)

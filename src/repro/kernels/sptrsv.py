@@ -1,19 +1,39 @@
-"""Pallas TPU kernel: one SpTRSV wavefront (level) step.
+"""Pallas TPU kernels: SpTRSV wavefront steps -- per-level and whole-solve.
 
 The level schedule (repro.core.levels) turns SpTRSV's irregular dependency
-graph into a sequence of data-parallel wavefronts; `lax.scan` walks levels
-and this kernel executes the per-level hot compute:
+graph into a sequence of data-parallel wavefronts.  Two granularities:
 
-    for each row r in the level:  xr = (b[r] - sum_{c != r} L[r,c] x[c]) / d[r]
+``sptrsv_level_step`` executes ONE wavefront (`lax.scan` walks levels
+outside): inputs are the *pre-gathered* ELL rows of the level (the wrapper
+in ops.py gathers ``cols[level_rows]`` / ``vals[level_rows]`` -- a cheap
+XLA gather on the rows axis), plus the full x vector VMEM-resident for the
+random-access column gather, mirroring ell_spmv.  The scatter of the solved
+values back into x stays outside the kernel (XLA scatter), so every level
+round-trips the full x through HBM -- 2n words per level.
 
-Inputs are the *pre-gathered* ELL rows of the level (the wrapper in ops.py
-gathers ``cols[level_rows]`` / ``vals[level_rows]`` -- a cheap XLA gather on
-the rows axis), plus the full x vector VMEM-resident for the random-access
-column gather, mirroring ell_spmv.  The scatter of the solved values back
-into x stays outside the kernel (XLA scatter): TPU Pallas stores want static
-addressing, and the scatter is O(level width) -- not the hot loop.
+``sptrsv_solve_dot`` is the fused whole-solve variant the IC(0) substrate
+runs: ONE pallas_call whose grid walks (level, level-tile) with x held
+VMEM-resident for the *entire* solve (constant-index-map output block).
+The per-level scatter becomes an in-VMEM one-hot accumulate (each row is
+solved exactly once, so scattered adds never collide), and the kernel
+additionally emits dot(w, x) partials in-stream as rows are solved -- the
+CG ``rz`` numerator for free, no second pass over z.  Modeled vector
+traffic per solve drops from O(n_levels * n) to ~3n (see
+``substrate.modeled_ic0_traffic``).
 
-grid = (W / TL,), one program per tile of level rows.
+Scaling trade-off (deliberate): the one-hot scatter is O(rows_p) VPU
+compare/select work per solved row (MXU/VPU-shaped, TPU-compilable static
+addressing), so the kernel trades HBM traffic for on-chip vector work --
+the right trade in the memory-bound regime this repo models, but at very
+large n a dynamic-store scatter would win; revisit with real TPU timings
+(ROADMAP).  The wrapper also pre-gathers the factor rows per level into
+(n_levels, max_width, w) buffers -- fine for the suite's block/level
+shapes, pathological for a schedule that is simultaneously deep and wide.
+Like the other gathers in this repo the column access is a value-level
+gather; semantics are CI-verified in interpret mode, TPU-compiled tilings
+remain a ROADMAP item.
+
+grid = (W / TL,) for the level step; (n_levels, W / TL) for the full solve.
 VMEM = TL*w*(4+4) + (n+1)*4 + 4*TL*4.
 """
 
@@ -25,7 +45,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sptrsv_level_step"]
+__all__ = ["sptrsv_level_step", "sptrsv_solve_dot"]
 
 DEFAULT_TL = 128
 
@@ -73,3 +93,91 @@ def sptrsv_level_step(
         out_shape=jax.ShapeDtypeStruct((wl,), vals_lr.dtype),
         interpret=interpret,
     )(cols_lr, vals_lr, level_rows_clamped, b_lr, diag_lr, x)
+
+
+# ---------------------------------------------------------------------------
+# fused whole-solve: every wavefront in one kernel, x VMEM-resident, with an
+# in-stream dot(w, x) emitted as rows are solved
+# ---------------------------------------------------------------------------
+
+
+def _solve_dot_kernel(c_ref, v_ref, lrg_ref, lrs_ref, b_ref, d_ref, w_ref,
+                      m_ref, x_ref, pp_ref):
+    lv = pl.program_id(0)
+    t = pl.program_id(1)
+    first = (lv == 0) & (t == 0)
+    rows_p1 = x_ref.shape[0]
+
+    @pl.when(first)
+    def _init():
+        x_ref[...] = jnp.zeros_like(x_ref)
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+
+    c = c_ref[0]                         # (TL, w) int32, pre-gathered rows
+    v = v_ref[0]                         # (TL, w)
+    lr = lrg_ref[0]                      # (TL,) true row ids (gather-clamped)
+    x = x_ref[...]                       # (rows_p + 1,) resident across levels
+    off = jnp.where(c != lr[:, None], v, 0.0)
+    contrib = jnp.sum(off * x[c], axis=1)
+    xr = (b_ref[0] - contrib) * d_ref[0] * m_ref[0]   # padded slots -> 0
+    # in-VMEM scatter: rows are solved exactly once, so a one-hot accumulate
+    # never collides; sentinel slots land in the absorber row (rows_p).
+    sc = lrs_ref[0]                      # (TL,) scatter ids, sentinel -> rows_p
+    oh = sc[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, rows_p1), 1)
+    x_ref[...] = x + jnp.sum(jnp.where(oh, xr[:, None], 0.0), axis=0)
+    pp_ref[0] = pp_ref[0] + jnp.sum(w_ref[0] * xr)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_p", "tl", "interpret"))
+def sptrsv_solve_dot(
+    cols_l: jnp.ndarray,
+    vals_l: jnp.ndarray,
+    rows_g: jnp.ndarray,
+    rows_s: jnp.ndarray,
+    b_l: jnp.ndarray,
+    diag_l: jnp.ndarray,
+    w_l: jnp.ndarray,
+    mask_l: jnp.ndarray,
+    rows_p: int,
+    tl: int = DEFAULT_TL,
+    interpret: bool = False,
+):
+    """Whole level-scheduled solve, x VMEM-resident, plus dot(w, x) in-stream.
+
+    All inputs are pre-gathered per level (the ops.py wrapper does the XLA
+    row gathers once, outside the kernel):
+
+      cols_l/vals_l: (L, W, w) ELL rows of each level;
+      rows_g:        (L, W) row ids clamped to [0, rows_p) (mask source);
+      rows_s:        (L, W) scatter ids -- sentinel slots mapped to rows_p;
+      b_l/diag_l/w_l:(L, W) rhs, inverse diagonal, and dot vector per row;
+      mask_l:        (L, W) 1.0 on real rows, 0.0 on schedule padding.
+
+    Returns (x, pp): x (rows_p,) solved vector, pp = dot(w, x) accumulated
+    as rows were solved (exact -- padded slots are masked to zero).
+    """
+    nl, wl, w = cols_l.shape
+    tl = min(tl, wl)
+    if wl % tl:
+        raise ValueError(f"level width {wl} not divisible by tile {tl}")
+    grid = (nl, wl // tl)
+    lvl2 = lambda: pl.BlockSpec((1, tl), lambda i, j: (i, j))
+    x, pp = pl.pallas_call(
+        _solve_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tl, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tl, w), lambda i, j: (i, j, 0)),
+            lvl2(), lvl2(), lvl2(), lvl2(), lvl2(), lvl2(),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows_p + 1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_p + 1,), vals_l.dtype),
+            jax.ShapeDtypeStruct((1,), vals_l.dtype),
+        ],
+        interpret=interpret,
+    )(cols_l, vals_l, rows_g, rows_s, b_l, diag_l, w_l, mask_l)
+    return x[:rows_p], pp[0]

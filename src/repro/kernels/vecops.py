@@ -102,6 +102,25 @@ def _cg_update_kernel(a_ref, nv_ref, x_ref, r_ref, p_ref, ap_ref, d_ref,
     pp_ref[0, 1] = jnp.sum(rm * z)
 
 
+def _cg_update_kernel_nod(a_ref, nv_ref, x_ref, r_ref, p_ref, ap_ref,
+                          xo_ref, ro_ref, zo_ref, pp_ref):
+    # identity-psolve variant: no dinv stream (z == r', rz == rr) -- the
+    # IC(0) substrate and unpreconditioned CG run this, saving the 1n
+    # all-ones vector read the general kernel would pay
+    i = pl.program_id(0)
+    a = a_ref[0]
+    xo_ref[...] = x_ref[...] + a * p_ref[...]
+    ro = r_ref[...] - a * ap_ref[...]
+    ro_ref[...] = ro
+    zo_ref[...] = ro
+    tn = x_ref.shape[0]
+    idx = i * tn + jax.lax.broadcasted_iota(jnp.int32, (tn,), 0)
+    rm = jnp.where(idx < nv_ref[0], ro, jnp.zeros_like(ro))
+    rr = jnp.sum(rm * ro)
+    pp_ref[0, 0] = rr
+    pp_ref[0, 1] = rr
+
+
 def _cg_update_kernel_b(a_ref, nv_ref, x_ref, r_ref, p_ref, ap_ref, d_ref,
                         xo_ref, ro_ref, zo_ref, pp_ref):
     i = pl.program_id(0)
@@ -116,6 +135,22 @@ def _cg_update_kernel_b(a_ref, nv_ref, x_ref, r_ref, p_ref, ap_ref, d_ref,
     rm = jnp.where(idx < nv_ref[0], ro, jnp.zeros_like(ro))
     pp_ref[0, 0, :] = jnp.sum(rm * ro, axis=1)
     pp_ref[0, 1, :] = jnp.sum(rm * z, axis=1)
+
+
+def _cg_update_kernel_b_nod(a_ref, nv_ref, x_ref, r_ref, p_ref, ap_ref,
+                            xo_ref, ro_ref, zo_ref, pp_ref):
+    i = pl.program_id(0)
+    a = a_ref[...]                       # (K, 1) per-RHS alphas
+    xo_ref[...] = x_ref[...] + a * p_ref[...]
+    ro = r_ref[...] - a * ap_ref[...]    # (K, TN)
+    ro_ref[...] = ro
+    zo_ref[...] = ro
+    tn = x_ref.shape[1]
+    idx = i * tn + jax.lax.broadcasted_iota(jnp.int32, (tn,), 0)
+    rm = jnp.where(idx < nv_ref[0], ro, jnp.zeros_like(ro))
+    rr = jnp.sum(rm * ro, axis=1)
+    pp_ref[0, 0, :] = rr
+    pp_ref[0, 1, :] = rr
 
 
 @functools.partial(jax.jit, static_argnames=("tn", "interpret"))
@@ -133,16 +168,17 @@ def cg_update(
 
     ``x``/``r``/``p``/``ap``: (n,) or batched (k, n); ``alpha``: scalar or
     (k, 1); ``dinv``: (n,) Jacobi inverse diagonal or None (identity
-    psolve -- z comes back equal to r').  Returns (x', r', z, rr, rz) with
-    rr/rz following the solvers' dot convention: () scalars for (n,)
-    vectors, (k, 1) for batches.  Arbitrary n: inputs are zero-padded to
-    the tile multiple and tail tiles are masked in-kernel.
+    psolve -- z comes back equal to r', and a dedicated kernel variant
+    skips the dinv stream entirely instead of multiplying by ones).
+    Returns (x', r', z, rr, rz) with rr/rz following the solvers' dot
+    convention: () scalars for (n,) vectors, (k, 1) for batches.
+    Arbitrary n: inputs are zero-padded to the tile multiple and tail
+    tiles are masked in-kernel.
     """
     n = x.shape[-1]
     batched = x.ndim == 2
     dt = r.dtype
-    if dinv is None:
-        dinv = jnp.ones((n,), dt)
+    identity = dinv is None
     tn = min(tn, n)
     npad = -(-n // tn) * tn
     pad = npad - n
@@ -153,7 +189,8 @@ def cg_update(
         cfg = [(0, 0)] * (v.ndim - 1) + [(0, pad)]
         return jnp.pad(v, cfg)
 
-    x, r, p, ap, dinv = (padv(jnp.asarray(v, dt)) for v in (x, r, p, ap, dinv))
+    x, r, p, ap = (padv(jnp.asarray(v, dt)) for v in (x, r, p, ap))
+    dvecs = () if identity else (padv(jnp.asarray(dinv, dt)),)
     nv = jnp.full((1,), n, jnp.int32)
     grid = (npad // tn,)
 
@@ -161,14 +198,15 @@ def cg_update(
         k = x.shape[0]
         a_arr = jnp.broadcast_to(jnp.asarray(alpha, dt), (k, 1))
         vec = lambda: pl.BlockSpec((k, tn), lambda i: (0, i))
+        dspec = () if identity else (pl.BlockSpec((tn,), lambda i: (i,)),)
         xo, ro, zo, pp = pl.pallas_call(
-            _cg_update_kernel_b,
+            _cg_update_kernel_b_nod if identity else _cg_update_kernel_b,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((k, 1), lambda i: (0, 0)),
                 pl.BlockSpec((1,), lambda i: (0,)),
                 vec(), vec(), vec(), vec(),
-                pl.BlockSpec((tn,), lambda i: (i,)),
+                *dspec,
             ],
             out_specs=[
                 vec(), vec(), vec(),
@@ -181,20 +219,22 @@ def cg_update(
                 jax.ShapeDtypeStruct((npad // tn, 2, k), dt),
             ],
             interpret=interpret,
-        )(a_arr, nv, x, r, p, ap, dinv)
+        )(a_arr, nv, x, r, p, ap, *dvecs)
         sums = jnp.sum(pp, axis=0)                       # (2, k)
         return (xo[:, :n], ro[:, :n], zo[:, :n],
                 sums[0][:, None], sums[1][:, None])
 
     a_arr = jnp.reshape(jnp.asarray(alpha, dt), (1,))
     vec = lambda: pl.BlockSpec((tn,), lambda i: (i,))
+    dspec = () if identity else (vec(),)
     xo, ro, zo, pp = pl.pallas_call(
-        _cg_update_kernel,
+        _cg_update_kernel_nod if identity else _cg_update_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((1,), lambda i: (0,)),
-            vec(), vec(), vec(), vec(), vec(),
+            vec(), vec(), vec(), vec(),
+            *dspec,
         ],
         out_specs=[
             vec(), vec(), vec(),
@@ -207,6 +247,6 @@ def cg_update(
             jax.ShapeDtypeStruct((npad // tn, 2), dt),
         ],
         interpret=interpret,
-    )(a_arr, nv, x, r, p, ap, dinv)
+    )(a_arr, nv, x, r, p, ap, *dvecs)
     sums = jnp.sum(pp, axis=0)
     return xo[:n], ro[:n], zo[:n], sums[0], sums[1]

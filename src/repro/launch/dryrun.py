@@ -59,11 +59,8 @@ def build_cell(arch: str, shape: str, mesh_kind: str, probe_layers: int | None =
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     from ..configs import SHAPES, get
     from ..models import model as M
-    from ..models.config import ModelConfig
     from ..train import adamw, adafactor, warmup_cosine, build_train_step, init_train_state
     from . import sharding as SH
     from .mesh import batch_axes, make_production_mesh
@@ -81,7 +78,6 @@ def build_cell(arch: str, shape: str, mesh_kind: str, probe_layers: int | None =
         cfg = cfg.replace(fsdp=False)
     if probe_layers is not None:
         # probe configs: same shapes per layer, reduced trip counts
-        groups = cfg.layer_groups()
         if cfg.family == "hybrid":
             cfg = cfg.replace(n_layers=probe_layers * len(cfg.block_pattern))
         elif cfg.first_dense_layers:
@@ -93,7 +89,6 @@ def build_cell(arch: str, shape: str, mesh_kind: str, probe_layers: int | None =
     kind, seq, global_batch = SHAPES[shape]
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     baxes = batch_axes(mesh)
-    cdt = jnp.bfloat16
 
     meta = {
         "arch": arch, "shape": shape, "mesh": mesh_kind,

@@ -48,7 +48,7 @@ def _solver_main(args) -> int:
 
     eng = AzulEngine(m, mesh=mesh, precond=args.precond, dtype=np.float64)
     srv = SolveServer(eng, max_batch=args.coalesce, method=args.method,
-                      iters=args.iters)
+                      iters=args.iters, tol=args.tol)
 
     import scipy.sparse as sp
     a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
@@ -62,14 +62,21 @@ def _solver_main(args) -> int:
     err = max(
         float(np.abs(done[rid].x - x_true[i]).max()) for i, rid in enumerate(ids)
     )
-    print(json.dumps({
+    out = {
         "matrix": args.matrix, "n": m.shape[0],
         "requests": args.requests, "coalesce": args.coalesce,
         "batches": srv.stats["batches"], "padded_rhs": srv.stats["padded_rhs"],
         "wall_s": round(dt, 3),
         "solves_per_s": round(args.requests / dt, 2),
         "verify_maxerr": err,
-    }, indent=1))
+        "substrate": eng.last_solve_info.get("substrate", "reference"),
+    }
+    if args.method == "pcg_tol":
+        its = [done[rid].iters for rid in ids]
+        out["tol"] = args.tol
+        out["iters_mean"] = round(float(np.mean(its)), 2)
+        out["iters_max"] = int(np.max(its))
+    print(json.dumps(out, indent=1))
     return 0
 
 
@@ -89,9 +96,12 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--coalesce", type=int, default=8,
                     help="max RHS coalesced into one batched solve")
-    ap.add_argument("--method", default="pcg")
+    ap.add_argument("--method", default="pcg",
+                    help="pcg | pcg_tol (tolerance-stopped) | cg | ...")
     ap.add_argument("--precond", default="jacobi")
     ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--tol", type=float, default=1e-8,
+                    help="relative residual target for --method pcg_tol")
     ap.add_argument("--mesh-shape", default="",
                     help="e.g. 2x2 -- empty = single device")
     args = ap.parse_args(argv)

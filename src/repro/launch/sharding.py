@@ -37,7 +37,6 @@ def _param_rule(path: tuple[str, ...], ndim: int, fsdp: bool,
                 ep_stationary: bool = False) -> P:
     name = path[-1] if path else ""
     parent = path[-2] if len(path) >= 2 else ""
-    gparent = path[-3] if len(path) >= 3 else ""
     f = _F if fsdp else None
     stacked = "groups" in path  # leading layer axis
     lead = (None,) if stacked else ()

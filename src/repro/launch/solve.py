@@ -3,6 +3,11 @@
     PYTHONPATH=src python -m repro.launch.solve --matrix lap2d_32 \
         --method pcg --precond block_ic0 --iters 100
 
+    # the headline tolerance-mode config -- IC(0) PCG solved to 1e-8,
+    # running the fused substrate by default:
+    PYTHONPATH=src python -m repro.launch.solve --matrix lap2d_32 \
+        --method pcg_tol --precond block_ic0 --tol 1e-8
+
 Add --mesh-shape 2x2 (any grid whose product <= device count) to run the
 distributed AzulEngine; on the CPU container use
 XLA_FLAGS=--xla_force_host_platform_device_count=N.
@@ -19,16 +24,22 @@ import numpy as np
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--matrix", default="lap2d_32")
-    ap.add_argument("--method", default="pcg", choices=("pcg", "pcg_pipe", "cg", "jacobi"))
+    ap.add_argument("--method", default="pcg",
+                    choices=("pcg", "pcg_tol", "pcg_pipe", "cg", "jacobi"))
     ap.add_argument("--precond", default="jacobi",
                     choices=("jacobi", "block_ic0", "none"))
     ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--tol", type=float, default=1e-8,
+                    help="relative residual target (pcg_tol)")
+    ap.add_argument("--max-iters", type=int, default=None,
+                    help="iteration cap for pcg_tol (default: --iters)")
+    ap.add_argument("--fused", default="auto", choices=("auto", "on", "off"),
+                    help="fused-substrate knob (auto = on where supported)")
     ap.add_argument("--mode", default="2d", choices=("1d", "2d"))
     ap.add_argument("--mesh-shape", default="",
                     help="e.g. 2x2 -- empty = single device")
     args = ap.parse_args(argv)
 
-    import jax
     from ..core.engine import AzulEngine
     from ..data.matrices import suite
 
@@ -46,20 +57,29 @@ def main(argv=None):
     rng = np.random.default_rng(0)
     x_true = rng.standard_normal(m.shape[0])
     from ..core.formats import csr_to_dense  # noqa -- only for tiny oracles
+    fused = {"auto": "auto", "on": True, "off": False}[args.fused]
     eng = AzulEngine(m, mesh=mesh, mode=args.mode, precond=args.precond,
-                     dtype=np.float64)
+                     dtype=np.float64, fused=fused)
     import scipy.sparse as sp
     a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
     b = a @ x_true
-    x, norms = eng.solve(b, method=args.method, iters=args.iters)
+    x, norms = eng.solve(b, method=args.method, iters=args.iters,
+                         tol=args.tol, max_iters=args.max_iters)
     rel = float(np.linalg.norm(x - x_true) / np.linalg.norm(x_true))
-    print(json.dumps({
+    info = eng.last_solve_info
+    out = {
         "matrix": args.matrix, "n": m.shape[0], "nnz": m.nnz,
         "method": args.method, "precond": args.precond,
         "iters": args.iters, "mode": eng.mode,
-        "final_residual": float(norms[-1]),
+        "substrate": info.get("substrate", "reference"),
+        "fused": bool(info.get("fused", False)),
+        "final_residual": float(norms[-1] if norms.ndim == 1 else norms[-1, 0]),
         "rel_error": rel,
-    }, indent=1))
+    }
+    if args.method == "pcg_tol":
+        out["tol"] = args.tol
+        out["iters_run"] = int(np.asarray(info["iters"]))
+    print(json.dumps(out, indent=1))
     return 0
 
 

@@ -53,11 +53,10 @@ def main(argv=None):
 
     if args.mesh:
         from . import sharding as SH
-        from .mesh import batch_axes, make_production_mesh
+        from .mesh import make_production_mesh
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
         st_sh = SH.named(mesh, SH.state_specs(state, cfg.fsdp), state)
         state = jax.device_put(state, st_sh)
-        b_ax = batch_axes(mesh)
         train_step = jax.jit(step_fn, donate_argnums=(0,))
     else:
         train_step = jax.jit(step_fn, donate_argnums=(0,))

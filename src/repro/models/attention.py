@@ -13,11 +13,9 @@ accounted for in the roofline notes.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import shard
 from .blocks import apply_rope, init_linear, linear

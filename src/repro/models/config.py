@@ -10,7 +10,7 @@ homogeneous, contiguous layer groups the stack scans over (e.g. deepseek =
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

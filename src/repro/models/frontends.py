@@ -11,7 +11,6 @@ embed-input code paths end to end.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .blocks import init_linear, linear

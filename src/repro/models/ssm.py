@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import shard
 from .blocks import init_linear, linear, rms_norm

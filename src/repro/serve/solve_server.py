@@ -12,6 +12,13 @@ Batch shapes are bucketed to powers of two (capped at ``max_batch``) so the
 jit cache stays small: a burst of 5 requests runs as a k=8 batch with three
 zero RHS riding along (a zero RHS converges instantly and costs only the
 already-amortized vector math).
+
+Tolerance mode (``method="pcg_tol"``): the batched solve runs the fused
+while_loop solver to a relative-residual target instead of a fixed
+iteration count -- the paper's actual serving contract ("solve to 1e-8"),
+where a zero pad RHS is *free* (its active mask drops immediately) and each
+outcome reports the per-request iteration count the solver actually spent
+on it (read from ``engine.last_solve_info``).
 """
 
 from __future__ import annotations
@@ -31,8 +38,11 @@ class SolveRequest(NamedTuple):
 class SolveOutcome(NamedTuple):
     req_id: int
     x: np.ndarray                 # (n,) solution
-    res_norms: np.ndarray         # (iters + 1,) this request's residual trace
+    res_norms: np.ndarray         # this request's residual trace (final-only
+                                  # for tolerance mode)
     batch_size: int               # how many RHS shared the solve
+    iters: int = -1               # iterations spent on THIS request
+                                  # (tolerance mode; -1 = fixed-iter solve)
 
 
 class SolveServer:
@@ -43,16 +53,22 @@ class SolveServer:
     engine : AzulEngine        the (already-built) solver engine
     max_batch : int            coalescing window: max RHS per batched solve
     method / iters :           forwarded to ``engine.solve``
+    tol / max_iters :          tolerance-mode knobs (``method="pcg_tol"``):
+                               relative residual target and iteration cap
+                               (``max_iters`` defaults to ``iters``)
     """
 
     def __init__(self, engine, max_batch: int = 16, method: str = "pcg",
-                 iters: int = 200):
+                 iters: int = 200, tol: float = 1e-8,
+                 max_iters: int | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.engine = engine
         self.max_batch = max_batch
         self.method = method
         self.iters = iters
+        self.tol = tol
+        self.max_iters = iters if max_iters is None else max_iters
         self._queue: list[SolveRequest] = []
         self._next_id = 0
         # serving-side counters (fill ratio tells you if max_batch is sized
@@ -94,13 +110,21 @@ class SolveServer:
         batch = np.zeros((k_pad, self.engine.n))
         for i, req in enumerate(take):
             batch[i] = req.b
-        x, norms = self.engine.solve(batch, method=self.method, iters=self.iters)
+        x, norms = self.engine.solve(
+            batch, method=self.method, iters=self.iters,
+            tol=self.tol, max_iters=self.max_iters,
+        )
         self.stats["batches"] += 1
         self.stats["padded_rhs"] += k_pad - k
+        its = np.full(k_pad, -1, np.int64)
+        if self.method == "pcg_tol":
+            its = np.atleast_1d(
+                np.asarray(self.engine.last_solve_info["iters"])
+            ).astype(np.int64)
         # norms: (iters + 1, k_pad) -- hand each request its own column
         return {
             req.req_id: SolveOutcome(req.req_id, np.asarray(x[i]),
-                                     np.asarray(norms[:, i]), k)
+                                     np.asarray(norms[:, i]), k, int(its[i]))
             for i, req in enumerate(take)
         }
 

@@ -124,7 +124,6 @@ def test_batched_pcg_tol_per_rhs_iters():
 @pytest.mark.parametrize("method", ["cg", "pcg", "pcg_pipe", "jacobi"])
 def test_engine_batched_methods_match_single(method):
     m = laplacian_2d(10)
-    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
     rng = np.random.default_rng(5)
     b = rng.standard_normal((3, m.shape[0]))
     eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)

@@ -1,0 +1,189 @@
+"""The CI perf-regression gate (benchmarks/check_regression.py): unit
+checks of the comparison logic (exact iteration counts, equivalence
+thresholds, generous timing ratio, coverage), seeded-regression failures,
+the --update-baseline escape hatch, and the committed artifacts actually
+passing the gate (the bench-smoke job's contract)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+
+from check_regression import check, main as gate_main  # noqa: E402
+
+BASELINE = os.path.join(REPO, "benchmarks", "BENCH_baseline.json")
+CURRENT = os.path.join(REPO, "BENCH_pcg.json")
+
+
+def _payload():
+    return {
+        "schema": "bench_pcg/v2",
+        "fused_vs_unfused": [{
+            "matrix": "m", "us_per_iter_fused": 100.0,
+            "us_per_iter_unfused": 120.0, "trace_rel_maxdiff": 0.0,
+            "x_maxdiff": 0.0, "modeled_traffic": {"reduction": 2.0},
+        }],
+        "batch_sweep": [{
+            "matrix": "m", "k": 4, "us_per_iter_per_rhs": 25.0,
+            "batch_vs_seq_maxerr": 0.0,
+        }],
+        "tol_solves": [{
+            "matrix": "m", "precond": "block_ic0", "tol": 1e-8,
+            "substrate_fused": "fused_ic0", "iters_fused": 30,
+            "iters_reference": 30, "iters_match": True, "x_maxdiff": 0.0,
+            "us_per_iter_fused": 200.0, "us_per_iter_unfused": 220.0,
+        }],
+    }
+
+
+def test_identical_payload_passes():
+    g = check(_payload(), _payload())
+    assert not g.failures and g.checks > 5
+
+
+def test_iteration_count_drift_fails():
+    cur = _payload()
+    cur["tol_solves"][0]["iters_fused"] = 31
+    g = check(cur, _payload())
+    assert any("iters_fused" in f for f in g.failures)
+
+
+def test_fused_reference_divergence_fails():
+    cur = _payload()
+    cur["tol_solves"][0]["iters_match"] = False
+    cur["fused_vs_unfused"][0]["trace_rel_maxdiff"] = 1e-3
+    g = check(cur, _payload())
+    assert any("iters_match" in f for f in g.failures)
+    assert any("trace_rel_maxdiff" in f for f in g.failures)
+
+
+def test_timing_regression_beyond_ratio_fails():
+    cur = _payload()
+    cur["fused_vs_unfused"][0]["us_per_iter_fused"] = 100.0 * 11
+    g = check(cur, _payload(), timing_ratio=10.0)
+    assert any("us_per_iter_fused" in f for f in g.failures)
+    # within the generous ratio (cross-machine noise): fine
+    cur["fused_vs_unfused"][0]["us_per_iter_fused"] = 100.0 * 9
+    assert not check(cur, _payload(), timing_ratio=10.0).failures
+    # faster is never a failure
+    cur["fused_vs_unfused"][0]["us_per_iter_fused"] = 1.0
+    assert not check(cur, _payload(), timing_ratio=10.0).failures
+
+
+def test_substrate_downgrade_fails():
+    """An accidentally-reference fused path (the gate's raison d'etre)."""
+    cur = _payload()
+    cur["tol_solves"][0]["substrate_fused"] = "reference"
+    g = check(cur, _payload())
+    assert any("substrate_fused" in f for f in g.failures)
+
+
+def test_dropped_benchmark_fails():
+    cur = _payload()
+    cur["tol_solves"] = []
+    g = check(cur, _payload())
+    assert any("missing" in f for f in g.failures)
+
+
+def test_modeled_traffic_change_fails():
+    cur = _payload()
+    cur["fused_vs_unfused"][0]["modeled_traffic"] = {"reduction": 3.0}
+    g = check(cur, _payload())
+    assert any("modeled_traffic" in f for f in g.failures)
+
+
+def test_extra_current_entries_are_fine():
+    """Current may cover MORE than baseline (new matrices ride along)."""
+    cur = _payload()
+    cur["tol_solves"].append(dict(cur["tol_solves"][0], matrix="m2"))
+    assert not check(cur, _payload()).failures
+
+
+def test_update_baseline_escape_hatch(tmp_path):
+    cur_p = tmp_path / "cur.json"
+    base_p = tmp_path / "base.json"
+    cur = _payload()
+    cur["tol_solves"][0]["iters_fused"] = cur["tol_solves"][0]["iters_reference"] = 40
+    cur_p.write_text(json.dumps(cur))
+    base_p.write_text(json.dumps(_payload()))
+    assert gate_main(["--current", str(cur_p), "--baseline", str(base_p)]) == 1
+    assert gate_main(["--current", str(cur_p), "--baseline", str(base_p),
+                      "--update-baseline"]) == 0
+    assert gate_main(["--current", str(cur_p), "--baseline", str(base_p)]) == 0
+    assert json.loads(base_p.read_text()) == cur
+
+
+def test_update_baseline_refuses_degenerate_payload(tmp_path):
+    """A truncated/empty payload must never become the baseline -- it would
+    make every future gate run vacuously pass."""
+    cur_p = tmp_path / "cur.json"
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps(_payload()))
+    empty = _payload()
+    empty["tol_solves"] = []
+    cur_p.write_text(json.dumps(empty))
+    assert gate_main(["--current", str(cur_p), "--baseline", str(base_p),
+                      "--update-baseline"]) == 1
+    assert json.loads(base_p.read_text()) == _payload()   # untouched
+    wrong = _payload()
+    wrong["schema"] = "bench_pcg/v1"
+    cur_p.write_text(json.dumps(wrong))
+    assert gate_main(["--current", str(cur_p), "--baseline", str(base_p),
+                      "--update-baseline"]) == 1
+
+
+# -- the committed artifacts themselves ---------------------------------------
+
+
+def test_committed_bench_passes_gate():
+    """The recorded BENCH_pcg.json must pass against the committed baseline
+    -- exactly what the bench-smoke CI job enforces per commit."""
+    assert gate_main(["--current", CURRENT, "--baseline", BASELINE]) == 0
+
+
+def test_committed_baseline_is_selfconsistent():
+    base = json.load(open(BASELINE))
+    assert base["schema"] == "bench_pcg/v2"
+    assert base["tol_solves"], "baseline must pin tolerance iteration counts"
+    for e in base["tol_solves"]:
+        assert e["iters_match"] is True
+        assert e["iters_fused"] == e["iters_reference"]
+    g = check(base, base)
+    assert not g.failures
+
+
+@pytest.mark.slow
+def test_fresh_smoke_payload_passes_gate(tmp_path):
+    """Regenerate the smoke payload the way CI does and run the real gate:
+    iteration counts must be reproducible on this machine."""
+    out = tmp_path / "BENCH_pcg.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["REPRO_KERNEL_MODE"] = "interpret"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke", "--json", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=560,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    r2 = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--current", str(out), "--baseline", BASELINE],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=120,
+    )
+    assert r2.returncode == 0, f"stdout={r2.stdout}\nstderr={r2.stderr[-2000:]}"
+    # seeded regression: doctor the payload, the gate must fail
+    bad = json.loads(out.read_text())
+    bad["tol_solves"][0]["iters_fused"] += 1
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(bad))
+    r3 = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--current", str(bad_p), "--baseline", BASELINE],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=120,
+    )
+    assert r3.returncode == 1 and "iters_fused" in r3.stdout

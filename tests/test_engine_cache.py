@@ -70,12 +70,22 @@ assert len(eng._trsv_cache) == 2
 assert np.allclose(s2(b), dense_ref(5.0), atol=1e-8), "second solve"
 assert np.allclose(s1(b), dense_ref(2.0), atol=1e-8), "first still valid"
 
-# solve cache keys carry the resolved fused flag
+# solve cache keys carry the resolved fused flag; tol/max_iters are
+# normalized to None for fixed-iteration methods (only pcg_tol reads
+# them), so varying tol never recompiles a bit-identical pcg program
 x1, _ = eng.solve(b, method="pcg", iters=30, fused=True)
 x2, _ = eng.solve(b, method="pcg", iters=30, fused=False)
-assert ("pcg", 30, "jacobi", False, True) in eng._compiled
-assert ("pcg", 30, "jacobi", False, False) in eng._compiled
+n_compiled = len(eng._compiled)
+eng.solve(b, method="pcg", iters=30, fused=True, tol=1e-3)
+assert len(eng._compiled) == n_compiled, "tol must not recompile pcg"
+assert ("pcg", 30, "jacobi", False, True, None, None) in eng._compiled
+assert ("pcg", 30, "jacobi", False, False, None, None) in eng._compiled
 assert np.allclose(x1, x2, atol=1e-9), "fused == unfused dist"
+
+# tolerance-mode keys are distinct per (tol, max_iters)
+xt, _ = eng.solve(b, method="pcg_tol", tol=1e-9, max_iters=60, fused=True)
+assert ("pcg_tol", 200, "jacobi", False, True, 1e-9, 60) in eng._compiled
+assert np.allclose(xt, x2, atol=1e-7), "pcg_tol dist agrees"
 print("CACHE_OK")
 """
 

@@ -2,7 +2,6 @@
 simulator functional verification), run in a subprocess with forced host
 devices so the main pytest process keeps its single-device view."""
 
-import json
 import os
 import subprocess
 import sys
@@ -56,6 +55,26 @@ for mode in ("2d", "1d"):
 eng2 = AzulEngine(m, mesh=mesh, mode="2d", precond="block_ic0", dtype=np.float64)
 x2, n2 = eng2.solve(b, method="pcg", iters=60)
 assert np.abs(x2 - x_true).max() < 1e-6, "block_ic0 dist"
+
+# fused block_ic0 shard substrate (single stacked psum) == reference, and
+# tolerance mode stops at the same iteration on both paths -- single + batched
+assert eng2.substrate_kind("pcg") == "fused_shard_ic0"
+x2f, n2f = eng2.solve(b, method="pcg", iters=60, fused=True)
+x2u, n2u = eng2.solve(b, method="pcg", iters=60, fused=False)
+assert np.allclose(x2f, x2u, atol=1e-9), "ic0 fused == unfused dist"
+assert np.allclose(n2f, n2u, rtol=1e-8, atol=1e-12), "ic0 fused trace"
+for bb in (b, Bk):
+    xtf, _ = eng2.solve(bb, method="pcg_tol", tol=1e-9, max_iters=200, fused=True)
+    itf = np.asarray(eng2.last_solve_info["iters"])
+    xtu, _ = eng2.solve(bb, method="pcg_tol", tol=1e-9, max_iters=200, fused=False)
+    itu = np.asarray(eng2.last_solve_info["iters"])
+    assert np.array_equal(itf, itu), "pcg_tol dist iteration counts"
+    assert np.allclose(xtf, xtu, atol=1e-9), "pcg_tol dist fused == unfused"
+
+eng_j = AzulEngine(m, mesh=mesh, mode="2d", precond="jacobi", dtype=np.float64)
+xtj, _ = eng_j.solve(Bk, method="pcg_tol", tol=1e-9, max_iters=300)
+assert eng_j.last_solve_info["substrate"] == "fused_shard"
+assert np.allclose(xtj, X_ref, atol=1e-6), "pcg_tol dist batched vs scipy"
 
 L = sp.tril(A).tocsr()
 trsv = eng2.build_sptrsv(csr_from_scipy(L))

@@ -145,7 +145,6 @@ def test_reference_substrate_is_default_path():
     """pcg(substrate=None) must reproduce the historical unfused sequence."""
     m = laplacian_2d(8)
     e = ell_from_csr(m, dtype=np.float64)
-    n = m.shape[0]
     b = jnp.asarray(np.random.default_rng(0).standard_normal(e.rows_padded))
     mv = lambda x: spmv_ell_padded(e.cols, e.vals, x)
     sub = reference_substrate(mv, lambda r: r)
@@ -178,10 +177,15 @@ def test_engine_fused_default_on_where_supported():
     m = laplacian_2d(6)
     eng = AzulEngine(m, precond="jacobi", dtype=np.float64)
     assert eng._resolve_fused("pcg", None) is True
+    assert eng._resolve_fused("pcg_tol", None) is True
     assert eng._resolve_fused("pcg", False) is False
     assert eng._resolve_fused("jacobi", None) is False
     eng_ic = AzulEngine(m, precond="block_ic0", dtype=np.float64)
-    assert eng_ic._resolve_fused("pcg", None) is False     # no fused path
+    assert eng_ic._resolve_fused("pcg", None) is True      # fused IC(0) path
+    assert eng_ic.substrate_kind("pcg") == "fused_ic0"
+    assert eng_ic.substrate_kind("pcg_tol") == "fused_ic0"
+    assert eng_ic.substrate_kind("cg") == "fused"          # cg: no psolve
+    assert eng_ic.substrate_kind("jacobi") == "reference"
     eng_off = AzulEngine(m, precond="jacobi", dtype=np.float64, fused=False)
     assert eng_off._resolve_fused("pcg", None) is False
     assert eng_off._resolve_fused("pcg", True) is True     # per-solve override

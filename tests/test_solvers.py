@@ -6,9 +6,9 @@ import scipy.sparse as sp
 import jax.numpy as jnp
 
 from repro.core.engine import AzulEngine
-from repro.core.formats import csr_from_scipy, ell_from_csr
+from repro.core.formats import ell_from_csr
 from repro.core.precond import apply_ic0, ic0
-from repro.core.solvers import cg, jacobi, pcg, pcg_pipelined, pcg_tol
+from repro.core.solvers import cg, pcg_tol
 from repro.core.spops import spmv_ell_padded
 from repro.data.matrices import laplacian_2d, random_spd
 

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.checkpoint import latest_step, restore, save
 from repro.data import TokenPipeline
 from repro.ft import RestartManager, StepTimer
 from repro.models import model as M
