@@ -17,6 +17,14 @@ vector-HBM traffic from ``substrate.modeled_vector_traffic``), and
 ``--json FILE`` writes the whole run as a machine-readable payload -- the
 perf-trajectory record CI archives per commit (see also
 ``benchmarks.run --json``).
+
+Everything here runs through the plan/execute API: each configuration is a
+frozen ``SolveSpec`` lowered once via ``engine.plan(spec)`` and the
+compiled ``SolvePlan`` is executed for the timed repeats -- so the
+benchmark exercises exactly the program production serving runs, and the
+tolerance section plots the bounded convergence-trace ring ``pcg_tol``
+plans now return (ASCII log-residual sparkline + downsampled points in the
+JSON payload).
 """
 
 from __future__ import annotations
@@ -29,8 +37,38 @@ import numpy as np
 import scipy.sparse as sp
 
 from repro.core.engine import AzulEngine
+from repro.core.plan import SolveSpec
 from repro.core.substrate import modeled_ic0_traffic, modeled_vector_traffic
 from repro.data.matrices import suite
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(trace, iters: int | None = None, width: int = 48) -> str:
+    """ASCII log-residual curve of a convergence trace (the plot the
+    bounded ``pcg_tol`` ring buffer exists for).  ``iters`` truncates to
+    the real trace (the ring tail-fills past the stopping iteration)."""
+    t = np.asarray(trace, dtype=float).ravel()
+    if iters is not None:
+        t = t[: int(iters) + 1]
+    t = np.log10(np.maximum(np.abs(t), 1e-300))
+    if t.size > width:
+        idx = np.linspace(0, t.size - 1, width).round().astype(int)
+        t = t[idx]
+    lo, hi = float(t.min()), float(t.max())
+    span = (hi - lo) or 1.0
+    levels = ((t - lo) / span * (len(_SPARK) - 1)).round().astype(int)
+    return "".join(_SPARK[lv] for lv in levels)
+
+
+def _trace_points(trace, iters: int, width: int = 32) -> list[float]:
+    """Downsample a convergence trace for the JSON payload (<= width
+    points, endpoints kept)."""
+    t = np.asarray(trace, dtype=float).ravel()[: int(iters) + 1]
+    if t.size > width:
+        idx = np.linspace(0, t.size - 1, width).round().astype(int)
+        t = t[idx]
+    return [float(v) for v in t]
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -43,12 +81,14 @@ def run() -> list[tuple[str, float, str]]:
         bn = np.linalg.norm(b)
         for pc in ("jacobi", "block_ic0"):
             eng = AzulEngine(m, mesh=None, precond=pc, dtype=np.float64)
-            # convergence: fixed-iteration solves, find iters to 1e-8
-            x, norms = eng.solve(b, method="pcg", iters=200)
+            # convergence: fixed-iteration plans, find iters to 1e-8
+            x, norms = eng.plan(SolveSpec(method="pcg", iters=200))(b)
             rel = norms / bn
             hit = np.argmax(rel < 1e-8) if (rel < 1e-8).any() else len(rel)
+            plan50 = eng.plan(SolveSpec(method="pcg", iters=50))
+            plan50(b)                        # warm: compile outside the clock
             t0 = time.perf_counter()
-            eng.solve(b, method="pcg", iters=50)
+            plan50(b)
             dt = (time.perf_counter() - t0) / 50
             flops = 2 * m.nnz + 10 * m.shape[0]
             err = float(np.abs(x - x_true).max())
@@ -82,9 +122,10 @@ def run_fused_compare(
         eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
 
         def timed(fused):
-            eng.solve(b, method="pcg", iters=iters, fused=fused)   # warm jit
+            plan = eng.plan(SolveSpec(method="pcg", iters=iters, fused=fused))
+            plan(b)                                                # warm jit
             t0 = time.perf_counter()
-            x, norms = eng.solve(b, method="pcg", iters=iters, fused=fused)
+            x, norms = plan(b)
             return (time.perf_counter() - t0) / iters, x, norms
 
         dt_f, x_f, n_f = timed(True)
@@ -128,17 +169,19 @@ def run_batch_sweep(batch_sizes, iters: int = 60,
         b_all = x_true @ a.T
         for k in batch_sizes:
             b = b_all[:k]
-            # batched: one stacked solve
-            eng.solve(b, method="pcg", iters=iters)          # warm the jit
+            # batched: one stacked plan execution
+            bplan = eng.plan(SolveSpec(method="pcg", iters=iters, batch=k))
+            bplan(b)                                         # warm the jit
             t0 = time.perf_counter()
-            xb, _ = eng.solve(b, method="pcg", iters=iters)
+            xb, _ = bplan(b)
             dt_batch = time.perf_counter() - t0
-            # sequential baseline: k independent single-RHS solves
-            eng.solve(b[0], method="pcg", iters=iters)
+            # sequential baseline: k executions of the single-RHS plan
+            splan = eng.plan(SolveSpec(method="pcg", iters=iters))
+            splan(b[0])
             t0 = time.perf_counter()
             x_seq = []
             for i in range(k):
-                xi, _ = eng.solve(b[i], method="pcg", iters=iters)
+                xi, _ = splan(b[i])
                 x_seq.append(xi)
             dt_seq = time.perf_counter() - t0
             # verify batched against the sequential solves (same algorithm,
@@ -172,8 +215,10 @@ def run_tol_solves(
     gate's primary signal.  Iteration counts are *discrete* -- any change
     to the recurrence, the preconditioner factorization, or the stopping
     test moves them, so the gate compares them exactly (timings only get a
-    generous cross-machine ratio).  Also records the per-path substrate and
-    the modeled IC(0) traffic at this matrix's level counts."""
+    generous cross-machine ratio).  Also records the per-path substrate,
+    the modeled IC(0) traffic at this matrix's level counts, and the
+    bounded convergence trace the tolerance plans carry (downsampled
+    points in the payload; the driver plots the sparkline)."""
     rows, payload = [], []
     rng = np.random.default_rng(0)
     mats = suite("small")
@@ -185,17 +230,17 @@ def run_tol_solves(
             eng = AzulEngine(m, mesh=None, precond=pc, dtype=np.float64)
 
             def timed(fused):
-                eng.solve(b, method="pcg_tol", tol=tol, max_iters=max_iters,
-                          fused=fused)                      # warm jit
+                plan = eng.plan(SolveSpec(method="pcg_tol", tol=tol,
+                                          max_iters=max_iters, fused=fused))
+                plan(b)                                     # warm jit
                 t0 = time.perf_counter()
-                x, _ = eng.solve(b, method="pcg_tol", tol=tol,
-                                 max_iters=max_iters, fused=fused)
+                x, norms = plan(b)
                 dt = time.perf_counter() - t0
-                return dt, x, int(np.asarray(eng.last_solve_info["iters"])), \
-                    eng.last_solve_info["substrate"]
+                return dt, x, int(np.asarray(plan.last_iters)), \
+                    plan.info["substrate"], norms
 
-            dt_f, x_f, it_f, sub_f = timed(True)
-            dt_u, x_u, it_u, _ = timed(False)
+            dt_f, x_f, it_f, sub_f, trace_f = timed(True)
+            dt_u, x_u, it_u, _, _ = timed(False)
             entry = {
                 "matrix": name,
                 "precond": pc,
@@ -208,6 +253,9 @@ def run_tol_solves(
                 "x_maxdiff": float(np.abs(x_f - x_u).max()),
                 "us_per_iter_fused": round(dt_f / max(it_f, 1) * 1e6, 3),
                 "us_per_iter_unfused": round(dt_u / max(it_u, 1) * 1e6, 3),
+                # the bounded trace ring (tolerance-mode convergence plot)
+                "trace_points": _trace_points(trace_f, it_f),
+                "trace_spark": sparkline(trace_f, it_f),
             }
             if pc == "block_ic0":
                 f = eng._ic0
@@ -277,6 +325,10 @@ def main(argv=None) -> int:
         rows += brows
     for r in rows:
         print(",".join(str(x) for x in r))
+    for e in tol_payload:
+        # tolerance-mode convergence, plotted from the bounded trace ring
+        print(f"# pcg_tol {e['matrix']}/{e['precond']} "
+              f"({e['iters_fused']} iters): {e['trace_spark']}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(collect_json(fused_payload, batch_payload, tol_payload),

@@ -26,6 +26,14 @@ machines:
 * **Coverage**: every baseline entry must still be present (dropping a
   benchmark silently is itself a regression).
 
+Every compared path is produced through the plan/execute API
+(``engine.plan(SolveSpec(...))`` -- see ``benchmarks.bench_pcg``), so the
+gate pins the *plan* surface: substrate selection, iteration counts and
+numeric equivalence of the compiled ``SolvePlan`` programs.  The v2
+payload additionally carries optional ``trace_points``/``trace_spark``
+fields (tolerance-mode convergence from the bounded trace ring); they are
+informational and not gate-checked.
+
 Escape hatch -- when a change legitimately moves the trajectory (better
 preconditioner => fewer iterations, new traffic model), refresh and commit
 the baseline:

@@ -10,8 +10,10 @@ live in EXPERIMENTS.md and are produced by repro.roofline, not here.
 
 ``--json BENCH_pcg.json`` additionally records the PCG perf trajectory
 (fused vs unfused per-iteration timing, multi-RHS batch sweep, modeled
-vector-HBM traffic) as machine-readable JSON -- the artifact CI archives
-per commit.  ``--smoke`` shrinks everything to tiny sizes/iterations so the
+vector-HBM traffic, tolerance-mode convergence traces) as machine-readable
+JSON -- the artifact CI archives per commit.  All solver benchmarks run
+through the plan/execute API (``engine.plan(SolveSpec(...))``), so the
+recorded trajectory is the trajectory of the production solve surface.  ``--smoke`` shrinks everything to tiny sizes/iterations so the
 CI job (interpret-mode kernels on CPU) finishes in minutes:
 
     PYTHONPATH=src REPRO_KERNEL_MODE=interpret \
@@ -76,6 +78,10 @@ def main(argv=None) -> None:
             )
             for name, us, derived in frows + brows + trows:
                 print(f"{name},{us:.1f},{derived}")
+            for e in tol_payload:
+                # tolerance-mode convergence from the bounded trace ring
+                print(f"# pcg_tol {e['matrix']}/{e['precond']} "
+                      f"({e['iters_fused']} iters): {e['trace_spark']}")
             with open(args.json, "w") as f:
                 json.dump(
                     bench_pcg.collect_json(fused_payload, batch_payload,

@@ -24,6 +24,7 @@ import jax
 jax.config.update("jax_enable_x64", True)   # solver oracles compare at f64
 
 from repro.core.engine import AzulEngine
+from repro.core.plan import SolveSpec
 from repro.core.formats import csr_from_scipy
 from repro.data.matrices import laplacian_2d
 
@@ -42,7 +43,8 @@ def main():
     assert np.allclose(y, b, atol=1e-8)
     print("distributed SpMV == numpy  (matrix blocks never crossed the mesh)")
 
-    x, norms = eng.solve(b, method="pcg", iters=120)
+    plan = eng.plan(SolveSpec(method="pcg", iters=120))
+    x, norms = plan(b)
     print(f"distributed PCG: rel res {norms[-1]/np.linalg.norm(b):.2e}, "
           f"max err {np.abs(x - x_true).max():.2e}")
 
@@ -55,7 +57,7 @@ def main():
           f"{np.abs(xs - ref).max():.2e}")
 
     eng1 = AzulEngine(m, mesh=mesh, mode="1d", precond="jacobi", dtype=np.float64)
-    x1, _ = eng1.solve(b, method="pcg", iters=120)
+    x1, _ = eng1.plan(SolveSpec(method="pcg", iters=120))(b)
     assert np.allclose(x1, x, atol=1e-6)
     print("1D (bandwidth-hungry baseline) == 2D (Azul plan): OK")
 

@@ -16,6 +16,7 @@ import scipy.sparse as sp
 sys.path.insert(0, "src")
 
 from repro.core.engine import AzulEngine
+from repro.core.plan import SolveSpec
 from repro.core.levels import build_schedule, parallelism_profile
 from repro.core.formats import csr_from_scipy
 from repro.data.matrices import laplacian_2d
@@ -36,7 +37,7 @@ def main():
 
     for pc in ("jacobi", "block_ic0"):
         eng = AzulEngine(m, mesh=None, precond=pc, dtype=np.float64)
-        x, norms = eng.solve(b, method="pcg", iters=150)
+        x, norms = eng.plan(SolveSpec(method="pcg", iters=150))(b)
         rel = norms / np.linalg.norm(b)
         it = int(np.argmax(rel < 1e-8)) if (rel < 1e-8).any() else len(rel)
         err = np.abs(x - x_true).max()

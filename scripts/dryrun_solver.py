@@ -25,6 +25,7 @@ def run(out_dir: str, n_grid: int = 512, iters: int = 50):
     import jax
     import numpy as np
     from repro.core.engine import AzulEngine
+    from repro.core.plan import SolveSpec
     from repro.data.matrices import laplacian_2d
     from repro.launch.mesh import make_production_mesh
     from repro.roofline.collect import analyze_compiled
@@ -47,9 +48,9 @@ def run(out_dir: str, n_grid: int = 512, iters: int = 50):
         mesh = make_production_mesh(multi_pod=multi)
         row_axes = ("pod", "data") if multi else ("data",)
         eng = AzulEngine(m, mesh=mesh, row_axes=row_axes, dtype=np.float32, **kw)
-        fn = eng._solve_compiled(method, iters)
+        plan = eng.plan(SolveSpec(method=method, iters=iters))
         b_sds = jax.ShapeDtypeStruct((eng.n_pad,), np.float32)
-        lowered = fn.lower(b_sds, b_sds)
+        lowered = plan.fn.lower(b_sds, b_sds)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()

@@ -4,7 +4,45 @@ formats / partition / levels  -- static "task compiler" (host side)
 spops                          -- per-tile sparse math (jnp contracts)
 noc                            -- shard_map NoC: torus collectives, halos
 precond / solvers              -- Jacobi, block-Jacobi, IC(0); CG / PCG
-engine                         -- AzulEngine: pins blocks, runs solves
+registry                       -- solver/precond capability registry
+plan                           -- SolveSpec -> compiled SolvePlan, PlanCache
+engine                         -- AzulEngine: pins blocks, lowers plans
+
+Public API (snapshot-tested by ``tests/test_api_surface.py``): build an
+``AzulEngine``, describe a solve as a frozen ``SolveSpec``, lower it once
+with ``engine.plan(spec)``, and execute the returned ``SolvePlan`` as often
+as traffic demands.  New methods/preconditioners register through
+``register_solver`` / ``register_precond``.
 """
 
-from .formats import CSR, ELL, BCSR  # noqa: F401
+from .formats import CSR, ELL, BCSR
+from .plan import PlanCache, SolvePlan, SolveSpec
+from .registry import (
+    PrecondDef,
+    SolverDef,
+    get_precond,
+    get_solver,
+    precond_names,
+    register_precond,
+    register_solver,
+    solver_names,
+)
+from .engine import AzulEngine
+
+__all__ = [
+    "CSR",
+    "ELL",
+    "BCSR",
+    "AzulEngine",
+    "SolveSpec",
+    "SolvePlan",
+    "PlanCache",
+    "SolverDef",
+    "PrecondDef",
+    "register_solver",
+    "register_precond",
+    "get_solver",
+    "get_precond",
+    "solver_names",
+    "precond_names",
+]

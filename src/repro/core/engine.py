@@ -37,13 +37,21 @@ per-tile compute switches to the multi-RHS ``spmm`` path that amortizes the
 single matrix stream over all k right-hand sides.
 
 Fused hot path: the engine threads a solver *substrate*
-(:mod:`repro.core.substrate`) through ``solve`` -- fused Pallas kernels
-(SpMV with the CG denominator emitted in the matrix stream; one-pass
-x/r/z update with both dots) locally, and a collective-fused shard
-substrate (single stacked psum for [rr, rz]) under ``shard_map``.  The
-``fused`` knob ("auto" default / True / False) applies wherever the
-method/preconditioner pair supports it (pcg/cg/pcg_pipe with jacobi or
-none); unsupported combinations fall back to the reference path.
+(:mod:`repro.core.substrate`) through the solve programs -- fused Pallas
+kernels (SpMV with the CG denominator emitted in the matrix stream;
+one-pass x/r/z update with both dots) locally, and a collective-fused
+shard substrate (single stacked psum for [rr, rz]) under ``shard_map``.
+The ``fused`` knob ("auto" default / True / False) applies wherever the
+method/preconditioner pair supports it -- a capability lookup against
+:mod:`repro.core.registry`, not a hard-coded ladder; unsupported
+combinations fall back to the reference path.
+
+Plan/execute API: the public solve surface is ``engine.plan(spec)`` -- a
+frozen :class:`repro.core.plan.SolveSpec` lowered ONCE into a compiled
+:class:`repro.core.plan.SolvePlan` (jitted program + operand buffers +
+substrate info), cached spec-keyed in ``engine.plans``.  The legacy
+``engine.solve(**knobs)`` survives as a thin deprecated shim over that
+cache: identical results, one DeprecationWarning per process.
 """
 
 from __future__ import annotations
@@ -57,10 +65,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import noc, solvers
+from . import noc, registry
 from .formats import CSR, pad_to
 from .levels import build_schedule
 from .partition import plan_1d, plan_2d, tile_csr
+from .plan import PlanCache, SolvePlan, SolveSpec, canonicalize, warn_deprecated
 from .precond import ic0 as host_ic0
 from .spops import spmm_ell_padded, spmv_ell_padded
 from .substrate import (fused_ic0_local_substrate, fused_local_substrate,
@@ -195,11 +204,15 @@ class AzulEngine:
         self.dtype = dtype
         self._row_pad = row_pad
         self._width_pad = width_pad
-        self._compiled: dict = {}
+        self._compiled: dict = {}      # spmv/spmm programs (vector ops)
         self._trsv_cache: dict = {}
-        # populated by every solve(): method, fused flag, substrate kind,
-        # and (post-solve) the per-RHS iteration counts
+        # spec-keyed compiled solve plans (see repro.core.plan): replaces
+        # the former hand-rolled (method, iters, precond, ...) key tuples
+        self.plans = PlanCache()
+        # populated by every plan execution: method, fused flag, substrate
+        # kind, and (post-solve) the per-RHS iteration counts
         self.last_solve_info: dict = {}
+        registry.get_precond(precond)  # fail fast on unknown preconditioner
 
         if self.mode == "local":
             self._build_local()
@@ -244,7 +257,7 @@ class AzulEngine:
             self.a, self.pr, self.pc, width_pad=self._width_pad,
             row_pad=self._row_pad, dtype=self.dtype,
         )
-        self.plan = plan
+        self.partition_plan = plan   # the static task-compiler output
         self.n_pad = plan.n_padded
         self.br = plan.block_rows
         self.bc = plan.block_cols
@@ -266,7 +279,7 @@ class AzulEngine:
             self.a, parts, balance=balance, width_pad=self._width_pad,
             row_pad=self._row_pad, dtype=self.dtype,
         )
-        self.plan = plan
+        self.partition_plan = plan   # the static task-compiler output
         self.n_pad = plan.n_padded
         self.u = plan.rows_per_tile
 
@@ -501,249 +514,178 @@ class AzulEngine:
         return self.from_device_vec(y)
 
     def _resolve_fused(self, method: str, fused) -> bool:
-        """Map the tri-state knob to a concrete bool for this method.  Both
-        "auto" and True mean "fused wherever supported": pcg/cg/pcg_tol
-        with jacobi/none/block_ic0 preconditioning everywhere (IC(0) runs
-        the fused whole-solve SpTRSV substrate locally and the
-        collective-fused block-IC(0) shard substrate distributed), plus
-        pcg_pipe in local mode (its substrate supplies the kernel-backed
-        matvec; the distributed CG-CG recurrence already fuses its
-        reductions, so there a substrate would change nothing and we report
-        the path as unfused)."""
-        f = self.fused if fused is None else fused
-        if method in ("pcg", "cg", "pcg_tol"):
-            supported = self.precond in ("jacobi", "none", "block_ic0")
-        elif method == "pcg_pipe":
-            supported = (self.mode == "local"
-                         and self.precond in ("jacobi", "none"))
-        else:
-            supported = False
-        return supported if f in ("auto", True) else False
+        """Map the tri-state knob to a concrete bool for this method: a
+        capability lookup against the solver/precond registry ("auto" and
+        True mean "fused wherever this method/preconditioner/mode triple
+        registers support")."""
+        sdef = registry.get_solver(method)
+        pdef = registry.get_precond(self.precond)
+        knob = self.fused if fused is None else fused
+        return registry.resolve_fused(sdef, pdef, self.mode == "local", knob)
 
     def substrate_kind(self, method: str = "pcg", fused=None) -> str:
-        """The substrate a ``solve(method=...)`` call will run on:
-        "reference", "fused", "fused_ic0", "fused_shard" or
-        "fused_shard_ic0".  Tests and the launch driver use this to assert
-        path selection without re-deriving the dispatch rules."""
-        if not self._resolve_fused(method, fused):
-            return "reference"
-        ic0 = self.precond == "block_ic0" and method in ("pcg", "pcg_tol")
-        if self.mode == "local":
-            return "fused_ic0" if ic0 else "fused"
-        return "fused_shard_ic0" if ic0 else "fused_shard"
+        """The substrate a plan for ``method`` will run on: "reference",
+        "fused", "fused_ic0", "fused_shard" or "fused_shard_ic0".  Tests
+        and the launch driver use this to assert path selection without
+        re-deriving the dispatch rules."""
+        sdef = registry.get_solver(method)
+        pdef = registry.get_precond(self.precond)
+        use = self._resolve_fused(method, fused)
+        return registry.substrate_kind(sdef, pdef, self.mode == "local", use)
 
-    def solve(self, b, method: str = "pcg", iters: int = 200, x0=None,
-              fused=None, tol: float = 1e-8, max_iters: int | None = None):
-        """Solve A x = b; returns (x_global numpy, res_norms numpy).
+    # -- plan/execute API ---------------------------------------------------
 
-        ``b`` may be (n,) or stacked (k, n) -- the batched form solves all k
-        right-hand sides against the one device-resident matrix in a single
-        distributed program (per-RHS traces come back as (iters + 1, k)).
-        ``fused`` overrides the engine-level knob for this solve.
+    def plan(self, spec: SolveSpec | None = None, **kwargs) -> SolvePlan:
+        """Lower a :class:`SolveSpec` into a compiled :class:`SolvePlan`.
 
-        ``method="pcg_tol"`` runs the tolerance-stopped while_loop solver:
-        ``tol`` is the relative residual target and ``max_iters`` the
-        iteration cap (default: ``iters``); per-RHS iteration counts land
-        in ``self.last_solve_info["iters"]`` after the call (the serving
-        path reads them per request)."""
-        b = np.asarray(b)
-        use_fused = self._resolve_fused(method, fused)
-        max_iters = iters if max_iters is None else max_iters
-        self.last_solve_info = {
-            "method": method,
-            "fused": use_fused,
-            "substrate": self.substrate_kind(method, fused),
+        The spec is canonicalized against this engine (registry-validated
+        method, engine preconditioner, resolved fused bool, tolerance
+        fields nulled on fixed-iteration methods) and looked up in the
+        spec-keyed ``self.plans`` cache -- equal configurations lower and
+        compile exactly once; executing the returned plan never re-resolves
+        dispatch.  ``plan(method="pcg", iters=100)`` is shorthand for
+        ``plan(SolveSpec(method="pcg", iters=100))``."""
+        if spec is None:
+            spec = SolveSpec(**kwargs)
+        spec = canonicalize(spec, self)
+        from ..kernels import ops
+
+        # the kernel dispatch mode is trace-relevant global state: a plan
+        # traced under interpret kernels must not serve an "auto" run
+        return self.plans.get(spec, self._lower, env=(ops.backend_mode(),))
+
+    def _lower(self, spec: SolveSpec) -> SolvePlan:
+        """Lower one canonical spec: pick the substrate by capability
+        lookup, build the (local or shard_map) program, jit it once."""
+        sdef = registry.get_solver(spec.method)
+        pdef = registry.get_precond(self.precond)
+        local = self.mode == "local"
+        kind = registry.substrate_kind(sdef, pdef, local, spec.fused)
+        cell = [0]  # trace counter: incremented when jax (re)traces
+        fn = (self._lower_local if local else self._lower_dist)(
+            spec, sdef, kind, cell
+        )
+        info = {
+            "method": spec.method,
+            "precond": spec.precond,
+            "fused": spec.fused,
+            "substrate": kind,
+            "batch": spec.batch,
         }
-        if self.mode == "local":
-            res = self._solve_local(method, iters, b, x0, use_fused,
-                                    tol=tol, max_iters=max_iters)
-            self.last_solve_info["iters"] = np.asarray(res.iters)
-            return np.asarray(res.x)[..., : self.n], np.asarray(res.res_norms)
-        if method != "pcg_tol":
-            # only the tolerance solver reads these; keying them for the
-            # fixed-iteration methods would recompile bit-identical programs
-            tol, max_iters = None, None
-        fn = self._solve_compiled(method, iters, batched=b.ndim == 2,
-                                  fused=use_fused, tol=tol,
-                                  max_iters=max_iters)
-        bd = self.to_device_vec(b)
-        x0 = np.zeros(b.shape) if x0 is None else np.asarray(x0)
-        if b.ndim == 2 and x0.ndim == 1:
-            # a shared (n,) initial guess for a (k, n) batch: broadcast so
-            # b and x0 agree on the batched sharding spec
-            x0 = np.broadcast_to(x0, b.shape)
-        x0d = self.to_device_vec(x0)
-        x, norms, its = fn(bd, x0d)
-        self.last_solve_info["iters"] = np.asarray(its)
-        return self.from_device_vec(x), np.asarray(norms)
+        return SolvePlan(self, spec, fn, info, cell)
 
-    def _solve_local(self, method, iters, b, x0, fused=False, tol=1e-8,
-                     max_iters=200):
-        b = jnp.asarray(np.asarray(b), self.dtype)
-        b_pad = jnp.zeros(b.shape[:-1] + (self.n_pad,), self.dtype)
-        b_pad = b_pad.at[..., : self.n].set(b)
-        x0_pad = None
-        if x0 is not None:
-            x0_pad = jnp.zeros_like(b_pad).at[..., : self.n].set(
-                jnp.asarray(np.asarray(x0), self.dtype)
-            )
+    def _lower_local(self, spec: SolveSpec, sdef, kind: str, cell: list):
+        """Single-device program: padded-ELL closures + fused substrate
+        per the resolved kind, jitted (one trace per plan)."""
         ell = self.ell
-
-        def mv(x):
-            if x.ndim == 2:
-                return spmm_ell_padded(ell.cols, ell.vals, x)
-            return spmv_ell_padded(ell.cols, ell.vals, x)
-
         dinv = self._dinv_pad
-        # single source of truth for path selection: the same kind that
-        # last_solve_info reports and the tests assert on
-        kind = self.substrate_kind(method, fused)
+        eff = registry.effective_precond(sdef, self.precond, local=True)
         sub = None
         if kind == "fused_ic0":
             sub = fused_ic0_local_substrate(ell.cols, ell.vals, self._ic0,
                                             self.n, self.n_pad)
         elif kind == "fused":
             sub = fused_local_substrate(
-                ell.cols, ell.vals,
-                dinv=dinv if self.precond == "jacobi" else None,
+                ell.cols, ell.vals, dinv=dinv if eff.uses_dinv else None,
             )
-        if method == "jacobi":
-            return solvers.jacobi(mv, dinv, b_pad, x0=x0_pad, iters=iters)
-        if method == "cg":
-            return solvers.cg(
-                mv, b_pad, x0=x0_pad, iters=iters,
-                substrate=fused_local_substrate(ell.cols, ell.vals) if fused else None,
-            )
-        if method == "pcg_pipe":
-            ps = (lambda r: r * dinv) if self.precond == "jacobi" else (lambda r: r)
-            return solvers.pcg_pipelined(mv, b_pad, psolve=ps, x0=x0_pad,
-                                         iters=iters, substrate=sub)
-        if method in ("pcg", "pcg_tol"):
-            if self.precond == "block_ic0":
-                from .precond import apply_ic0
-                f = self._ic0
-                n, n_pad = self.n, self.n_pad
+        psolve = eff.local_apply(self)
 
-                def ps1(r):
-                    z = apply_ic0(f, r[:n])
-                    return jnp.zeros(n_pad, r.dtype).at[:n].set(z)
+        def mv(x):
+            if x.ndim == 2:
+                return spmm_ell_padded(ell.cols, ell.vals, x)
+            return spmv_ell_padded(ell.cols, ell.vals, x)
 
-                def ps(r):
-                    return jax.vmap(ps1)(r) if r.ndim == 2 else ps1(r)
-            elif self.precond == "jacobi":
-                ps = lambda r: r * dinv
-            else:
-                ps = lambda r: r
-            if method == "pcg_tol":
-                return solvers.pcg_tol(mv, b_pad, psolve=ps, x0=x0_pad,
-                                       tol=tol, max_iters=max_iters,
-                                       substrate=sub)
-            return solvers.pcg(mv, b_pad, psolve=ps, x0=x0_pad, iters=iters,
-                               substrate=sub)
-        raise ValueError(method)
+        ctx = registry.SolveContext(
+            matvec=mv, psolve=psolve, dinv=dinv, substrate=sub,
+            iters=spec.iters, tol=spec.tol, max_iters=spec.max_iters,
+        )
 
-    def _solve_compiled(self, method, iters, batched: bool = False,
-                        fused: bool = False, tol: float | None = 1e-8,
-                        max_iters: int | None = 200):
-        key = (method, iters, self.precond, batched, fused, tol, max_iters)
-        if key in self._compiled:
-            return self._compiled[key]
-        # single source of truth for path selection (matches last_solve_info)
-        kind = self.substrate_kind(method, fused)
+        def prog(b_pad, x0_pad):
+            cell[0] += 1
+            res = sdef.run(ctx, b_pad, x0_pad)
+            return res.x, res.res_norms, res.iters
 
+        return jax.jit(prog)
+
+    def _lower_dist(self, spec: SolveSpec, sdef, kind: str, cell: list):
+        """Distributed ``shard_map`` program: NoC matvec closure, per-tile
+        preconditioner from the registry capability flags, collective-fused
+        shard substrate per the resolved kind."""
+        batched = spec.batch is not None
         mv = self._mk_matvec()
         dot = self._dot()
+        dot2 = self._dot2()
         mesh = self.mesh
         vec, blk = self._vec_spec, self._blk_spec
         io_vec = self._bvec_spec if batched else vec
         s3 = P(self._all_axes, None, None)
         s2 = P(self._all_axes, None)
         cols, vals = self.cols, self.vals
-        precond = self.precond if method in ("pcg", "pcg_tol", "pcg_pipe") else "none"
-        if method == "jacobi":
-            precond = "jacobi"
-        if method == "pcg_pipe" and precond == "block_ic0":
-            precond = "jacobi"  # pipelined variant: local preconditioners only
+        eff = registry.effective_precond(sdef, self.precond, local=False)
 
         extra_args: tuple = ()
         extra_specs: tuple = ()
-        if precond == "jacobi":
+        if eff.uses_dinv:
             extra_args = (self._dinv_pad,)
             extra_specs = (vec,)
-        elif precond == "block_ic0":
+        elif eff.factorized:
             extra_args = self._pc_l + self._pc_u + (self._pc_k,)
             extra_specs = (s3, s3, s2, s3, s3, s3, s2, s3, vec)
 
-        dot2 = self._dot2()
         psum_axes = self._all_axes
 
         def prog(b_loc, x0_loc, cols_loc, vals_loc, *extra):
             amv = lambda x: mv(x, cols_loc, vals_loc)
-            if method == "jacobi":
-                res = solvers.jacobi(amv, extra[0], b_loc, x0=x0_loc,
-                                     iters=iters, dot=dot)
-            elif method == "pcg_pipe":
-                if precond == "jacobi":
-                    dinv_loc = extra[0]
-                    ps = lambda r: r * dinv_loc
-                else:
-                    ps = lambda r: r
-                res = solvers.pcg_pipelined(amv, b_loc, psolve=ps, x0=x0_loc,
-                                            iters=iters, dot2=dot2, dot=dot)
+            dinv_loc = extra[0] if eff.uses_dinv else None
+            if eff.factorized:
+                lc, lv, ldi, lr, uc, uv, udi, ur = (a[0] for a in extra[:8])
+                k = extra[8][0]  # true block size of this tile
+
+                def flip_k(z):
+                    # reverse the first k entries in-place (padded tail
+                    # stays zero): z_rev[i] = z[k-1-i] for i < k.
+                    idx = k - 1 - jnp.arange(z.shape[0])
+                    ok = idx >= 0
+                    return jnp.where(
+                        ok, z[jnp.clip(idx, 0, z.shape[0] - 1)], 0.0
+                    )
+
+                def ps1(r_loc):
+                    rows_p = lc.shape[0]
+                    bb = jnp.zeros((rows_p,), r_loc.dtype)
+                    bb = bb.at[: r_loc.shape[0]].set(r_loc)
+                    zp = local_sptrsv(lc, lv, ldi, bb, lr)
+                    z = local_sptrsv(uc, uv, udi, flip_k(zp), ur)
+                    return flip_k(z)[: r_loc.shape[0]]
+
+                def ps(r_loc):
+                    # batched (k, u) shard: the factors are shared, so
+                    # the two triangular solves vmap over the batch.
+                    return jax.vmap(ps1)(r_loc) if r_loc.ndim == 2 else ps1(r_loc)
+            elif eff.uses_dinv:
+                ps = lambda r: r * dinv_loc
             else:
-                if precond == "jacobi":
-                    dinv_loc = extra[0]
-                    ps = lambda r: r * dinv_loc
-                elif precond == "block_ic0":
-                    lc, lv, ldi, lr, uc, uv, udi, ur = (a[0] for a in extra[:8])
-                    k = extra[8][0]  # true block size of this tile
-
-                    def flip_k(z):
-                        # reverse the first k entries in-place (padded tail
-                        # stays zero): z_rev[i] = z[k-1-i] for i < k.
-                        idx = k - 1 - jnp.arange(z.shape[0])
-                        ok = idx >= 0
-                        return jnp.where(
-                            ok, z[jnp.clip(idx, 0, z.shape[0] - 1)], 0.0
-                        )
-
-                    def ps1(r_loc):
-                        rows_p = lc.shape[0]
-                        bb = jnp.zeros((rows_p,), r_loc.dtype)
-                        bb = bb.at[: r_loc.shape[0]].set(r_loc)
-                        zp = local_sptrsv(lc, lv, ldi, bb, lr)
-                        z = local_sptrsv(uc, uv, udi, flip_k(zp), ur)
-                        return flip_k(z)[: r_loc.shape[0]]
-
-                    def ps(r_loc):
-                        # batched (k, u) shard: the factors are shared, so
-                        # the two triangular solves vmap over the batch.
-                        return jax.vmap(ps1)(r_loc) if r_loc.ndim == 2 else ps1(r_loc)
-                else:
-                    ps = lambda r: r
-                sub = None
-                if kind == "fused_shard":
-                    # collective-fused shard substrate: one stacked psum
-                    # carries [rr, rz]; the local update is the one-pass
-                    # cg_update kernel on this tile's vector shard.
-                    sub = fused_shard_substrate(
-                        amv,
-                        extra[0] if precond == "jacobi" else None,
-                        lambda s: lax.psum(s, psum_axes),
-                    )
-                elif kind == "fused_shard_ic0":
-                    # same collective fusion with the per-tile block-IC(0)
-                    # triangular solves as the (collective-free) psolve
-                    sub = fused_shard_ic0_substrate(
-                        amv, ps, lambda s: lax.psum(s, psum_axes)
-                    )
-                if method == "pcg_tol":
-                    res = solvers.pcg_tol(amv, b_loc, psolve=ps, x0=x0_loc,
-                                          tol=tol, max_iters=max_iters,
-                                          dot=dot, substrate=sub)
-                else:
-                    res = solvers.pcg(amv, b_loc, psolve=ps, x0=x0_loc,
-                                      iters=iters, dot=dot, substrate=sub)
+                ps = lambda r: r
+            sub = None
+            if kind == "fused_shard":
+                # collective-fused shard substrate: one stacked psum
+                # carries [rr, rz]; the local update is the one-pass
+                # cg_update kernel on this tile's vector shard.
+                sub = fused_shard_substrate(
+                    amv, dinv_loc, lambda s: lax.psum(s, psum_axes)
+                )
+            elif kind == "fused_shard_ic0":
+                # same collective fusion with the per-tile block-IC(0)
+                # triangular solves as the (collective-free) psolve
+                sub = fused_shard_ic0_substrate(
+                    amv, ps, lambda s: lax.psum(s, psum_axes)
+                )
+            ctx = registry.SolveContext(
+                matvec=amv, psolve=ps, dinv=dinv_loc, dot=dot, dot2=dot2,
+                substrate=sub, iters=spec.iters, tol=spec.tol,
+                max_iters=spec.max_iters,
+            )
+            res = sdef.run(ctx, b_loc, x0_loc)
             return res.x, res.res_norms, res.iters
 
         f = _shard_map(
@@ -751,9 +693,38 @@ class AzulEngine:
             in_specs=(io_vec, io_vec, blk, blk) + extra_specs,
             out_specs=(io_vec, P(), P()),
         )
-        fn = jax.jit(lambda b, x0: f(b, x0, cols, vals, *extra_args))
-        self._compiled[key] = fn
-        return fn
+
+        def outer(b, x0):
+            cell[0] += 1
+            return f(b, x0, cols, vals, *extra_args)
+
+        return jax.jit(outer)
+
+    # -- legacy kwargs surface (deprecated shim over the plan cache) --------
+
+    def solve(self, b, method: str = "pcg", iters: int = 200, x0=None,
+              fused=None, tol: float = 1e-8, max_iters: int | None = None):
+        """DEPRECATED: build a :class:`SolveSpec` and use :meth:`plan`.
+
+        Thin shim kept for compatibility: it builds the equivalent spec,
+        hits the spec-keyed plan cache, and executes -- bit-identical to
+        calling the plan directly (``b`` may be (n,) or stacked (k, n); for
+        tolerance methods per-RHS iteration counts land in
+        ``self.last_solve_info["iters"]``).  Emits one DeprecationWarning
+        per process."""
+        warn_deprecated(
+            "AzulEngine.solve",
+            "AzulEngine.solve(**knobs) is deprecated: build a SolveSpec "
+            "and use AzulEngine.plan(spec) (see README 'The plan/execute "
+            "API').",
+        )
+        b = np.asarray(b)
+        spec = SolveSpec(
+            method=method, iters=iters, tol=tol, max_iters=max_iters,
+            batch=b.shape[0] if b.ndim == 2 else None,
+            fused=self.fused if fused is None else fused,
+        )
+        return self.plan(spec)(b, x0=x0)
 
     # -- distributed SpTRSV (2D block-stage forward substitution) -----------
 

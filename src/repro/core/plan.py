@@ -1,0 +1,245 @@
+"""Plan/execute API: a frozen ``SolveSpec`` lowered once into a compiled
+``SolvePlan``.
+
+The paper's Azul design separates static configuration (tile grid,
+partition, task program) from streaming execution.  This module is that
+split for the solve surface:
+
+* :class:`SolveSpec` -- the frozen, hashable description of ONE solve
+  configuration (method, tolerance/iteration budget, batch shape, fused
+  knob).  ``AzulEngine.plan(spec)`` canonicalizes it against the engine
+  (registry-validated method, engine preconditioner, resolved fused bool,
+  tolerance fields nulled for fixed-iteration methods so equivalent specs
+  collapse to one cache key) and lowers it ONCE.
+* :class:`SolvePlan` -- the callable result: it owns its jitted program,
+  the substrate selection, the device-resident operand buffers it closes
+  over, and ``info`` (substrate kind, method, fused flag, batch).  Call it
+  like a function: ``x, norms = plan(b)``.  Executing a plan never
+  re-resolves dispatch and traces exactly once per (spec, shape) --
+  ``plan.traces`` counts retraces so tests and the serving path can assert
+  the steady state stays compile-free.
+* :class:`PlanCache` -- the spec-keyed plan store ``AzulEngine`` holds,
+  replacing the hand-rolled cache-key tuples the engine used to thread
+  through ``solve(**knobs)``.  Keys are (canonical spec, kernel-dispatch
+  mode), so a ``kernels.ops.backend_mode`` switch can never serve a stale
+  program.
+
+``AzulEngine.solve(**knobs)`` survives as a thin deprecated shim that
+builds a spec and hits the cache -- bit-identical results, one
+``DeprecationWarning`` per process.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+import numpy as np
+
+from . import registry
+
+__all__ = ["SolveSpec", "SolvePlan", "PlanCache"]
+
+
+@dataclass(frozen=True)
+class SolveSpec:
+    """Frozen description of one solve configuration.
+
+    Fields (all participate in plan-cache identity after canonicalization):
+
+    method     registered solver name (see ``registry.solver_names()``)
+    precond    preconditioner name; None = the engine's (resolved at plan
+               time -- a spec naming a different preconditioner than the
+               engine was built for is rejected, the factorization is an
+               engine-build-time decision)
+    iters      fixed iteration count (fixed-iteration methods)
+    tol        relative residual target (tolerance methods; None there
+               means the 1e-8 default, and is forced to None on
+               fixed-iteration methods so tol changes never recompile them)
+    max_iters  iteration cap for tolerance methods (None -> ``iters``)
+    batch      None for a single (n,) RHS, k for a stacked (k, n) batch --
+               plans are shape-specialized, the serving path builds one
+               plan per batch bucket
+    fused      'auto' | True | False; canonicalized to the resolved bool
+    """
+
+    method: str = "pcg"
+    precond: str | None = None
+    iters: int = 200
+    tol: float | None = None
+    max_iters: int | None = None
+    batch: int | None = None
+    fused: Any = "auto"
+
+
+def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
+    """Resolve a user spec against an engine into the canonical cache key.
+
+    Canonicalization is what kills the stringly-typed cache-key fragility:
+    tolerance fields are meaningful only on tolerance methods (elsewhere
+    they are forced to None), ``iters`` is folded into ``max_iters`` for
+    tolerance methods, precond aliases resolve to registry names, and the
+    tri-state fused knob becomes the resolved bool.  Equal configurations
+    therefore collapse to equal specs -- and one compiled plan."""
+    sdef = registry.get_solver(spec.method)
+    pdef = registry.get_precond(engine.precond)
+    if spec.precond is not None:
+        want = registry.get_precond(spec.precond)
+        if want.name != pdef.name:
+            raise ValueError(
+                f"spec precond {want.name!r} != engine precond {pdef.name!r}"
+                " (the preconditioner is factored at engine build time --"
+                " build an engine with precond=...)"
+            )
+    if spec.batch is not None and (not isinstance(spec.batch, int)
+                                   or spec.batch < 1):
+        raise ValueError(f"batch must be None or a positive int, got {spec.batch!r}")
+    if spec.batch is not None and not sdef.batched:
+        raise ValueError(f"solver {sdef.name!r} does not support batched RHS")
+    local = engine.mode == "local"
+    fused = registry.resolve_fused(sdef, pdef, local, spec.fused)
+    if sdef.tolerance:
+        tol = 1e-8 if spec.tol is None else float(spec.tol)
+        max_iters = spec.iters if spec.max_iters is None else int(spec.max_iters)
+        iters = max_iters          # one budget field: iters mirrors the cap
+    else:
+        tol, max_iters, iters = None, None, int(spec.iters)
+    return replace(spec, precond=pdef.name, iters=iters, tol=tol,
+                   max_iters=max_iters, fused=fused)
+
+
+class SolvePlan:
+    """A compiled solve: spec + jitted program + operand buffers + info.
+
+    Built by ``AzulEngine.plan(spec)``; execute with ``plan(b, x0=None)``.
+    The program and the device-resident operands it closes over (matrix
+    blocks, diagonal, packed factor blocks) live as long as the plan --
+    compile once, execute as often as traffic demands.
+
+    Attributes
+    ----------
+    spec        the canonical :class:`SolveSpec` (fused resolved to bool)
+    info        {"method", "precond", "substrate", "fused", "batch"}
+    traces      times the program was (re)traced -- 1 in steady state
+    executions  times the plan was called
+    last_iters  per-RHS iteration counts of the most recent execution
+    """
+
+    def __init__(self, engine, spec: SolveSpec, fn: Callable, info: dict,
+                 trace_cell: list):
+        self.engine = engine
+        self.spec = spec
+        self._fn = fn
+        self.info = info
+        self._trace_cell = trace_cell
+        self.executions = 0
+        self.last_iters = None
+
+    @property
+    def fn(self):
+        """The jitted device program ``fn(b_dev, x0_dev) -> (x, norms,
+        iters)`` in the engine's padded layout (exposed for ``.lower()``
+        introspection -- the roofline dry-run path)."""
+        return self._fn
+
+    @property
+    def traces(self) -> int:
+        return self._trace_cell[0]
+
+    def _check(self, b: np.ndarray) -> None:
+        n = self.engine.n
+        want = (n,) if self.spec.batch is None else (self.spec.batch, n)
+        if b.shape != want:
+            raise ValueError(
+                f"plan compiled for RHS shape {want}, got {b.shape} -- "
+                "plans are shape-specialized; build a spec with the "
+                "matching batch"
+            )
+
+    def __call__(self, b, x0=None):
+        """Execute: returns (x, res_norms) as numpy, mirroring the RHS
+        shape; per-RHS iteration counts land in ``self.last_iters`` (and,
+        for engine-level compatibility, ``engine.last_solve_info``)."""
+        b = np.asarray(b)
+        self._check(b)
+        if x0 is None:
+            x0 = np.zeros(b.shape)
+        else:
+            x0 = np.asarray(x0)
+            if b.ndim == 2 and x0.ndim == 1:
+                # a shared (n,) initial guess for a (k, n) batch: broadcast
+                # so b and x0 agree on the batched sharding spec
+                x0 = np.broadcast_to(x0, b.shape)
+        eng = self.engine
+        x, norms, its = self._fn(eng.to_device_vec(b), eng.to_device_vec(x0))
+        self.executions += 1
+        self.last_iters = np.asarray(its)
+        info = dict(self.info)
+        info["iters"] = self.last_iters
+        eng.last_solve_info = info
+        return eng.from_device_vec(np.asarray(x)), np.asarray(norms)
+
+    def __repr__(self) -> str:
+        s = self.spec
+        return (f"SolvePlan({s.method}, precond={s.precond}, "
+                f"substrate={self.info['substrate']}, batch={s.batch}, "
+                f"traces={self.traces}, executions={self.executions})")
+
+
+class PlanCache:
+    """Spec-keyed store of compiled plans (the engine's ``plans`` attr).
+
+    Keys are (canonical SolveSpec, env) where env captures trace-relevant
+    global state (the kernel dispatch mode) -- equal specs hit, anything
+    else misses and lowers exactly once.  ``hits``/``misses`` feed the
+    serving stats; membership tests take a canonical spec."""
+
+    def __init__(self):
+        self._plans: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, spec: SolveSpec, build: Callable, env: tuple = ()):
+        key = (spec, env)
+        plan = self._plans.get(key)
+        if plan is None:
+            self.misses += 1
+            plan = build(spec)
+            self._plans[key] = plan
+        else:
+            self.hits += 1
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, spec: SolveSpec) -> bool:
+        return any(k[0] == spec for k in self._plans)
+
+    def specs(self) -> list:
+        return [k[0] for k in self._plans]
+
+    def clear(self) -> None:
+        self._plans.clear()
+
+
+# ---------------------------------------------------------------------------
+# deprecation bookkeeping for the legacy kwargs surface
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
+
+
+def warn_deprecated(key: str, message: str) -> None:
+    """Emit ``message`` as a DeprecationWarning ONCE per process per key
+    (legacy call sites keep working; they just say so, once)."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    """Test hook: make the next legacy call warn again."""
+    _WARNED.clear()

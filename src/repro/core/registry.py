@@ -1,0 +1,347 @@
+"""Solver / preconditioner registry: capability metadata driving plan lowering.
+
+The plan/execute API (:mod:`repro.core.plan`) lowers a frozen ``SolveSpec``
+into a compiled ``SolvePlan``.  What used to be if/elif ladders inside
+``AzulEngine`` (``_resolve_fused`` / ``substrate_kind`` / ``_solve_local`` /
+``_solve_compiled``) is now a capability lookup against this registry:
+
+* a :class:`SolverDef` names the iteration (``run`` adapts the uniform
+  :class:`SolveContext` to the actual :mod:`repro.core.solvers` callable)
+  and declares what it supports -- tolerance stopping, batching, whether it
+  consumes the engine preconditioner, whether its fused update applies
+  M^-1 in-stream, and *which preconditioners it can run fused against*,
+  locally and under ``shard_map``;
+* a :class:`PrecondDef` names the preconditioner, its aliases, the
+  capability flags lowering needs (``uses_dinv``, ``factorized``) and the
+  substrate kind its fused application lowers to.
+
+Adding a solver or preconditioner is a ``register_solver`` /
+``register_precond`` call plus the kernel/apply it needs -- the engine,
+``SolveSpec`` validation, ``substrate_kind`` reporting, serving, and the
+benchmarks all pick it up through the registry (see README "Extending the
+registry").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+__all__ = [
+    "SolverDef",
+    "PrecondDef",
+    "SolveContext",
+    "register_solver",
+    "register_precond",
+    "unregister_solver",
+    "unregister_precond",
+    "get_solver",
+    "get_precond",
+    "solver_names",
+    "precond_names",
+    "resolve_fused",
+    "substrate_kind",
+    "effective_precond",
+]
+
+
+# ---------------------------------------------------------------------------
+# definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SolveContext:
+    """The uniform operator bundle plan lowering hands a solver's ``run``.
+
+    ``matvec``/``psolve``/``dot``/``dot2``/``substrate`` are already bound
+    to the engine's layout (local padded-ELL closures, or per-tile NoC
+    closures inside ``shard_map``); ``dot``/``dot2`` are ``None`` where the
+    solver's layout-oblivious default applies (local mode).
+    """
+
+    matvec: Callable
+    psolve: Callable
+    dinv: Any = None                  # inverse-diagonal operand (jacobi)
+    dot: Callable | None = None
+    dot2: Callable | None = None
+    substrate: Any = None             # SolverSubstrate or None (reference)
+    iters: int = 0
+    tol: float | None = None
+    max_iters: int | None = None
+
+
+@dataclass(frozen=True)
+class SolverDef:
+    """Capability metadata + adapter for one iterative method.
+
+    ``fused_local`` / ``fused_dist`` list the *engine* preconditioner names
+    the method supports a fused substrate with, per mode.  ``tolerance``
+    marks while_loop methods (they read ``tol``/``max_iters`` and return
+    the bounded convergence trace); ``preconditioned`` marks methods that
+    consume the engine preconditioner at all (``cg`` does not);
+    ``needs_dinv`` marks methods whose iteration itself consumes the
+    inverse diagonal (the ``jacobi`` smoother); ``fused_precond_apply``
+    marks methods whose fused update applies M^-1 in-stream, so a
+    factorized preconditioner lowers them to its heavyweight substrate
+    kind (``fused_ic0`` / ``fused_shard_ic0``).  ``*_precond_override``
+    remaps the preconditioner used to build ``psolve`` per mode (the
+    pipelined solver runs local preconditioners only).
+    """
+
+    name: str
+    run: Callable[[SolveContext, Any, Any], Any]   # (ctx, b, x0) -> SolveResult
+    tolerance: bool = False
+    batched: bool = True
+    preconditioned: bool = True
+    needs_dinv: bool = False
+    fused_precond_apply: bool = False
+    fused_local: frozenset = frozenset()
+    fused_dist: frozenset = frozenset()
+    local_precond_override: dict = field(default_factory=dict)
+    dist_precond_override: dict = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class PrecondDef:
+    """Capability metadata + local apply builder for one preconditioner.
+
+    ``local_apply(engine)`` returns the single-device ``psolve`` closure
+    over the engine's device-resident operands.  The distributed per-tile
+    apply is built by engine lowering from the capability flags
+    (``uses_dinv`` -> the sharded inverse diagonal, ``factorized`` -> the
+    packed per-tile factor blocks).
+    """
+
+    name: str
+    aliases: tuple = ()
+    uses_dinv: bool = False
+    factorized: bool = False
+    fused_local_kind: str = "fused"
+    fused_shard_kind: str = "fused_shard"
+    local_apply: Callable | None = None
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+_SOLVERS: dict[str, SolverDef] = {}
+_PRECONDS: dict[str, PrecondDef] = {}
+_PRECOND_ALIASES: dict[str, str] = {}
+
+
+def register_solver(sdef: SolverDef) -> SolverDef:
+    _SOLVERS[sdef.name] = sdef
+    return sdef
+
+
+def register_precond(pdef: PrecondDef) -> PrecondDef:
+    _PRECONDS[pdef.name] = pdef
+    for a in pdef.aliases:
+        _PRECOND_ALIASES[a] = pdef.name
+    return pdef
+
+
+def unregister_solver(name: str) -> None:
+    _SOLVERS.pop(name, None)
+
+
+def unregister_precond(name: str) -> None:
+    pdef = _PRECONDS.pop(name, None)
+    if pdef is not None:
+        for a in pdef.aliases:
+            _PRECOND_ALIASES.pop(a, None)
+
+
+def get_solver(name: str) -> SolverDef:
+    try:
+        return _SOLVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; registered: {', '.join(solver_names())}"
+        ) from None
+
+
+def get_precond(name: str) -> PrecondDef:
+    name = _PRECOND_ALIASES.get(name, name)
+    try:
+        return _PRECONDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown preconditioner {name!r}; "
+            f"registered: {', '.join(precond_names())}"
+        ) from None
+
+
+def solver_names() -> tuple:
+    return tuple(sorted(_SOLVERS))
+
+
+def precond_names() -> tuple:
+    return tuple(sorted(_PRECONDS))
+
+
+# ---------------------------------------------------------------------------
+# capability resolution (the former engine if/elif ladders)
+# ---------------------------------------------------------------------------
+
+
+def resolve_fused(sdef: SolverDef, pdef: PrecondDef, local: bool, knob) -> bool:
+    """Map the tri-state fused knob ('auto' | True | False) to a concrete
+    bool: 'auto' and True mean "fused wherever this (method, precond, mode)
+    supports it" -- a registry capability lookup, not a name ladder."""
+    if knob not in ("auto", True, False):
+        raise ValueError(f"fused must be 'auto', True or False, got {knob!r}")
+    caps = sdef.fused_local if local else sdef.fused_dist
+    supported = pdef.name in caps
+    return supported if knob in ("auto", True) else False
+
+
+def substrate_kind(sdef: SolverDef, pdef: PrecondDef, local: bool,
+                   fused: bool) -> str:
+    """The substrate a (solver, precond, mode, resolved-fused) lowers to:
+    "reference", "fused", "fused_ic0", "fused_shard" or "fused_shard_ic0".
+    A factorized preconditioner only reaches its heavyweight kind through
+    methods whose fused update applies M^-1 in-stream."""
+    if not fused:
+        return "reference"
+    if sdef.fused_precond_apply:
+        return pdef.fused_local_kind if local else pdef.fused_shard_kind
+    return "fused" if local else "fused_shard"
+
+
+def effective_precond(sdef: SolverDef, engine_precond: str,
+                      local: bool) -> PrecondDef:
+    """The preconditioner a solver's ``psolve`` is actually built from:
+    unpreconditioned methods get identity (or jacobi when the iteration
+    itself needs the diagonal), and per-mode overrides apply (the
+    pipelined solver runs local preconditioners only)."""
+    if not sdef.preconditioned:
+        return get_precond("jacobi" if sdef.needs_dinv else "identity")
+    ov = sdef.local_precond_override if local else sdef.dist_precond_override
+    name = _PRECOND_ALIASES.get(engine_precond, engine_precond)
+    return get_precond(ov.get(name, name))
+
+
+# ---------------------------------------------------------------------------
+# built-in solvers (adapters over repro.core.solvers)
+# ---------------------------------------------------------------------------
+
+_ALL_PRECONDS = frozenset({"identity", "jacobi", "block_ic0"})
+_LOCAL_PRECONDS = frozenset({"identity", "jacobi"})
+
+
+def _dot_kw(c: SolveContext) -> dict:
+    return {"dot": c.dot} if c.dot is not None else {}
+
+
+def _run_pcg(c: SolveContext, b, x0):
+    from . import solvers
+
+    return solvers.pcg(c.matvec, b, psolve=c.psolve, x0=x0, iters=c.iters,
+                       substrate=c.substrate, **_dot_kw(c))
+
+
+def _run_pcg_tol(c: SolveContext, b, x0):
+    from . import solvers
+
+    return solvers.pcg_tol(c.matvec, b, psolve=c.psolve, x0=x0, tol=c.tol,
+                           max_iters=c.max_iters, substrate=c.substrate,
+                           **_dot_kw(c))
+
+
+def _run_cg(c: SolveContext, b, x0):
+    from . import solvers
+
+    return solvers.cg(c.matvec, b, x0=x0, iters=c.iters,
+                      substrate=c.substrate, **_dot_kw(c))
+
+
+def _run_pcg_pipe(c: SolveContext, b, x0):
+    from . import solvers
+
+    kw = _dot_kw(c)
+    if c.dot2 is not None:
+        kw["dot2"] = c.dot2
+    return solvers.pcg_pipelined(c.matvec, b, psolve=c.psolve, x0=x0,
+                                 iters=c.iters, substrate=c.substrate, **kw)
+
+
+def _run_jacobi(c: SolveContext, b, x0):
+    from . import solvers
+
+    return solvers.jacobi(c.matvec, c.dinv, b, x0=x0, iters=c.iters,
+                          **_dot_kw(c))
+
+
+register_solver(SolverDef(
+    name="pcg", run=_run_pcg, fused_precond_apply=True,
+    fused_local=_ALL_PRECONDS, fused_dist=_ALL_PRECONDS,
+))
+register_solver(SolverDef(
+    name="pcg_tol", run=_run_pcg_tol, tolerance=True,
+    fused_precond_apply=True,
+    fused_local=_ALL_PRECONDS, fused_dist=_ALL_PRECONDS,
+))
+register_solver(SolverDef(
+    name="cg", run=_run_cg, preconditioned=False,
+    fused_local=_ALL_PRECONDS, fused_dist=_ALL_PRECONDS,
+))
+register_solver(SolverDef(
+    name="pcg_pipe", run=_run_pcg_pipe,
+    # local preconditioners only: the CG-CG recurrence already fuses its
+    # reductions distributed, so a shard substrate would change nothing
+    fused_local=_LOCAL_PRECONDS, fused_dist=frozenset(),
+    local_precond_override={"block_ic0": "identity"},
+    dist_precond_override={"block_ic0": "jacobi"},
+))
+register_solver(SolverDef(
+    name="jacobi", run=_run_jacobi, preconditioned=False, needs_dinv=True,
+))
+
+
+# ---------------------------------------------------------------------------
+# built-in preconditioners
+# ---------------------------------------------------------------------------
+
+
+def _identity_apply(engine):
+    return lambda r: r
+
+
+def _jacobi_apply(engine):
+    dinv = engine._dinv_pad
+    return lambda r: r * dinv
+
+
+def _block_ic0_apply(engine):
+    import jax
+    import jax.numpy as jnp
+
+    from .precond import apply_ic0
+
+    f = engine._ic0
+    n, n_pad = engine.n, engine.n_pad
+
+    def ps1(r):
+        z = apply_ic0(f, r[:n])
+        return jnp.zeros(n_pad, r.dtype).at[:n].set(z)
+
+    def ps(r):
+        return jax.vmap(ps1)(r) if r.ndim == 2 else ps1(r)
+
+    return ps
+
+
+register_precond(PrecondDef(
+    name="identity", aliases=("none",), local_apply=_identity_apply,
+))
+register_precond(PrecondDef(
+    name="jacobi", uses_dinv=True, local_apply=_jacobi_apply,
+))
+register_precond(PrecondDef(
+    name="block_ic0", factorized=True,
+    fused_local_kind="fused_ic0", fused_shard_kind="fused_shard_ic0",
+    local_apply=_block_ic0_apply,
+))

@@ -26,6 +26,7 @@ def _solver_main(args) -> int:
     jax.config.update("jax_enable_x64", True)  # f64 engine, like the benches
 
     from ..core.engine import AzulEngine
+    from ..core.plan import SolveSpec
     from ..data.matrices import suite
     from ..serve import SolveServer
 
@@ -47,8 +48,10 @@ def _solver_main(args) -> int:
         mesh = make_mesh(shape, ("data", "model"))
 
     eng = AzulEngine(m, mesh=mesh, precond=args.precond, dtype=np.float64)
-    srv = SolveServer(eng, max_batch=args.coalesce, method=args.method,
-                      iters=args.iters, tol=args.tol)
+    # per-bucket plans are built from this spec (batch filled per bucket);
+    # dispatch resolves once at plan construction, not per step
+    spec = SolveSpec(method=args.method, iters=args.iters, tol=args.tol)
+    srv = SolveServer(eng, max_batch=args.coalesce, spec=spec)
 
     import scipy.sparse as sp
     a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
@@ -66,6 +69,7 @@ def _solver_main(args) -> int:
         "matrix": args.matrix, "n": m.shape[0],
         "requests": args.requests, "coalesce": args.coalesce,
         "batches": srv.stats["batches"], "padded_rhs": srv.stats["padded_rhs"],
+        "bucket_plans": srv.stats["plans"],
         "wall_s": round(dt, 3),
         "solves_per_s": round(args.requests / dt, 2),
         "verify_maxerr": err,

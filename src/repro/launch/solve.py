@@ -41,6 +41,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from ..core.engine import AzulEngine
+    from ..core.plan import SolveSpec
     from ..data.matrices import suite
 
     mats = suite("small")
@@ -63,22 +64,24 @@ def main(argv=None):
     import scipy.sparse as sp
     a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
     b = a @ x_true
-    x, norms = eng.solve(b, method=args.method, iters=args.iters,
-                         tol=args.tol, max_iters=args.max_iters)
+    # plan/execute: lower the spec once, run the compiled plan
+    plan = eng.plan(SolveSpec(method=args.method, iters=args.iters,
+                              tol=args.tol, max_iters=args.max_iters,
+                              fused=fused))
+    x, norms = plan(b)
     rel = float(np.linalg.norm(x - x_true) / np.linalg.norm(x_true))
-    info = eng.last_solve_info
     out = {
         "matrix": args.matrix, "n": m.shape[0], "nnz": m.nnz,
         "method": args.method, "precond": args.precond,
         "iters": args.iters, "mode": eng.mode,
-        "substrate": info.get("substrate", "reference"),
-        "fused": bool(info.get("fused", False)),
+        "substrate": plan.info["substrate"],
+        "fused": bool(plan.spec.fused),
         "final_residual": float(norms[-1] if norms.ndim == 1 else norms[-1, 0]),
         "rel_error": rel,
     }
-    if args.method == "pcg_tol":
-        out["tol"] = args.tol
-        out["iters_run"] = int(np.asarray(info["iters"]))
+    if plan.spec.tol is not None:
+        out["tol"] = plan.spec.tol
+        out["iters_run"] = int(np.asarray(plan.last_iters))
     print(json.dumps(out, indent=1))
     return 0
 

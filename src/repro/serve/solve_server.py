@@ -4,28 +4,38 @@ Real solver traffic (circuit simulation steps, traffic assignment, any
 implicit time-stepper) repeatedly solves the *same* operator against many
 right-hand sides.  ``SolveServer`` is the serving-side half of that
 bargain: clients ``submit`` individual (n,) RHS; each ``step`` coalesces up
-to ``max_batch`` pending requests into one stacked (k, n) batched
-``AzulEngine.solve`` -- one matrix stream, one distributed program, k
-answers -- and returns per-request results.
+to ``max_batch`` pending requests into one stacked (k, n) batched solve --
+one matrix stream, one distributed program, k answers -- and returns
+per-request results.
 
 Batch shapes are bucketed to powers of two (capped at ``max_batch``) so the
-jit cache stays small: a burst of 5 requests runs as a k=8 batch with three
-zero RHS riding along (a zero RHS converges instantly and costs only the
-already-amortized vector math).
+plan cache stays small: a burst of 5 requests runs as a k=8 batch with
+three zero RHS riding along (a zero RHS converges instantly and costs only
+the already-amortized vector math).
 
-Tolerance mode (``method="pcg_tol"``): the batched solve runs the fused
-while_loop solver to a relative-residual target instead of a fixed
-iteration count -- the paper's actual serving contract ("solve to 1e-8"),
-where a zero pad RHS is *free* (its active mask drops immediately) and each
-outcome reports the per-request iteration count the solver actually spent
-on it (read from ``engine.last_solve_info``).
+Plan/execute serving: the server holds ONE compiled
+:class:`repro.core.plan.SolvePlan` per batch bucket -- method/precond/fused
+dispatch resolves once, at plan construction, never per ``step``.  The
+steady state is compile-free by contract: executing a bucket's plan again
+must not retrace, and ``step`` asserts it (``plan.traces == 1``).
+
+Tolerance mode (a spec with a tolerance method, e.g. ``method="pcg_tol"``):
+the batched solve runs the fused while_loop solver to a relative-residual
+target instead of a fixed iteration count -- the paper's actual serving
+contract ("solve to 1e-8"), where a zero pad RHS is *free* (its active mask
+drops immediately) and each outcome reports the per-request iteration count
+plus the bounded per-request convergence trace the solver carried.
 """
 
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import NamedTuple
 
 import numpy as np
+
+from ..core.plan import SolveSpec
+from ..core.registry import get_solver
 
 __all__ = ["SolveRequest", "SolveOutcome", "SolveServer"]
 
@@ -38,42 +48,49 @@ class SolveRequest(NamedTuple):
 class SolveOutcome(NamedTuple):
     req_id: int
     x: np.ndarray                 # (n,) solution
-    res_norms: np.ndarray         # this request's residual trace (final-only
-                                  # for tolerance mode)
+    res_norms: np.ndarray         # this request's residual trace (bounded
+                                  # max_iters ring for tolerance mode)
     batch_size: int               # how many RHS shared the solve
     iters: int = -1               # iterations spent on THIS request
                                   # (tolerance mode; -1 = fixed-iter solve)
 
 
 class SolveServer:
-    """Coalesce single-RHS solve requests into batched engine solves.
+    """Coalesce single-RHS solve requests into batched plan executions.
 
     Parameters
     ----------
     engine : AzulEngine        the (already-built) solver engine
     max_batch : int            coalescing window: max RHS per batched solve
-    method / iters :           forwarded to ``engine.solve``
-    tol / max_iters :          tolerance-mode knobs (``method="pcg_tol"``):
-                               relative residual target and iteration cap
-                               (``max_iters`` defaults to ``iters``)
+    spec : SolveSpec | None    the solve configuration; per-bucket plans are
+                               built from it with ``batch`` filled in
+    method / iters / tol / max_iters :
+                               legacy knobs assembled into a spec when
+                               ``spec`` is not given (``max_iters`` defaults
+                               to ``iters`` for tolerance methods)
     """
 
     def __init__(self, engine, max_batch: int = 16, method: str = "pcg",
                  iters: int = 200, tol: float = 1e-8,
-                 max_iters: int | None = None):
+                 max_iters: int | None = None,
+                 spec: SolveSpec | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.engine = engine
         self.max_batch = max_batch
-        self.method = method
-        self.iters = iters
-        self.tol = tol
-        self.max_iters = iters if max_iters is None else max_iters
+        if spec is None:
+            spec = SolveSpec(method=method, iters=iters, tol=tol,
+                             max_iters=max_iters)
+        self.spec = spec
+        self.method = spec.method                    # legacy attribute
+        self._tolerance = get_solver(spec.method).tolerance
+        self._plans: dict[int, object] = {}          # bucket k -> SolvePlan
         self._queue: list[SolveRequest] = []
         self._next_id = 0
         # serving-side counters (fill ratio tells you if max_batch is sized
-        # to the actual arrival rate)
-        self.stats = {"requests": 0, "batches": 0, "padded_rhs": 0}
+        # to the actual arrival rate; plans counts the bucket plans built)
+        self.stats = {"requests": 0, "batches": 0, "padded_rhs": 0,
+                      "plans": 0}
 
     # -- client side --------------------------------------------------------
 
@@ -99,6 +116,17 @@ class SolveServer:
             p *= 2
         return min(p, self.max_batch)
 
+    def plan_for(self, k_pad: int):
+        """The compiled per-bucket plan (built on first use, reused for
+        every later batch of the same bucket -- this is where dispatch
+        resolves, NOT per step)."""
+        plan = self._plans.get(k_pad)
+        if plan is None:
+            plan = self.engine.plan(replace(self.spec, batch=k_pad))
+            self._plans[k_pad] = plan
+            self.stats["plans"] += 1
+        return plan
+
     def step(self) -> dict[int, SolveOutcome]:
         """Run ONE coalesced batched solve over up to max_batch pending
         requests; returns {req_id: outcome}.  No-op ({}) when idle."""
@@ -110,17 +138,22 @@ class SolveServer:
         batch = np.zeros((k_pad, self.engine.n))
         for i, req in enumerate(take):
             batch[i] = req.b
-        x, norms = self.engine.solve(
-            batch, method=self.method, iters=self.iters,
-            tol=self.tol, max_iters=self.max_iters,
-        )
+        plan = self.plan_for(k_pad)
+        x, norms = plan(batch)
+        # steady-state contract: an already-built bucket plan never
+        # retraces -- one trace per (spec, bucket), however many steps run.
+        # A violation is a real serving bug (per-step recompiles), so fail
+        # loudly (RuntimeError: survives python -O, unlike assert).
+        if plan.traces > 1:
+            raise RuntimeError(
+                f"bucket k={k_pad} plan retraced ({plan.traces} traces): "
+                "the compile-free steady-state contract broke"
+            )
         self.stats["batches"] += 1
         self.stats["padded_rhs"] += k_pad - k
         its = np.full(k_pad, -1, np.int64)
-        if self.method == "pcg_tol":
-            its = np.atleast_1d(
-                np.asarray(self.engine.last_solve_info["iters"])
-            ).astype(np.int64)
+        if self._tolerance:
+            its = np.atleast_1d(np.asarray(plan.last_iters)).astype(np.int64)
         # norms: (iters + 1, k_pad) -- hand each request its own column
         return {
             req.req_id: SolveOutcome(req.req_id, np.asarray(x[i]),

@@ -1,0 +1,124 @@
+"""Public-API surface snapshot for ``repro.core`` and ``repro.serve``.
+
+The plan/execute redesign froze the solve surface: specs in, compiled
+plans out, new methods/preconditioners through the registry.  This test
+pins the exported names and the parameter lists of the public callables so
+*any* future drift -- a renamed export, a widened ``solve()`` signature, a
+new positional parameter -- fails review explicitly instead of slipping
+through.  When a change is deliberate, update this snapshot AND the README
+API/migration tables in the same commit.
+
+Runs in the ordinary fast test matrix (no markers), so every CI job
+enforces it.
+"""
+
+import inspect
+
+import repro.core as core
+import repro.serve as serve
+
+# -- exported names -----------------------------------------------------------
+
+CORE_EXPORTS = {
+    # formats
+    "CSR", "ELL", "BCSR",
+    # engine + plan/execute API
+    "AzulEngine", "SolveSpec", "SolvePlan", "PlanCache",
+    # registry
+    "SolverDef", "PrecondDef",
+    "register_solver", "register_precond",
+    "get_solver", "get_precond",
+    "solver_names", "precond_names",
+}
+
+SERVE_EXPORTS = {"generate", "SlotServer", "SolveServer", "SolveOutcome",
+                 "SolveRequest"}
+
+# -- callable signatures (parameter name tuples) ------------------------------
+
+SIGNATURES = {
+    "core.AzulEngine.__init__": (
+        "self", "a", "mesh", "mode", "row_axes", "col_axes", "precond",
+        "balance", "dtype", "row_pad", "width_pad", "fused",
+    ),
+    "core.AzulEngine.plan": ("self", "spec", "kwargs"),
+    "core.AzulEngine.solve": (                    # deprecated shim, frozen
+        "self", "b", "method", "iters", "x0", "fused", "tol", "max_iters",
+    ),
+    "core.AzulEngine.spmv": ("self", "x"),
+    "core.AzulEngine.substrate_kind": ("self", "method", "fused"),
+    "core.AzulEngine.build_sptrsv": ("self", "l_csr"),
+    "core.AzulEngine.to_device_vec": ("self", "v"),
+    "core.AzulEngine.from_device_vec": ("self", "v"),
+    "core.SolveSpec.__init__": (
+        "self", "method", "precond", "iters", "tol", "max_iters", "batch",
+        "fused",
+    ),
+    "core.SolvePlan.__call__": ("self", "b", "x0"),
+    "core.PlanCache.get": ("self", "spec", "build", "env"),
+    "core.register_solver": ("sdef",),
+    "core.register_precond": ("pdef",),
+    "core.get_solver": ("name",),
+    "core.get_precond": ("name",),
+    "serve.SolveServer.__init__": (
+        "self", "engine", "max_batch", "method", "iters", "tol",
+        "max_iters", "spec",
+    ),
+    "serve.SolveServer.submit": ("self", "b"),
+    "serve.SolveServer.step": ("self",),
+    "serve.SolveServer.drain": ("self",),
+    "serve.SolveServer.plan_for": ("self", "k_pad"),
+}
+
+_MODULES = {"core": core, "serve": serve}
+
+
+def _resolve(path: str):
+    parts = path.split(".")
+    obj = _MODULES[parts[0]]
+    for p in parts[1:]:
+        obj = getattr(obj, p)
+    return obj
+
+
+def test_core_exports_exact():
+    assert set(core.__all__) == CORE_EXPORTS
+    for name in CORE_EXPORTS:
+        assert hasattr(core, name), f"repro.core.{name} missing"
+
+
+def test_serve_exports_present():
+    for name in SERVE_EXPORTS:
+        assert hasattr(serve, name), f"repro.serve.{name} missing"
+
+
+def test_public_signatures_frozen():
+    drift = []
+    for path, want in SIGNATURES.items():
+        got = tuple(inspect.signature(_resolve(path)).parameters)
+        if got != want:
+            drift.append(f"{path}: {want} -> {got}")
+    assert not drift, "public API signature drift:\n" + "\n".join(drift)
+
+
+def test_builtin_registry_population():
+    assert {"cg", "pcg", "pcg_pipe", "pcg_tol", "jacobi"} <= set(
+        core.solver_names()
+    )
+    assert {"identity", "jacobi", "block_ic0"} <= set(core.precond_names())
+    # capability metadata the engine dispatch relies on
+    assert core.get_solver("pcg_tol").tolerance is True
+    assert core.get_solver("pcg").tolerance is False
+    assert core.get_precond("none").name == "identity"   # alias resolution
+    assert core.get_precond("block_ic0").fused_local_kind == "fused_ic0"
+
+
+def test_solvespec_is_frozen_and_hashable():
+    spec = core.SolveSpec(method="pcg", iters=10)
+    assert spec == core.SolveSpec(method="pcg", iters=10)
+    assert hash(spec) == hash(core.SolveSpec(method="pcg", iters=10))
+    try:
+        spec.iters = 11
+        raise AssertionError("SolveSpec must be frozen")
+    except AttributeError:
+        pass

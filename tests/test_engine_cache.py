@@ -6,6 +6,12 @@ could silently hit the stale compiled solve of a dead one.  The key is now
 a content fingerprint: equal content hits, different content misses, and
 address reuse cannot alias.  The mesh-dependent checks run in a subprocess
 with forced host devices (the repo's ``dist`` convention).
+
+Solve-program caching is spec-keyed (``engine.plans``, a ``PlanCache`` of
+canonical ``SolveSpec`` -> compiled ``SolvePlan``): the former hand-rolled
+(method, iters, precond, batched, fused, tol, max_iters) tuples -- whose
+tol normalization PR 3 had to special-case -- are replaced by spec
+canonicalization, asserted below on the distributed engine.
 """
 
 import os
@@ -70,22 +76,40 @@ assert len(eng._trsv_cache) == 2
 assert np.allclose(s2(b), dense_ref(5.0), atol=1e-8), "second solve"
 assert np.allclose(s1(b), dense_ref(2.0), atol=1e-8), "first still valid"
 
-# solve cache keys carry the resolved fused flag; tol/max_iters are
-# normalized to None for fixed-iteration methods (only pcg_tol reads
-# them), so varying tol never recompiles a bit-identical pcg program
-x1, _ = eng.solve(b, method="pcg", iters=30, fused=True)
-x2, _ = eng.solve(b, method="pcg", iters=30, fused=False)
-n_compiled = len(eng._compiled)
-eng.solve(b, method="pcg", iters=30, fused=True, tol=1e-3)
-assert len(eng._compiled) == n_compiled, "tol must not recompile pcg"
-assert ("pcg", 30, "jacobi", False, True, None, None) in eng._compiled
-assert ("pcg", 30, "jacobi", False, False, None, None) in eng._compiled
-assert np.allclose(x1, x2, atol=1e-9), "fused == unfused dist"
+# solve plans are keyed by canonical SolveSpec: the resolved fused bool
+# participates, and tol/max_iters are normalized to None for fixed-
+# iteration methods (only tolerance solvers read them), so varying tol
+# never lowers/recompiles a bit-identical pcg plan
+from repro.core import SolveSpec
 
-# tolerance-mode keys are distinct per (tol, max_iters)
-xt, _ = eng.solve(b, method="pcg_tol", tol=1e-9, max_iters=60, fused=True)
-assert ("pcg_tol", 200, "jacobi", False, True, 1e-9, 60) in eng._compiled
+p1 = eng.plan(SolveSpec(method="pcg", iters=30, fused=True))
+p2 = eng.plan(SolveSpec(method="pcg", iters=30, fused=False))
+n_plans = len(eng.plans)
+p3 = eng.plan(SolveSpec(method="pcg", iters=30, fused=True, tol=1e-3))
+assert p3 is p1, "tol must not recompile pcg (spec canonicalization)"
+assert len(eng.plans) == n_plans, "tol change may not add a plan"
+assert p1.spec.tol is None and p1.spec.max_iters is None
+assert SolveSpec(method="pcg", precond="jacobi", iters=30,
+                 fused=True) in eng.plans
+assert SolveSpec(method="pcg", precond="jacobi", iters=30,
+                 fused=False) in eng.plans
+x1, _ = p1(b)
+x2, _ = p2(b)
+assert np.allclose(x1, x2, atol=1e-9), "fused == unfused dist"
+# the deprecated shim hits the SAME cached plan, bit-identically
+xs, _ = eng.solve(b, method="pcg", iters=30, fused=True, tol=0.5)
+assert np.array_equal(xs, x1), "shim must reuse the cached plan"
+assert len(eng.plans) == n_plans
+
+# tolerance-mode specs are distinct per (tol, max_iters)
+pt = eng.plan(SolveSpec(method="pcg_tol", tol=1e-9, max_iters=60, fused=True))
+assert pt.spec.tol == 1e-9 and pt.spec.max_iters == 60
+assert len(eng.plans) == n_plans + 1
+assert eng.plan(SolveSpec(method="pcg_tol", tol=1e-9, max_iters=60,
+                          fused=True)) is pt
+xt, _ = pt(b)
 assert np.allclose(xt, x2, atol=1e-7), "pcg_tol dist agrees"
+assert pt.traces == 1 and pt.executions == 1
 print("CACHE_OK")
 """
 

@@ -1,0 +1,276 @@
+"""Plan/execute API: spec canonicalization, PlanCache hit/miss, the
+zero-recompile execution contract (including SolveServer steady state),
+the deprecated ``engine.solve(**knobs)`` shim, the bounded tolerance
+convergence trace, and registry extensibility."""
+
+import warnings
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (
+    AzulEngine,
+    SolveSpec,
+    SolverDef,
+    register_solver,
+    solver_names,
+    precond_names,
+)
+from repro.core.plan import _reset_deprecation_warnings
+from repro.core.registry import unregister_solver
+from repro.data.matrices import laplacian_2d
+from repro.serve import SolveServer
+
+
+def _setup(n=10, precond="jacobi"):
+    m = laplacian_2d(n)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    eng = AzulEngine(m, precond=precond, dtype=np.float64)
+    b = a @ np.random.default_rng(0).standard_normal(m.shape[0])
+    return m, a, eng, b
+
+
+# -- PlanCache: spec-keyed hit/miss ------------------------------------------
+
+
+def test_plan_cache_spec_keyed_hit_miss():
+    _, _, eng, b = _setup()
+    p1 = eng.plan(SolveSpec(method="pcg", iters=30))
+    assert eng.plans.misses == 1 and eng.plans.hits == 0
+    # equal configuration -> the SAME plan object, however it is spelled
+    assert eng.plan(SolveSpec(method="pcg", iters=30)) is p1
+    assert eng.plan(method="pcg", iters=30) is p1
+    assert eng.plan(SolveSpec(method="pcg", iters=30, precond="jacobi")) is p1
+    assert eng.plans.hits == 3
+    # different configuration -> a different plan
+    p2 = eng.plan(SolveSpec(method="pcg", iters=31))
+    assert p2 is not p1
+    p3 = eng.plan(SolveSpec(method="cg", iters=30))
+    assert p3 is not p1
+    assert len(eng.plans) == 3
+    # canonical spec membership
+    assert SolveSpec(method="pcg", precond="jacobi", iters=30,
+                     fused=True) in eng.plans
+
+
+def test_tol_changes_never_recompile_fixed_iteration_plans():
+    """The PR 3 cache-key special case, now structural: canonicalization
+    nulls tol/max_iters on fixed-iteration methods, so a tol change can
+    never lower (or recompile) a bit-identical pcg plan."""
+    _, _, eng, b = _setup()
+    p = eng.plan(SolveSpec(method="pcg", iters=25, tol=1e-3, max_iters=99))
+    assert p.spec.tol is None and p.spec.max_iters is None
+    for tol in (1e-2, 1e-8, 0.5):
+        assert eng.plan(SolveSpec(method="pcg", iters=25, tol=tol)) is p
+    assert len(eng.plans) == 1
+    # tolerance methods DO key on (tol, max_iters) -- distinct programs
+    t1 = eng.plan(SolveSpec(method="pcg_tol", tol=1e-6, max_iters=50))
+    t2 = eng.plan(SolveSpec(method="pcg_tol", tol=1e-8, max_iters=50))
+    t3 = eng.plan(SolveSpec(method="pcg_tol", tol=1e-6, max_iters=60))
+    assert len({id(t1), id(t2), id(t3)}) == 3
+    # ... and iters folds into max_iters (one budget field)
+    t4 = eng.plan(SolveSpec(method="pcg_tol", tol=1e-6, iters=50))
+    assert t4 is t1
+
+
+def test_spec_validation():
+    _, _, eng, _ = _setup(precond="jacobi")
+    with pytest.raises(ValueError, match="unknown solver"):
+        eng.plan(SolveSpec(method="sor"))
+    with pytest.raises(ValueError, match="engine precond"):
+        eng.plan(SolveSpec(method="pcg", precond="block_ic0"))
+    with pytest.raises(ValueError, match="batch"):
+        eng.plan(SolveSpec(method="pcg", batch=0))
+    with pytest.raises(ValueError, match="fused"):
+        eng.plan(SolveSpec(method="pcg", fused="maybe"))
+    # "none" aliases to the registry's canonical "identity"
+    m = laplacian_2d(8)
+    e2 = AzulEngine(m, precond="none", dtype=np.float64)
+    assert e2.plan(SolveSpec(method="pcg")).spec.precond == "identity"
+
+
+# -- the zero-recompile contract ---------------------------------------------
+
+
+def test_one_trace_per_plan_across_100_executions():
+    _, _, eng, b = _setup()
+    plan = eng.plan(SolveSpec(method="pcg", iters=5))
+    x0, n0 = plan(b)
+    for _ in range(99):
+        x, norms = plan(b)
+    assert plan.executions == 100
+    assert plan.traces == 1, "plan retraced -- the compile-once contract broke"
+    np.testing.assert_array_equal(x, x0)
+
+
+def test_plans_are_shape_specialized():
+    _, _, eng, b = _setup()
+    plan = eng.plan(SolveSpec(method="pcg", iters=5, batch=4))
+    with pytest.raises(ValueError, match="shape-specialized"):
+        plan(b)                                  # (n,) into a batch-4 plan
+    with pytest.raises(ValueError, match="shape-specialized"):
+        plan(np.stack([b, b]))                   # (2, n) into a batch-4 plan
+    x, norms = plan(np.stack([b] * 4))
+    assert x.shape == (4, eng.n) and norms.shape == (6, 4)
+    # shared (n,) x0 broadcasts over the batch
+    x2, _ = plan(np.stack([b] * 4), x0=np.zeros(eng.n))
+    np.testing.assert_array_equal(x2, x)
+
+
+def test_solve_server_steady_state_zero_recompiles():
+    """100 server steps across two batch buckets: one plan per bucket,
+    each traced exactly once -- dispatch resolves at plan construction,
+    never per step."""
+    _, a, eng, _ = _setup()
+    srv = SolveServer(eng, max_batch=4,
+                      spec=SolveSpec(method="pcg", iters=5))
+    rng = np.random.default_rng(3)
+    xt = rng.standard_normal((100, eng.n))
+    done = {}
+    for i in range(80):                      # bucket k=1, 80 steps
+        srv.submit(a @ xt[i])
+        done.update(srv.step())
+    for i in range(80, 100, 4):              # bucket k=4, 5 steps
+        for j in range(4):
+            srv.submit(a @ xt[i + j])
+        done.update(srv.step())
+    assert len(done) == 100
+    assert srv.stats["batches"] == 85
+    assert srv.stats["plans"] == 2           # one plan per bucket, total
+    for k_pad, plan in srv._plans.items():
+        assert plan.traces == 1, f"bucket {k_pad} retraced"
+    assert srv._plans[1].executions == 80
+    assert srv._plans[4].executions == 5
+
+
+def test_solve_server_tolerance_outcomes_carry_trace():
+    _, a, eng, _ = _setup()
+    srv = SolveServer(eng, max_batch=4,
+                      spec=SolveSpec(method="pcg_tol", tol=1e-9, max_iters=60))
+    rng = np.random.default_rng(4)
+    xt = rng.standard_normal((3, eng.n))
+    ids = [srv.submit(a @ xt[i]) for i in range(3)]
+    done = srv.drain()
+    # the batch loop runs until EVERY RHS converges; the ring tail-fills
+    # from that global stopping iteration
+    kmax = max(done[rid].iters for rid in ids)
+    for i, rid in enumerate(ids):
+        out = done[rid]
+        np.testing.assert_allclose(out.x, xt[i], atol=1e-6)
+        assert 0 < out.iters <= 60
+        # the bounded ring: full (max_iters + 1,) trace, tail-filled
+        assert out.res_norms.shape == (61,)
+        assert np.all(out.res_norms[kmax:] == out.res_norms[kmax])
+
+
+# -- deprecation shims --------------------------------------------------------
+
+
+def test_solve_shim_warns_once_and_is_bit_identical():
+    _, _, eng, b = _setup()
+    plan = eng.plan(SolveSpec(method="pcg_tol", tol=1e-8, max_iters=80))
+    xp, np_ = plan(b)
+    _reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        xs, ns = eng.solve(b, method="pcg_tol", tol=1e-8, max_iters=80)
+        xs2, ns2 = eng.solve(b, method="pcg_tol", tol=1e-8, max_iters=80)
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1, "legacy solve must warn exactly once per process"
+    assert "SolveSpec" in str(deps[0].message)
+    # bit-identical: the shim hits the same cached plan and program
+    np.testing.assert_array_equal(xs, xp)
+    np.testing.assert_array_equal(ns, np_)
+    np.testing.assert_array_equal(xs2, xp)
+    assert len(eng.plans) == 1
+
+
+def test_solve_shim_batched_routes_through_batch_plan():
+    _, a, eng, _ = _setup()
+    rng = np.random.default_rng(5)
+    B = rng.standard_normal((3, eng.n)) @ a.T
+    xs, ns = eng.solve(B, method="pcg", iters=20)
+    # membership takes the CANONICAL spec (precond resolved, fused bool)
+    canonical = SolveSpec(method="pcg", precond="jacobi", iters=20,
+                          batch=3, fused=True)
+    assert canonical in eng.plans
+    plan = eng.plan(SolveSpec(method="pcg", iters=20, batch=3))
+    assert plan.executions == 1              # the shim's execution
+    xp, npn = plan(B)
+    np.testing.assert_array_equal(xs, xp)
+
+
+# -- bounded tolerance trace (plan output) -----------------------------------
+
+
+def test_pcg_tol_plan_returns_bounded_trace():
+    _, _, eng, b = _setup()
+    plan = eng.plan(SolveSpec(method="pcg_tol", tol=1e-9, max_iters=70))
+    x, norms = plan(b)
+    it = int(plan.last_iters)
+    assert 0 < it < 70
+    assert norms.shape == (71,)
+    assert norms[0] == pytest.approx(np.linalg.norm(b))
+    # real trace decreases to tolerance; tail is the final residual
+    assert norms[it] < 1e-8 * np.linalg.norm(b)
+    assert np.all(norms[it:] == norms[it])
+    assert norms[-1] == norms[it]
+
+
+def test_pcg_tol_batched_trace_per_rhs():
+    _, a, eng, _ = _setup()
+    rng = np.random.default_rng(7)
+    B = np.stack([a @ rng.standard_normal(eng.n), np.zeros(eng.n)])
+    plan = eng.plan(SolveSpec(method="pcg_tol", tol=1e-9, max_iters=80,
+                              batch=2))
+    x, norms = plan(B)
+    assert norms.shape == (81, 2)
+    its = np.asarray(plan.last_iters)
+    assert its[1] == 0 and 0 < its[0] < 80
+    assert np.all(norms[:, 1] == 0.0)        # zero RHS: zero residual ring
+
+
+# -- registry extensibility ---------------------------------------------------
+
+
+def test_registry_lists_builtins():
+    assert {"cg", "pcg", "pcg_pipe", "pcg_tol", "jacobi"} <= set(solver_names())
+    assert {"identity", "jacobi", "block_ic0"} <= set(precond_names())
+
+
+def test_register_custom_solver_runs_through_plan():
+    """Adding a method is a registry entry + the iteration it runs: the
+    engine lowers it through the same generic path (no engine edits)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core.solvers import SolveResult
+
+    def run_richardson(ctx, b, x0):
+        omega = 0.8
+        r0 = b - ctx.matvec(x0)
+        n0 = jnp.sqrt(jnp.sum(r0 * r0))
+
+        def step(x, _):
+            r = b - ctx.matvec(x)
+            x = x + omega * ctx.psolve(r)
+            return x, jnp.sqrt(jnp.sum(r * r))
+
+        x, norms = lax.scan(step, x0, None, length=ctx.iters)
+        return SolveResult(x, jnp.concatenate([n0[None], norms]),
+                           jnp.full(b.shape[:-1], ctx.iters, jnp.int32))
+
+    register_solver(SolverDef(name="_test_richardson", run=run_richardson))
+    try:
+        _, _, eng, b = _setup()
+        plan = eng.plan(SolveSpec(method="_test_richardson", iters=300))
+        assert plan.info["substrate"] == "reference"  # registers no fused caps
+        x, norms = plan(b)
+        assert norms.shape == (301,)
+        assert norms[-1] < 1e-6 * norms[0]
+        assert plan.traces == 1
+    finally:
+        unregister_solver("_test_richardson")
+    with pytest.raises(ValueError, match="unknown solver"):
+        eng.plan(SolveSpec(method="_test_richardson"))
