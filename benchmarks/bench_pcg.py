@@ -41,6 +41,9 @@ from repro.core.plan import SolveSpec
 from repro.core.substrate import modeled_ic0_traffic, modeled_vector_traffic
 from repro.data.matrices import suite
 
+NOC_GRIDS_2D = ((2, 2), (4, 1), (4, 2))
+NOC_PARTS_1D = (4, 8)
+
 _SPARK = "▁▂▃▄▅▆▇█"
 
 
@@ -271,23 +274,83 @@ def run_tol_solves(
     return rows, payload
 
 
-def collect_json(fused_payload, batch_payload, tol_payload=None) -> dict:
+def run_noc_plans(
+    matrices=("lap2d_32", "banded_1k", "rspd_1k"),
+    reorders=("none", "rcm"),
+) -> tuple[list[tuple[str, float, str]], list[dict]]:
+    """Modeled NoC traffic of the compiled communication plans.
+
+    Pure host-side compilation (NumPy partition + comm-plan compile, no
+    devices needed -- exactly what the engine build runs), so the record is
+    deterministic and the regression gate compares it exactly: the plan
+    choice (halo vs dense fallback), the halo width, and the modeled
+    bytes/iteration of both layouts per (matrix, reorder, mode, grid).  A
+    config that used to cut a halo plan and now falls back to dense is a
+    traffic regression the gate fails on."""
+    from repro.core.commplan import compile_comm_plan_1d, compile_comm_plan_2d
+    from repro.core.partition import (padded_layout_1d, permute_csr, plan_1d,
+                                      plan_2d, rcm_permutation)
+
+    rows, payload = [], []
+    mats = suite("small")
+    for name in matrices:
+        base = mats[name]
+        for reorder in reorders:
+            m = (permute_csr(base, rcm_permutation(base))
+                 if reorder == "rcm" else base)
+            plans = []
+            for (pr, pc) in NOC_GRIDS_2D:
+                p = plan_2d(m, pr, pc, dtype=np.float64, balance="nnz")
+                u = p.n_padded // (pr * pc)
+                cp = compile_comm_plan_2d(np.asarray(p.cols),
+                                          np.asarray(p.vals), pr, pc, u,
+                                          itemsize=8)
+                plans.append((f"{pr}x{pc}", "2d", cp))
+            for parts in NOC_PARTS_1D:
+                p = plan_1d(m, parts, balance="nnz", dtype=np.float64)
+                cols_pad, _ = padded_layout_1d(p)   # the engine's layout
+                cp = compile_comm_plan_1d(cols_pad, np.asarray(p.vals),
+                                          p.rows_per_tile, parts, itemsize=8)
+                plans.append((f"{parts}", "1d", cp))
+            for grid, mode, cp in plans:
+                model = cp.model()
+                payload.append({"matrix": name, "reorder": reorder,
+                                "mode": mode, "grid": grid, **model})
+                # these are traffic-model rows, not timings: the numeric
+                # CSV column carries 0.0 (no wall time was measured) and
+                # every modeled quantity lives, labeled, in the derived
+                # string -- nothing masquerades as microseconds
+                rows.append((
+                    f"noc_{name}_{reorder}_{mode}_{grid}", 0.0,
+                    f"plan={model['plan']} halo_width={model['halo_width']} "
+                    f"bytes_per_iter_halo={model['bytes_per_iter_halo']} "
+                    f"bytes_per_iter_dense={model['bytes_per_iter_dense']} "
+                    f"reduction={model['reduction']}x",
+                ))
+    return rows, payload
+
+
+def collect_json(fused_payload, batch_payload, tol_payload=None,
+                 noc_payload=None) -> dict:
     """Assemble the machine-readable perf-trajectory record (BENCH_pcg.json
-    schema: see README "Performance").  v2 adds the tolerance-solve section
+    schema: see README "Performance").  v2 added the tolerance-solve section
     (fused-vs-reference iteration counts, the regression gate's exact-match
-    signal)."""
+    signal); v3 adds the comm-plan section (modeled NoC bytes/iteration,
+    halo-vs-dense plan choice per partition -- host-deterministic, gated
+    exactly)."""
     import jax
 
     from repro.kernels import ops
 
     return {
-        "schema": "bench_pcg/v2",
+        "schema": "bench_pcg/v3",
         "backend": jax.default_backend(),
         "kernel_mode": ops.backend_mode(),
         "x64": bool(jax.config.jax_enable_x64),
         "fused_vs_unfused": fused_payload,
         "batch_sweep": batch_payload,
         "tol_solves": tol_payload or [],
+        "noc_plans": noc_payload or [],
     }
 
 
@@ -310,7 +373,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     rows = [] if args.skip_convergence else run()
-    fused_payload, batch_payload, tol_payload = [], [], []
+    fused_payload, batch_payload, tol_payload, noc_payload = [], [], [], []
     if args.fused_compare or args.json:
         mats = tuple(s for s in args.matrices.split(",") if s)
         frows, fused_payload = run_fused_compare(iters=args.iters, matrices=mats)
@@ -319,6 +382,10 @@ def main(argv=None) -> int:
             matrices=tuple(m for m in mats if m in suite("small"))
         )
         rows += trows
+        nrows, noc_payload = run_noc_plans(
+            matrices=tuple(m for m in mats if m in suite("small"))
+        )
+        rows += nrows
     if args.batch_sizes:
         ks = [int(x) for x in args.batch_sizes.split(",")]
         brows, batch_payload = run_batch_sweep(ks, iters=args.iters)
@@ -331,7 +398,8 @@ def main(argv=None) -> int:
               f"({e['iters_fused']} iters): {e['trace_spark']}")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(collect_json(fused_payload, batch_payload, tol_payload),
+            json.dump(collect_json(fused_payload, batch_payload, tol_payload,
+                                   noc_payload),
                       f, indent=1)
         print(f"# wrote {args.json}")
     return 0

@@ -19,6 +19,13 @@ machines:
 * **Modeled traffic** (``modeled_traffic`` / ``modeled_ic0_traffic``):
   exact match -- the model only moves when someone changes the fusion
   itself, which should be a deliberate, baseline-updating act.
+* **Communication plans** (``noc_plans``): exact match on the plan choice,
+  halo width and modeled bytes/iteration per (matrix, reorder, mode,
+  grid).  The comm-plan compile is pure host NumPy, so any drift is a real
+  behaviour change; in particular a **dense fallback where a halo plan
+  previously applied** (halo -> dense) is flagged as a halo-plan
+  regression -- the partition/reordering stopped producing a halo sparse
+  enough to pay.
 * **Timings** (``us_per_iter*``): within ``--timing-ratio`` (default 10x)
   of baseline.  Interpret-mode CPU timings are noisy and machine-dependent;
   the generous ratio still catches order-of-magnitude regressions (an
@@ -135,6 +142,21 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0) -> Gate:
               EQUIV_TOL)
         g.timing(where, "us_per_iter_per_rhs", ce.get("us_per_iter_per_rhs"),
                  be.get("us_per_iter_per_rhs"))
+
+    for where, ce, be in g.section("noc_plans",
+                                   ("matrix", "reorder", "mode", "grid"),
+                                   cur.get("noc_plans", []),
+                                   base.get("noc_plans", [])):
+        g.checks += 1
+        if be.get("plan") == "halo" and ce.get("plan") == "dense":
+            g.fail(f"{where}: halo-plan regression -- dense fallback where "
+                   "a halo plan previously applied (the compiled pull "
+                   "schedule no longer beats the all-gather)")
+        else:
+            g.exact(where, "plan", ce.get("plan"), be.get("plan"))
+        for field in ("halo_width", "gather_words_halo", "gather_words_dense",
+                      "bytes_per_iter_halo", "bytes_per_iter_dense"):
+            g.exact(where, field, ce.get(field), be.get(field))
     return g
 
 
@@ -160,9 +182,9 @@ def main(argv=None) -> int:
         with open(args.current) as f:
             cur = json.load(f)
         problems = []
-        if cur.get("schema") != "bench_pcg/v2":
+        if cur.get("schema") != "bench_pcg/v3":
             problems.append(f"unexpected schema {cur.get('schema')!r}")
-        for section in ("fused_vs_unfused", "tol_solves"):
+        for section in ("fused_vs_unfused", "tol_solves", "noc_plans"):
             if not cur.get(section):
                 problems.append(f"section {section!r} is empty/missing")
         if problems:

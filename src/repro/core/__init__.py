@@ -1,6 +1,7 @@
 """The paper's primary contribution: the Azul sparse-solver engine in JAX.
 
 formats / partition / levels  -- static "task compiler" (host side)
+commplan                       -- structure-compiled halo pull schedules
 spops                          -- per-tile sparse math (jnp contracts)
 noc                            -- shard_map NoC: torus collectives, halos
 precond / solvers              -- Jacobi, block-Jacobi, IC(0); CG / PCG
@@ -15,6 +16,7 @@ as traffic demands.  New methods/preconditioners register through
 ``register_solver`` / ``register_precond``.
 """
 
+from .commplan import CommPlan
 from .formats import CSR, ELL, BCSR
 from .plan import PlanCache, SolvePlan, SolveSpec
 from .registry import (
@@ -33,6 +35,7 @@ __all__ = [
     "CSR",
     "ELL",
     "BCSR",
+    "CommPlan",
     "AzulEngine",
     "SolveSpec",
     "SolvePlan",

@@ -1,0 +1,213 @@
+"""Tile-graph communication plans: structure-compiled halo exchange.
+
+Azul's NoC traffic is driven by the *sparsity structure*: a PE pulls only
+the x words its stored nonzeros reference.  The engine's original
+distributed SpMV instead `all_gather`ed entire column blocks on every
+iteration, so NoC bytes scaled with the block size (n/pc) rather than with
+the halo.  This module is the host-side "CPU preprocessing" that closes
+that gap: given the stacked ELL tiles of a :class:`~repro.core.partition`
+plan, it compiles ONCE (pure NumPy) the per-tile halo structure --
+
+* which remote u-shards each tile actually references (owners of the
+  columns its stored nonzeros touch, padding masked out);
+* a static **pull schedule**: the union, over tiles, of shard offsets
+  ("deltas") along the gather axis.  SPMD uniformity makes the union the
+  schedule -- every tile executes the same bounded sequence of ``ppermute``
+  hops (one per delta), receiving shard ``(tile + delta) mod p``;
+* **halo-remapped column ids**: each tile's ELL columns rewritten to index
+  the compact halo buffer ``[own shard, pulled shards...]`` instead of the
+  fully gathered block, so the local gather kernel runs unchanged on the
+  smaller buffer;
+* the **modeled NoC bytes/iteration** of both layouts, and the
+  ``use_halo`` decision: the halo plan applies only when it moves strictly
+  fewer shard-words than the dense all-gather (otherwise the engine keeps
+  the dense collectives -- e.g. an unstructured matrix whose tiles
+  reference every remote shard).
+
+The engine (:mod:`repro.core.engine`) builds its ``shard_map`` SpMV
+closures on this schedule when a plan's ``layout`` resolves to ``"halo"``
+(see ``registry.resolve_layout``); bandwidth-reducing reordering
+(``partition.rcm_permutation``) and nnz-balanced splits shrink the halo
+before the plan is cut.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = [
+    "CommPlan",
+    "compile_comm_plan_1d",
+    "compile_comm_plan_2d",
+    "halo_remap_cols",
+]
+
+
+class CommPlan(NamedTuple):
+    """A compiled pull schedule for one partition (see module docstring).
+
+    ``deltas``      static shard offsets along the pull axis: hop ``m``
+                    ppermutes shard ``(tile + deltas[m]) mod pull_axis_size``
+                    onto every tile (empty = purely local gather).
+    ``cols_halo``   (tiles, rows_p, w) int32 ELL columns remapped into the
+                    halo buffer ``concat([own, pulled...])``; padding
+                    entries (vals == 0) map to 0.
+    ``pull_axis_size``  tiles along the gather axis (P for 1d, pr for 2d).
+    ``u``           words per exchanged vector shard.
+    ``fixed_words`` per-tile words/SpMV moved by the stages shared between
+                    the two layouts (2d: mesh transpose + output scatter).
+    ``use_halo``    True when the halo schedule moves strictly fewer
+                    gather-stage words than the dense all-gather.
+    """
+
+    mode: str                     # "1d" | "2d"
+    deltas: tuple                 # sorted hop offsets, each in [1, p-1]
+    cols_halo: np.ndarray         # (tiles, rows_p, w) int32
+    pull_axis_size: int
+    u: int
+    itemsize: int
+    fixed_words: int
+    use_halo: bool
+
+    @property
+    def halo_width(self) -> int:
+        return len(self.deltas)
+
+    @property
+    def gather_words_halo(self) -> int:
+        return self.halo_width * self.u
+
+    @property
+    def gather_words_dense(self) -> int:
+        return (self.pull_axis_size - 1) * self.u
+
+    def bytes_per_iter(self, layout: str) -> int:
+        """Modeled per-tile NoC bytes one SpMV moves under ``layout``
+        (per RHS; the O(1) psum'd scalars of the dots are excluded)."""
+        gather = (self.gather_words_halo if layout == "halo"
+                  else self.gather_words_dense)
+        return (self.fixed_words + gather) * self.itemsize
+
+    def model(self) -> dict:
+        """The benchmark/regression-gate record: plan choice, halo width,
+        and both layouts' modeled traffic (host-deterministic, so the CI
+        gate compares it exactly)."""
+        dense = self.bytes_per_iter("dense")
+        halo = self.bytes_per_iter("halo")
+        return {
+            "mode": self.mode,
+            "pull_axis_size": int(self.pull_axis_size),
+            "u": int(self.u),
+            "halo_width": int(self.halo_width),
+            "plan": "halo" if self.use_halo else "dense",
+            "gather_words_halo": int(self.gather_words_halo),
+            "gather_words_dense": int(self.gather_words_dense),
+            "bytes_per_iter_halo": int(halo),
+            "bytes_per_iter_dense": int(dense),
+            "reduction": round(dense / halo, 3) if halo else float(dense > 0),
+        }
+
+
+def _needed_shards(cols: np.ndarray, vals: np.ndarray, u: int,
+                   p: int) -> np.ndarray:
+    """(tiles, p) bool: does tile t's stored structure reference shard k?
+
+    Only *stored* nonzeros count (vals != 0 masks ELL padding): a padded
+    slot's column id is an artifact, not traffic.
+    """
+    tiles = cols.shape[0]
+    owner = np.clip(cols // max(u, 1), 0, p - 1)
+    need = np.zeros((tiles, p), dtype=bool)
+    live = vals != 0
+    for t in range(tiles):
+        need[t, np.unique(owner[t][live[t]])] = True
+    return need
+
+
+def halo_remap_cols(cols: np.ndarray, vals: np.ndarray, u: int, p: int,
+                    deltas: tuple, tile_coord: np.ndarray) -> np.ndarray:
+    """Rewrite per-tile ELL columns from block-local ids into halo-buffer
+    ids.  ``tile_coord[t]`` is tile t's coordinate along the pull axis; its
+    own shard sits at halo slot 0, the shard pulled with ``deltas[m]``
+    (i.e. shard ``(coord + deltas[m]) mod p``) at slot ``m + 1``."""
+    slot_of = np.zeros((len(tile_coord), p), np.int64)
+    for t, i in enumerate(tile_coord):
+        slot_of[t, i] = 0
+        for m, d in enumerate(deltas):
+            slot_of[t, (i + d) % p] = m + 1
+    shard = np.clip(cols // max(u, 1), 0, p - 1)
+    within = cols % max(u, 1)
+    out = slot_of[np.arange(cols.shape[0])[:, None, None], shard] * u + within
+    # padding entries carry no value; pin them to 0 so gathers stay in-bounds
+    return np.where(vals != 0, out, 0).astype(np.int32)
+
+
+def _deltas_from_need(need: np.ndarray, tile_coord: np.ndarray,
+                      p: int) -> tuple:
+    """Union pull schedule: offsets d such that SOME tile references the
+    shard d hops up its pull axis.  SPMD programs are uniform across tiles,
+    so the union is what every tile executes."""
+    ds: set = set()
+    for t, i in enumerate(tile_coord):
+        for k in np.flatnonzero(need[t]):
+            d = int((k - i) % p)
+            if d:
+                ds.add(d)
+    return tuple(sorted(ds))
+
+
+def _decide(deltas: tuple, p: int) -> bool:
+    """Halo pays only when it moves strictly fewer shard-words than the
+    dense all-gather; ties (and p == 1) keep the single fused collective."""
+    return 0 < p - 1 and len(deltas) < p - 1
+
+
+def compile_comm_plan_1d(cols_pad: np.ndarray, vals: np.ndarray, u: int,
+                         parts: int, itemsize: int = 4) -> CommPlan:
+    """Compile the pull schedule of a 1D row partition.
+
+    ``cols_pad``: (parts, rows_p, w) column ids in the *padded tile layout*
+    (tile t, local r) = t*u + r -- i.e. the engine's 1D device layout, so
+    the shard owner of a column is simply ``col // u``.
+    """
+    cols_pad = np.asarray(cols_pad)
+    vals = np.asarray(vals)
+    coord = np.arange(parts)
+    need = _needed_shards(cols_pad, vals, u, parts)
+    deltas = _deltas_from_need(need, coord, parts)
+    cols_halo = halo_remap_cols(cols_pad, vals, u, parts, deltas, coord)
+    return CommPlan("1d", deltas, cols_halo, parts, u, itemsize,
+                    fixed_words=0, use_halo=_decide(deltas, parts))
+
+
+def compile_comm_plan_2d(cols: np.ndarray, vals: np.ndarray, pr: int,
+                         pc: int, u: int, itemsize: int = 4) -> CommPlan:
+    """Compile the pull schedule of a 2D block partition.
+
+    ``cols``: (pr*pc, br, w) column ids *local to column block J* (the
+    partition plan's layout).  The dense path mesh-transposes x into L_col
+    and all-gathers block J's pr u-shards along the row axes; the halo
+    schedule pulls only the sub-shards tile (i, j)'s nonzeros reference --
+    sub-shard k of block J lives (post-transpose) on tile (k, j), so the
+    pull axis is the mesh row axis and tile (i, j)'s coordinate is i.
+
+    ``fixed_words`` carries the stages both layouts share: the u-shard
+    mesh transpose in and the (pc-1)/pc-scaled psum_scatter of the br
+    output partials.
+    """
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    tiles = pr * pc
+    coord = np.asarray([t // pc for t in range(tiles)])   # row index i
+    need = _needed_shards(cols, vals, u, pr)
+    deltas = _deltas_from_need(need, coord, pr)
+    cols_halo = halo_remap_cols(cols, vals, u, pr, deltas, coord)
+    # transpose: one u-shard hop -- but on degenerate grids (pr == 1 or
+    # pc == 1) the L_row -> L_col permutation is the identity and
+    # noc.mesh_transpose elides it, so it costs nothing on the NoC;
+    # scatter: ring reduce-scatter of br partials receives (pc-1) u-words
+    fixed = (u if (pr > 1 and pc > 1) else 0) + (pc - 1) * u
+    return CommPlan("2d", deltas, cols_halo, pr, u, itemsize,
+                    fixed_words=fixed, use_halo=_decide(deltas, pr))

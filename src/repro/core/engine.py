@@ -20,14 +20,30 @@ Layouts (2D mode, the default -- see partition.plan_2d):
   * vectors: (n_pad,) contiguously sharded over all mesh axes ("L_row":
     tile (i, j) holds subsegment q = i*pc + j of length u);
   * SpMV = mesh_transpose (L_row -> L_col, one u-shard ppermute)
-         + all_gather of x_J along the row axes (bc bytes in)
+         + x_J assembly along the row axes
          + local ELL kernel
          + psum_scatter of y partials along the col axis (br bytes).
     Per-tile traffic ~ n/pc, vs. the full-n all_gather of the 1D plan.
 
 1D mode is the bandwidth-hungry baseline (what a cache-less GPU run looks
-like): vectors fully sharded, SpMV all-gathers the whole x on every tile.
+like): vectors fully sharded, SpMV assembles the whole x on every tile.
 It exists so benchmarks can report the paper's "Azul vs. naive" delta.
+
+Communication plans (``layout`` knob): the x assembly step runs in one of
+two layouts.  ``"dense"`` is the blanket ``all_gather`` above.  ``"halo"``
+runs the structure-compiled pull schedule of :mod:`repro.core.commplan`:
+at engine build the host computes which remote u-shards each tile's stored
+nonzeros actually reference, takes the union as a bounded ``ppermute`` hop
+sequence, and rewrites the tile's ELL columns into the compact halo buffer
+-- NoC bytes then scale with the halo instead of with the block size
+(Azul's sparsity-driven NoC traffic).  ``"auto"`` (default) picks halo
+exactly when the compiled plan moves strictly fewer shard-words than the
+all_gather; unstructured matrices fall back to dense automatically.
+``reorder="rcm"`` composes a bandwidth-reducing reverse Cuthill-McKee
+permutation into the partition (vectors permute on embed / un-permute on
+extract) so halos shrink before the plan is cut, and ``balance="nnz"``
+now also applies to 2D row blocks (prefix-sum boundaries + a pad2g
+embedding; collectives stay shape-uniform).
 
 Batched multi-RHS: ``spmv``/``solve`` also take stacked (k, n) inputs.  The
 batch axis is *replicated* in the sharding spec (P(None, axes)) so matrix
@@ -65,10 +81,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import noc, registry
+from . import commplan, noc, registry
 from .formats import CSR, pad_to
 from .levels import build_schedule
-from .partition import plan_1d, plan_2d, tile_csr
+from .partition import (padded_layout_1d, permute_csr, plan_1d, plan_2d,
+                        rcm_permutation, tile_csr)
 from .plan import PlanCache, SolvePlan, SolveSpec, canonicalize, warn_deprecated
 from .precond import ic0 as host_ic0
 from .spops import spmm_ell_padded, spmv_ell_padded
@@ -173,6 +190,15 @@ class AzulEngine:
         it wherever the method/preconditioner support it; False forces the
         reference op-per-line path everywhere.  Per-solve override:
         ``solve(..., fused=...)``.
+    layout : "auto" | "halo" | "dense"
+        Distributed communication layout (see module docstring): "auto"
+        runs the compiled halo pull schedule wherever it moves fewer bytes
+        than the dense collectives; per-plan override via
+        ``SolveSpec(layout=...)``.
+    reorder : "none" | "rcm"
+        Bandwidth-reducing row/column reordering composed into the
+        partition (build-time: the matrix is repacked under the
+        permutation; vector I/O round-trips it transparently).
     """
 
     def __init__(
@@ -188,13 +214,31 @@ class AzulEngine:
         row_pad: int = 8,
         width_pad: int = 8,
         fused="auto",
+        layout: str = "auto",
+        reorder: str = "none",
     ):
         if a.shape[0] != a.shape[1]:
             raise ValueError("engine expects a square matrix")
         if fused not in ("auto", True, False):
             raise ValueError(f"fused must be 'auto', True or False, got {fused!r}")
+        if layout not in ("auto", "halo", "dense"):
+            raise ValueError(
+                f"layout must be 'auto', 'halo' or 'dense', got {layout!r}")
+        if reorder not in ("none", "rcm"):
+            raise ValueError(f"reorder must be 'none' or 'rcm', got {reorder!r}")
+        if layout == "halo" and mesh is None:
+            raise ValueError("layout='halo' needs a mesh (no NoC locally)")
         self.fused = fused
-        self.a = a
+        self.layout = layout
+        self.reorder = reorder
+        self._row_perm = None          # global row/col permutation (reorder)
+        self._row_iperm = None
+        if reorder == "rcm":
+            self._row_perm = rcm_permutation(a)
+            self._row_iperm = np.empty_like(self._row_perm)
+            self._row_iperm[self._row_perm] = np.arange(a.shape[0])
+            a = permute_csr(a, self._row_perm)
+        self.a = a                     # the engine's working (reordered) matrix
         self.n = a.shape[0]
         self.mesh = mesh
         self.mode = mode if mesh is not None else "local"
@@ -204,6 +248,9 @@ class AzulEngine:
         self.dtype = dtype
         self._row_pad = row_pad
         self._width_pad = width_pad
+        self._pad2g = None             # padded->global row map (1d / nnz-2d)
+        self.comm_plan = None          # compiled halo schedule (dist modes)
+        self._cols_halo_dev = None     # lazily device_put halo-remapped cols
         self._compiled: dict = {}      # spmv/spmm programs (vector ops)
         self._trsv_cache: dict = {}
         # spec-keyed compiled solve plans (see repro.core.plan): replaces
@@ -255,23 +302,39 @@ class AzulEngine:
     def _build_2d(self, balance):
         plan = plan_2d(
             self.a, self.pr, self.pc, width_pad=self._width_pad,
-            row_pad=self._row_pad, dtype=self.dtype,
+            row_pad=self._row_pad, dtype=self.dtype, balance=balance,
         )
         self.partition_plan = plan   # the static task-compiler output
         self.n_pad = plan.n_padded
         self.br = plan.block_rows
         self.bc = plan.block_cols
         self.u = self.n_pad // (self.pr * self.pc)
+        self._pad2g = plan.pad2g     # None for uniform row blocks
 
+        # the static pull schedule: which remote u-shards each tile's
+        # stored structure references (commplan module docstring)
+        self.comm_plan = commplan.compile_comm_plan_2d(
+            np.asarray(plan.cols), np.asarray(plan.vals), self.pr, self.pc,
+            self.u, itemsize=np.dtype(self.dtype).itemsize,
+        )
         self.cols = self._put(plan.cols, self._blk_spec)
         self.vals = self._put(plan.vals, self._blk_spec)
-        self._setup_diag_and_precond(
-            seg_ranges=[
+        if plan.pad2g is None:
+            segs = [
                 (min(q * self.u, self.n), min((q + 1) * self.u, self.n))
                 for q in range(self.pr * self.pc)
-            ],
-            pad2g=None,
-        )
+            ]
+        else:
+            # tile (i, j)'s u-shard sits inside row block i at local
+            # offset j*u; valid rows clip at the block's true extent
+            offs = plan.row_offsets
+            segs = []
+            for i in range(self.pr):
+                for j in range(self.pc):
+                    r0 = min(int(offs[i]) + j * self.u, int(offs[i + 1]))
+                    r1 = min(int(offs[i]) + (j + 1) * self.u, int(offs[i + 1]))
+                    segs.append((r0, r1))
+        self._setup_diag_and_precond(seg_ranges=segs, pad2g=plan.pad2g)
 
     def _build_1d(self, balance):
         parts = self.pr * self.pc
@@ -283,17 +346,15 @@ class AzulEngine:
         self.n_pad = plan.n_padded
         self.u = plan.rows_per_tile
 
-        # remap global cols -> padded tile layout (tile t, local r) = t*u + r
+        # global cols -> padded tile layout (tile t, local r) = t*u + r
         offs = plan.row_offsets
-        cols = np.asarray(plan.cols)
-        owner = np.clip(np.searchsorted(offs, cols, side="right") - 1, 0, parts - 1)
-        cols_pad = (owner * self.u + (cols - offs[owner])).astype(np.int32)
-        pad2g = np.full(self.n_pad, self.n, np.int64)
-        for t in range(parts):
-            cnt = int(offs[t + 1] - offs[t])
-            pad2g[t * self.u : t * self.u + cnt] = np.arange(offs[t], offs[t + 1])
+        cols_pad, pad2g = padded_layout_1d(plan)
         self._pad2g = pad2g
 
+        self.comm_plan = commplan.compile_comm_plan_1d(
+            cols_pad, np.asarray(plan.vals), self.u, parts,
+            itemsize=np.dtype(self.dtype).itemsize,
+        )
         self.cols = self._put(cols_pad, self._blk_spec)
         self.vals = self._put(plan.vals, self._blk_spec)
         segs = [(int(offs[t]), int(offs[t + 1])) for t in range(parts)]
@@ -397,10 +458,15 @@ class AzulEngine:
     def to_device_vec(self, v: np.ndarray) -> jnp.ndarray:
         """Embed a global (n,) -- or batched (k, n) -- vector into the padded
         device layout.  Batched vectors shard the trailing (vector) axis and
-        replicate the batch axis, so k RHS share one set of matrix blocks."""
+        replicate the batch axis, so k RHS share one set of matrix blocks.
+        With ``reorder`` active the engine's row permutation applies here
+        (and inverts in :meth:`from_device_vec`), so callers always speak
+        the original ordering."""
         v = np.asarray(v)
+        if self._row_perm is not None:
+            v = v[..., self._row_perm]
         out = np.zeros(v.shape[:-1] + (self.n_pad,), self.dtype)
-        if self.mode == "1d":
+        if self._pad2g is not None:
             valid = self._pad2g < self.n
             out[..., valid] = v[..., self._pad2g[valid]]
         else:
@@ -413,25 +479,36 @@ class AzulEngine:
     def from_device_vec(self, v: jnp.ndarray) -> np.ndarray:
         """Extract the global (n,) / (k, n) vector from the padded layout."""
         v = np.asarray(v)
-        if self.mode == "1d":
+        if self._pad2g is not None:
             out = np.zeros(v.shape[:-1] + (self.n,), self.dtype)
             valid = self._pad2g < self.n
             out[..., self._pad2g[valid]] = v[..., valid]
-            return out
-        return v[..., : self.n]
+        else:
+            out = v[..., : self.n]
+        if self._row_iperm is not None:
+            out = out[..., self._row_iperm]
+        return out
 
     # -- distributed program builders ---------------------------------------
 
-    def _mk_matvec(self) -> Callable:
+    def _mk_matvec(self, layout: str = "dense") -> Callable:
         """Returns mv(x_loc, cols_loc, vals_loc) -> y_loc with collectives
         inside; cols/vals arrive as the (1, rows, w) local shard.
 
         ``x_loc`` is the (u,) vector shard or the batch-stacked (k, u)
         shard; the batch axis rides every NoC hop intact (``vec_axis``)
         while the local compute switches to the multi-RHS ``spmm`` kernel,
-        amortizing the one matrix stream over all k vectors."""
+        amortizing the one matrix stream over all k vectors.
+
+        ``layout="dense"`` assembles x with a blanket ``all_gather``;
+        ``layout="halo"`` runs the compiled pull schedule instead (the
+        caller must pass the halo-remapped ``cols_halo`` blocks): the x
+        buffer is ``concat([own shard, pulled shards...])`` -- same values
+        in the gather slots the structure references, so results are
+        bit-identical to the dense layout while moving only halo bytes."""
         row_axes, col_axes, mode = self.row_axes, self.col_axes, self.mode
         col_axis = col_axes[0] if len(col_axes) == 1 else col_axes
+        deltas = self.comm_plan.deltas if layout == "halo" else ()
 
         def _local(cols_loc, vals_loc, xj):
             from ..kernels import ops
@@ -443,11 +520,20 @@ class AzulEngine:
                 return ops.ell_spmv(cols_loc[0], vals_loc[0], xj)
             return spmv_ell_padded(cols_loc[0], vals_loc[0], xj)
 
+        def _pull(x_loc, axes, va):
+            # the halo buffer: own shard at slot 0, then one bounded
+            # ppermute per scheduled hop (commplan's static pull order)
+            shards = [x_loc] + [noc.pull_shard(x_loc, axes, d) for d in deltas]
+            return jnp.concatenate(shards, axis=va)
+
         if mode == "2d":
             def mv(x_loc, cols_loc, vals_loc):
                 va = x_loc.ndim - 1
                 xc = noc.mesh_transpose(x_loc, row_axes, col_axes)
-                xj = noc.gather_along(xc, row_axes, vec_axis=va)  # (..., bc)
+                if layout == "halo":
+                    xj = _pull(xc, row_axes, va)          # (..., (1+H)u)
+                else:
+                    xj = noc.gather_along(xc, row_axes, vec_axis=va)  # (..., bc)
                 yp = _local(cols_loc, vals_loc, xj)               # (..., br)
                 return noc.reduce_scatter_along(yp, col_axis, vec_axis=va)
             return mv
@@ -456,7 +542,10 @@ class AzulEngine:
 
         def mv1d(x_loc, cols_loc, vals_loc):
             va = x_loc.ndim - 1
-            xg = noc.gather_along(x_loc, all_axes, vec_axis=va)  # (..., n_pad)
+            if layout == "halo":
+                xg = _pull(x_loc, all_axes, va)          # (..., (1+H)u)
+            else:
+                xg = noc.gather_along(x_loc, all_axes, vec_axis=va)  # (..., n_pad)
             return _local(cols_loc, vals_loc, xg)                # (..., u)
         return mv1d
 
@@ -494,24 +583,52 @@ class AzulEngine:
         """
         x = np.asarray(x)
         if self.mode == "local":
-            xd = jnp.asarray(x, self.dtype)
+            if self._row_perm is None:
+                xd = jnp.asarray(x, self.dtype)
+                if x.ndim == 2:
+                    return np.asarray(
+                        spmm_ell_padded(self.ell.cols, self.ell.vals, xd)[..., : self.n]
+                    )
+                from .spops import spmv_ell
+                return np.asarray(spmv_ell(self.ell, xd))
+            xd = self.to_device_vec(x)      # applies the row permutation
             if x.ndim == 2:
-                return np.asarray(
-                    spmm_ell_padded(self.ell.cols, self.ell.vals, xd)[..., : self.n]
-                )
-            from .spops import spmv_ell
-            return np.asarray(spmv_ell(self.ell, xd))
-        key = "spmm" if x.ndim == 2 else "spmv"
+                y = spmm_ell_padded(self.ell.cols, self.ell.vals, xd)
+            else:
+                y = spmv_ell_padded(self.ell.cols, self.ell.vals, xd)
+            return self.from_device_vec(y)
+        layout = self._op_layout()
+        key = ("spmm" if x.ndim == 2 else "spmv", layout)
         if key not in self._compiled:
-            mv = self._mk_matvec()
+            mv = self._mk_matvec(layout)
             vec = self._bvec_spec if x.ndim == 2 else self._vec_spec
             blk = self._blk_spec
             f = _shard_map(
                 mv, mesh=self.mesh, in_specs=(vec, blk, blk), out_specs=vec,
             )
             self._compiled[key] = jax.jit(f)
-        y = self._compiled[key](self.to_device_vec(x), self.cols, self.vals)
+        cols = self._halo_cols() if layout == "halo" else self.cols
+        y = self._compiled[key](self.to_device_vec(x), cols, self.vals)
         return self.from_device_vec(y)
+
+    def _halo_cols(self) -> jnp.ndarray:
+        """The halo-remapped column blocks, device-put on FIRST use: a
+        dense-only engine never pays the duplicate index footprint (the
+        halo cols are a full copy of the ELL column array)."""
+        if self._cols_halo_dev is None:
+            self._cols_halo_dev = self._put(self.comm_plan.cols_halo,
+                                            self._blk_spec)
+        return self._cols_halo_dev
+
+    def _op_layout(self) -> str:
+        """The communication layout the engine-level ops (``spmv``) run:
+        the engine knob resolved against the compiled comm plan ("auto" =
+        halo exactly where it moves fewer bytes)."""
+        if self.mode == "local" or self.comm_plan is None:
+            return "dense"
+        if self.layout == "auto":
+            return "halo" if self.comm_plan.use_halo else "dense"
+        return self.layout
 
     def _resolve_fused(self, method: str, fused) -> bool:
         """Map the tri-state knob to a concrete bool for this method: a
@@ -571,7 +688,15 @@ class AzulEngine:
             "fused": spec.fused,
             "substrate": kind,
             "batch": spec.batch,
+            "layout": spec.layout,
+            "reorder": spec.reorder,
         }
+        if self.comm_plan is not None:
+            # the modeled NoC record: halo width + bytes/iteration of the
+            # layout this plan actually lowered to (and the alternative)
+            noc_model = self.comm_plan.model()
+            noc_model["plan"] = spec.layout
+            info["noc"] = noc_model
         return SolvePlan(self, spec, fn, info, cell)
 
     def _lower_local(self, spec: SolveSpec, sdef, kind: str, cell: list):
@@ -612,7 +737,11 @@ class AzulEngine:
         preconditioner from the registry capability flags, collective-fused
         shard substrate per the resolved kind."""
         batched = spec.batch is not None
-        mv = self._mk_matvec()
+        # the NoC matvec closure lowers on the spec's resolved layout:
+        # "halo" runs the compiled pull schedule over the halo-remapped
+        # column blocks, "dense" the blanket collectives -- bit-identical
+        # values, structurally different traffic
+        mv = self._mk_matvec(spec.layout)
         dot = self._dot()
         dot2 = self._dot2()
         mesh = self.mesh
@@ -620,7 +749,8 @@ class AzulEngine:
         io_vec = self._bvec_spec if batched else vec
         s3 = P(self._all_axes, None, None)
         s2 = P(self._all_axes, None)
-        cols, vals = self.cols, self.vals
+        cols = self._halo_cols() if spec.layout == "halo" else self.cols
+        vals = self.vals
         eff = registry.effective_precond(sdef, self.precond, local=False)
 
         extra_args: tuple = ()
@@ -741,6 +871,17 @@ class AzulEngine:
         """
         if self.mode != "2d" or self.pr != self.pc:
             raise ValueError("distributed SpTRSV needs a square 2d engine")
+        if self._row_perm is not None:
+            raise ValueError(
+                "distributed SpTRSV needs reorder='none': the engine's "
+                "permutation would destroy triangularity of l_csr"
+            )
+        if self._pad2g is not None:
+            raise ValueError(
+                "distributed SpTRSV needs uniform row blocks (the engine's "
+                "nnz-balanced 2d embedding shifts block boundaries) -- "
+                "build the engine with balance='rows'"
+            )
         key = _csr_fingerprint(l_csr)
         if key in self._trsv_cache:
             return self._trsv_cache[key]

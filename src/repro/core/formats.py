@@ -149,6 +149,10 @@ def csr_to_dense(m: CSR) -> np.ndarray:
 def csr_from_scipy(m) -> CSR:
     """Accept a scipy.sparse matrix (any format)."""
     m = m.tocsr()
+    # scipy's setdiag can leave ``has_sorted_indices`` stale (True with
+    # unsorted rows), turning sort_indices() into a silent no-op -- force
+    # the sort so the CSR invariant (sorted within each row) actually holds
+    m.has_sorted_indices = False
     m.sort_indices()
     return CSR(
         m.indptr.astype(np.int32),

@@ -7,6 +7,8 @@ wraps them in a send/recv-flavoured API so the engine reads like the
 paper's programming model:
 
   neighbor_shift    -- one torus hop (ppermute), Azul's point-to-point send
+  pull_shard        -- receive the shard a fixed hop count away: one step
+                       of a compiled halo-exchange schedule (commplan)
   gather_cols/rows  -- assemble an x halo along a mesh axis (all_gather)
   reduce_rows       -- combine partial y fragments (psum / psum_scatter)
   mesh_transpose    -- the (i, j) -> (j, i) vector-layout swap between the
@@ -16,6 +18,9 @@ paper's programming model:
   bcast_from        -- one tile broadcasting a solved block (SpTRSV stages)
 
 All functions must be called *inside* shard_map with the axis names bound.
+Single-tile axes degenerate gracefully: every permutation helper returns
+its input unchanged (no ppermute emitted) when the hop is an identity --
+p == 1 meshes and zero shifts cost nothing on the NoC.
 """
 
 from __future__ import annotations
@@ -25,10 +30,12 @@ from jax import lax
 
 __all__ = [
     "neighbor_shift",
+    "pull_shard",
     "gather_along",
     "reduce_along",
     "reduce_scatter_along",
     "mesh_transpose",
+    "reverse_vector",
     "bcast_from",
     "axis_coord",
 ]
@@ -47,11 +54,30 @@ def _axis_size(axis) -> int:
     return int(lax.psum(1, axis))
 
 
+def _ppermute(x: jnp.ndarray, axes, perm) -> jnp.ndarray:
+    """ppermute that elides identity permutations (p == 1 axes, zero
+    shifts): the NoC hop disappears instead of becoming a no-op message."""
+    if all(s == d for s, d in perm):
+        return x
+    return lax.ppermute(x, axes, perm)
+
+
 def neighbor_shift(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
     """One torus hop along ``axis`` (wraps around) -- a single Azul send."""
     n = _axis_size(axis)
     perm = [(i, (i + shift) % n) for i in range(n)]
-    return lax.ppermute(x, axis, perm)
+    return _ppermute(x, axis, perm)
+
+
+def pull_shard(x: jnp.ndarray, axes, delta: int) -> jnp.ndarray:
+    """Every tile receives the shard ``delta`` hops up ``axes``: tile ``i``
+    gets tile ``(i + delta) % p``'s ``x``.  One step of a compiled halo
+    pull schedule (:mod:`repro.core.commplan`); identity hops (p == 1,
+    delta % p == 0) emit no ppermute."""
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    p = _axis_size(axes)
+    perm = [((i + delta) % p, i) for i in range(p)]
+    return _ppermute(x, axes, perm)
 
 
 def gather_along(
@@ -97,19 +123,25 @@ def mesh_transpose(x: jnp.ndarray, row_axes, col_axes) -> jnp.ndarray:
     pr = _axis_size(row_axes)
     pc = _axis_size(col_axes)
     # src tile holds segment q (flat id q = i*pc + j); dest tile for segment
-    # q = j*pr + k is (k, j) = flat k*pc + j.
+    # q = j*pr + k is (k, j) = flat k*pc + j.  Degenerate grids (pr == 1 or
+    # pc == 1, incl. the single-tile mesh) make this the identity -- elided.
     perm = [(j * pr + k, k * pc + j) for k in range(pr) for j in range(pc)]
-    return lax.ppermute(x, row_axes + col_axes, perm)
+    return _ppermute(x, row_axes + col_axes, perm)
 
 
-def reverse_vector(x: jnp.ndarray, axes) -> jnp.ndarray:
+def reverse_vector(x: jnp.ndarray, axes, vec_axis: int = 0) -> jnp.ndarray:
     """Globally reverse a vector stored in contiguous (L_row) shards: shard q
     swaps with shard P-1-q (one ppermute) and flips locally.  Used by the
-    IC(0) preconditioner's L^T solve (run as a reversed lower solve)."""
+    IC(0) preconditioner's L^T solve (run as a reversed lower solve).
+
+    ``vec_axis`` names the *array* axis carrying the distributed vector
+    (batch-stacked (k, u) shards pass ``vec_axis=1`` so the local flip
+    reverses each RHS, not the batch).  p == 1 reduces to the local flip
+    alone -- no ppermute."""
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
     p = _axis_size(axes)
     perm = [(p - 1 - q, q) for q in range(p)]
-    return jnp.flip(lax.ppermute(x, axes, perm), axis=0)
+    return jnp.flip(_ppermute(x, axes, perm), axis=vec_axis)
 
 
 def bcast_from(x: jnp.ndarray, axis, src: jnp.ndarray | int) -> jnp.ndarray:

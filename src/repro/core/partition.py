@@ -17,9 +17,18 @@ Two layouts:
   the ICI torus, and cuts per-link traffic by ~pc vs the 1D plan.
 
 Load balance: rows can be assigned to equal-row chunks or nnz-balanced
-chunks (contiguous, computed by a prefix-sum split).  The partition keeps a
-``row_perm`` so nnz-balancing may reorder rows; SpMV results are unpermuted
-on the way out by the engine.
+chunks (contiguous, computed by a prefix-sum split).  ``plan_2d`` supports
+the same nnz balance: row-block boundaries land on the nnz prefix sum and a
+``pad2g`` map embeds global rows into the common padded block geometry (the
+SUMMA collectives stay shape-uniform; the engine un-embeds on the way out).
+
+Reordering: ``rcm_permutation`` computes a bandwidth-reducing reverse
+Cuthill-McKee ordering over the *symmetrized* pattern and ``permute_csr``
+applies it symmetrically (A' = P A P^T).  Reordering composes with the
+engine's existing row-permutation machinery (vectors permute on embed,
+un-permute on extract) and exists to shrink halos before the communication
+plan (:mod:`repro.core.commplan`) is cut: a banded matrix's tiles reference
+only neighboring shards.
 """
 
 from __future__ import annotations
@@ -31,7 +40,96 @@ import jax.numpy as jnp
 
 from .formats import CSR, pad_to
 
-__all__ = ["Plan1D", "Plan2D", "plan_1d", "plan_2d", "split_rows", "tile_csr"]
+__all__ = [
+    "Plan1D", "Plan2D", "plan_1d", "plan_2d", "split_rows", "tile_csr",
+    "padded_layout_1d", "rcm_permutation", "permute_csr", "matrix_bandwidth",
+]
+
+
+# ---------------------------------------------------------------------------
+# bandwidth-reducing reordering (host-side preprocessing)
+# ---------------------------------------------------------------------------
+
+
+def _sym_adjacency(m: CSR) -> tuple[np.ndarray, np.ndarray]:
+    """CSR adjacency (indptr, indices) of the symmetrized pattern
+    A | A^T, diagonal dropped -- the graph RCM walks."""
+    n = m.shape[0]
+    r = np.repeat(np.arange(n, dtype=np.int64), m.row_nnz())
+    c = m.indices.astype(np.int64)
+    rr = np.concatenate([r, c])
+    cc = np.concatenate([c, r])
+    keep = rr != cc
+    key = np.unique(rr[keep] * n + cc[keep])
+    rows, cols = key // n, key % n
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(np.bincount(rows, minlength=n), out=indptr[1:])
+    return indptr, cols
+
+
+def rcm_permutation(m: CSR) -> np.ndarray:
+    """Reverse Cuthill-McKee ordering of ``m``'s symmetrized pattern.
+
+    Returns ``perm`` such that new row/col ``i`` is old row/col ``perm[i]``
+    (use with :func:`permute_csr`).  Deterministic: BFS seeds are the
+    minimum-degree node of each component (ties by index) and neighbors are
+    visited in increasing (degree, index) order -- so plans and the CI
+    traffic records built on top of it are reproducible.
+    """
+    if m.shape[0] != m.shape[1]:
+        raise ValueError("rcm_permutation expects a square matrix")
+    n = m.shape[0]
+    indptr, indices = _sym_adjacency(m)
+    degree = np.diff(indptr)
+    visited = np.zeros(n, dtype=bool)
+    order = np.empty(n, dtype=np.int64)
+    pos = 0
+    for seed in np.argsort(degree, kind="stable"):
+        if visited[seed]:
+            continue
+        visited[seed] = True
+        order[pos] = seed
+        head = pos
+        pos += 1
+        while head < pos:                      # BFS, degree-sorted neighbors
+            v = order[head]
+            head += 1
+            nbrs = indices[indptr[v]:indptr[v + 1]]
+            nbrs = nbrs[~visited[nbrs]]
+            if nbrs.size:
+                nbrs = nbrs[np.argsort(degree[nbrs], kind="stable")]
+                visited[nbrs] = True
+                order[pos:pos + nbrs.size] = nbrs
+                pos += nbrs.size
+    return order[::-1].copy()                  # the R in RCM
+
+
+def permute_csr(m: CSR, perm: np.ndarray) -> CSR:
+    """Symmetric permutation A' = P A P^T: A'[i, j] = A[perm[i], perm[j]],
+    column indices re-sorted per row (CSR invariant)."""
+    n = m.shape[0]
+    perm = np.asarray(perm, dtype=np.int64)
+    iperm = np.empty(n, np.int64)
+    iperm[perm] = np.arange(n)
+    counts = m.row_nnz()[perm]
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    within = np.arange(int(indptr[-1])) - np.repeat(indptr[:-1], counts)
+    src = np.repeat(np.asarray(m.indptr, np.int64)[perm], counts) + within
+    indices = iperm[m.indices[src]]
+    data = np.asarray(m.data)[src]
+    order = np.lexsort((indices, np.repeat(np.arange(n), counts)))
+    return CSR(indptr.astype(np.int32), indices[order].astype(np.int32),
+               data[order], m.shape)
+
+
+def matrix_bandwidth(m: CSR) -> int:
+    """max |i - j| over stored entries (0 for diagonal/empty) -- the halo
+    driver RCM minimizes."""
+    if m.nnz == 0:
+        return 0
+    r = np.repeat(np.arange(m.shape[0], dtype=np.int64), m.row_nnz())
+    return int(np.abs(r - m.indices).max())
 
 
 def split_rows(m: CSR, parts: int, balance: str = "rows") -> np.ndarray:
@@ -116,6 +214,12 @@ class Plan2D(NamedTuple):
     column indices (relative to column block J).  Device order is row-major:
     index = i * pc + j.  All row/col blocks are equal-sized (n_padded / pr,
     n_padded / pc) so the SUMMA collectives are shape-uniform.
+
+    nnz balance (``balance="nnz"``): row-block boundaries follow the nnz
+    prefix sum (``row_offsets``) and every block pads to the common
+    ``block_rows``; ``pad2g`` maps padded indices to global rows (the
+    sentinel ``n`` marks padding slots).  Uniform plans carry
+    ``row_offsets=None``/``pad2g=None``.
     """
 
     cols: jnp.ndarray
@@ -124,6 +228,8 @@ class Plan2D(NamedTuple):
     pc: int
     n: int
     n_padded: int
+    row_offsets: np.ndarray | None = None    # (pr+1,) host-side, nnz balance
+    pad2g: np.ndarray | None = None          # (n_padded,) host-side
 
     @property
     def block_rows(self) -> int:
@@ -197,10 +303,15 @@ def plan_2d(
     width_pad: int = 8,
     row_pad: int = 8,
     dtype=np.float32,
+    balance: str = "rows",
 ) -> Plan2D:
     n = m.shape[0]
     if m.shape[0] != m.shape[1]:
         raise ValueError("plan_2d expects a square matrix")
+    if balance == "nnz":
+        return _plan_2d_nnz(m, pr, pc, width_pad, row_pad, dtype)
+    if balance != "rows":
+        raise ValueError(f"unknown balance mode {balance!r}")
     # Pad so that (a) row/col blocks are equal-size, (b) each block's rows
     # are a multiple of row_pad (TPU sublane), and (c) the per-device vector
     # subsegment u = n_pad/(pr*pc) is whole -- the SUMMA collectives and the
@@ -216,6 +327,67 @@ def plan_2d(
         pr * pc, br, width_pad, dtype,
     )
     return Plan2D(cols, vals, pr, pc, n, n_pad)
+
+
+def _plan_2d_nnz(m: CSR, pr: int, pc: int, width_pad: int, row_pad: int,
+                 dtype) -> Plan2D:
+    """nnz-balanced 2D plan: row-block boundaries on the nnz prefix sum,
+    every block padded to a common ``br`` so the collectives stay
+    shape-uniform.  Global rows embed into the padded geometry via
+    ``pad2g`` (exactly the 1D plan's padded-layout trick lifted to 2D);
+    columns use the *same* embedding, so column block J covers padded
+    columns [J*bc, (J+1)*bc) and sub-shard k of block J is the u-segment
+    the mesh-transpose puts on tile (k, J)."""
+    n = m.shape[0]
+    offs = split_rows(m, pr, "nnz")
+    max_blk = max(int(np.diff(offs).max()) if pr else 1, 1)
+    # br must be a multiple of row_pad (sublane) AND of pc (whole u shards)
+    br = pad_to(max_blk, row_pad * pc)
+    n_pad = pr * br
+    bc = n_pad // pc
+    pad2g = np.full(n_pad, n, np.int64)
+    g2pad = np.empty(n, np.int64)
+    for i in range(pr):
+        r0, r1 = int(offs[i]), int(offs[i + 1])
+        pad2g[i * br: i * br + (r1 - r0)] = np.arange(r0, r1)
+        g2pad[r0:r1] = i * br + np.arange(r1 - r0)
+    rows, cols_g, vals_g = _csr_to_coo(m)
+    pr_idx, pc_idx = g2pad[rows], g2pad[cols_g]
+    tile = (pr_idx // br) * pc + (pc_idx // bc)
+    cols, vals = _stack_ell_from_coo(
+        tile, pr_idx % br, pc_idx % bc, vals_g, pr * pc, br, width_pad, dtype,
+    )
+    # a balanced split that lands on the uniform geometry IS the uniform
+    # plan (identity embedding) -- drop the pad2g so consumers that need
+    # uniform blocks (distributed SpTRSV) keep working unchanged
+    if (n_pad == pad_to(n, pr * pc * row_pad)
+            and np.array_equal(pad2g[:n], np.arange(n))):
+        return Plan2D(cols, vals, pr, pc, n, n_pad)
+    return Plan2D(cols, vals, pr, pc, n, n_pad,
+                  row_offsets=offs, pad2g=pad2g)
+
+
+def padded_layout_1d(plan: Plan1D) -> tuple[np.ndarray, np.ndarray]:
+    """The 1D plan's padded device layout: (cols_pad, pad2g).
+
+    ``cols_pad``: (parts, rows_p, w) column ids remapped from global rows
+    into the padded tile layout (tile t, local r) = t*u + r -- the layout
+    the engine shards vectors in, and the one :mod:`repro.core.commplan`
+    compiles pull schedules against.  ``pad2g``: (n_padded,) padded index
+    -> global row (sentinel ``n`` in padding slots).  Single source of
+    truth shared by the engine build and the traffic benchmarks, so the
+    recorded comm plans always describe the layout the engine runs.
+    """
+    parts, u = plan.parts, plan.rows_per_tile
+    offs = plan.row_offsets
+    cols = np.asarray(plan.cols)
+    owner = np.clip(np.searchsorted(offs, cols, side="right") - 1, 0, parts - 1)
+    cols_pad = (owner * u + (cols - offs[owner])).astype(np.int32)
+    pad2g = np.full(plan.n_padded, plan.n, np.int64)
+    for t in range(parts):
+        cnt = int(offs[t + 1] - offs[t])
+        pad2g[t * u: t * u + cnt] = np.arange(offs[t], offs[t + 1])
+    return cols_pad, pad2g
 
 
 def partition_nnz_histogram(m: CSR, offs: np.ndarray) -> np.ndarray:

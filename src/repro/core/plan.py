@@ -62,6 +62,15 @@ class SolveSpec:
                plans are shape-specialized, the serving path builds one
                plan per batch bucket
     fused      'auto' | True | False; canonicalized to the resolved bool
+    layout     distributed communication layout: None/'auto' (engine knob,
+               then the compiled comm plan decides), 'halo' (force the
+               structure-compiled pull schedule) or 'dense' (blanket
+               collectives); canonicalized to the resolved 'halo'/'dense'
+               ('dense' on local engines -- no NoC)
+    reorder    row/column reordering; None = the engine's (an engine-build
+               decision like ``precond`` -- the matrix is repacked under
+               the permutation, so a spec naming a different reorder than
+               the engine was built with is rejected)
     """
 
     method: str = "pcg"
@@ -71,6 +80,8 @@ class SolveSpec:
     max_iters: int | None = None
     batch: int | None = None
     fused: Any = "auto"
+    layout: str | None = None
+    reorder: str | None = None
 
 
 def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
@@ -99,6 +110,24 @@ def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
         raise ValueError(f"solver {sdef.name!r} does not support batched RHS")
     local = engine.mode == "local"
     fused = registry.resolve_fused(sdef, pdef, local, spec.fused)
+    if spec.reorder is not None and spec.reorder != engine.reorder:
+        raise ValueError(
+            f"spec reorder {spec.reorder!r} != engine reorder "
+            f"{engine.reorder!r} (the matrix is repacked under the "
+            "permutation at engine build time -- build an engine with "
+            "reorder=...)"
+        )
+    # None and 'auto' both defer to the engine-level knob (an engine pinned
+    # to 'dense'/'halo' stays pinned); only then does the compiled comm
+    # plan decide profitability
+    layout_knob = spec.layout
+    if layout_knob in (None, "auto"):
+        layout_knob = engine.layout
+    layout = registry.resolve_layout(
+        sdef, pdef, local, layout_knob,
+        halo_profitable=engine.comm_plan is not None
+        and engine.comm_plan.use_halo,
+    )
     if sdef.tolerance:
         tol = 1e-8 if spec.tol is None else float(spec.tol)
         max_iters = spec.iters if spec.max_iters is None else int(spec.max_iters)
@@ -106,7 +135,8 @@ def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
     else:
         tol, max_iters, iters = None, None, int(spec.iters)
     return replace(spec, precond=pdef.name, iters=iters, tol=tol,
-                   max_iters=max_iters, fused=fused)
+                   max_iters=max_iters, fused=fused, layout=layout,
+                   reorder=engine.reorder)
 
 
 class SolvePlan:

@@ -40,6 +40,7 @@ __all__ = [
     "solver_names",
     "precond_names",
     "resolve_fused",
+    "resolve_layout",
     "substrate_kind",
     "effective_precond",
 ]
@@ -86,7 +87,11 @@ class SolverDef:
     factorized preconditioner lowers them to its heavyweight substrate
     kind (``fused_ic0`` / ``fused_shard_ic0``).  ``*_precond_override``
     remaps the preconditioner used to build ``psolve`` per mode (the
-    pipelined solver runs local preconditioners only).
+    pipelined solver runs local preconditioners only).  ``halo_dist``
+    lists the preconditioner names the method's distributed lowering may
+    run on a compiled halo-exchange communication plan
+    (:mod:`repro.core.commplan`) instead of dense collectives -- the
+    substrate-phrased methods whose matvec is the engine's NoC closure.
     """
 
     name: str
@@ -98,6 +103,7 @@ class SolverDef:
     fused_precond_apply: bool = False
     fused_local: frozenset = frozenset()
     fused_dist: frozenset = frozenset()
+    halo_dist: frozenset = frozenset()
     local_precond_override: dict = field(default_factory=dict)
     dist_precond_override: dict = field(default_factory=dict)
 
@@ -110,7 +116,12 @@ class PrecondDef:
     over the engine's device-resident operands.  The distributed per-tile
     apply is built by engine lowering from the capability flags
     (``uses_dinv`` -> the sharded inverse diagonal, ``factorized`` -> the
-    packed per-tile factor blocks).
+    packed per-tile factor blocks).  ``fused_local_needs_kernels`` marks
+    preconditioners whose local fused substrate only pays when the Pallas
+    kernels are actually dispatching (the compute-for-traffic trade of the
+    whole-solve SpTRSV): with kernels inactive, ``fused="auto"``
+    resolution prefers the reference apply (an explicit ``fused=True``
+    still forces the fused path).
     """
 
     name: str
@@ -119,6 +130,7 @@ class PrecondDef:
     factorized: bool = False
     fused_local_kind: str = "fused"
     fused_shard_kind: str = "fused_shard"
+    fused_local_needs_kernels: bool = False
     local_apply: Callable | None = None
 
 
@@ -190,12 +202,54 @@ def precond_names() -> tuple:
 def resolve_fused(sdef: SolverDef, pdef: PrecondDef, local: bool, knob) -> bool:
     """Map the tri-state fused knob ('auto' | True | False) to a concrete
     bool: 'auto' and True mean "fused wherever this (method, precond, mode)
-    supports it" -- a registry capability lookup, not a name ladder."""
+    supports it" -- a registry capability lookup, not a name ladder.
+
+    'auto' additionally defers to the backend for preconditioners marked
+    ``fused_local_needs_kernels``: their local fused substrate trades
+    on-chip compute for HBM traffic, a trade that only pays where the
+    Pallas kernels actually dispatch -- on CPU (kernels inactive) the
+    reference apply is faster, so capability resolution prefers it.
+    ``True`` remains an explicit override."""
     if knob not in ("auto", True, False):
         raise ValueError(f"fused must be 'auto', True or False, got {knob!r}")
     caps = sdef.fused_local if local else sdef.fused_dist
     supported = pdef.name in caps
+    if (knob == "auto" and supported and local and sdef.fused_precond_apply
+            and pdef.fused_local_needs_kernels):
+        from ..kernels.ops import kernels_active
+
+        supported = kernels_active()
     return supported if knob in ("auto", True) else False
+
+
+def resolve_layout(sdef: SolverDef, pdef: PrecondDef, local: bool, knob,
+                   halo_profitable: bool) -> str:
+    """Resolve the communication-layout knob (None/'auto' | 'halo' |
+    'dense') to the concrete layout a plan lowers with.
+
+    'auto' picks 'halo' when (a) the (method, preconditioner) pair
+    declares halo support and (b) the engine's compiled
+    :class:`~repro.core.commplan.CommPlan` says the halo schedule moves
+    strictly fewer bytes than the dense all-gather (``halo_profitable``).
+    An explicit 'halo' forces the schedule (capability permitting -- for
+    A/B measurement even where it does not pay); local engines have no NoC
+    and always lower 'dense'."""
+    if knob not in (None, "auto", "halo", "dense"):
+        raise ValueError(
+            f"layout must be 'auto', 'halo' or 'dense', got {knob!r}")
+    if local:
+        if knob == "halo":
+            raise ValueError("layout='halo' needs a distributed engine "
+                             "(single-device engines have no NoC)")
+        return "dense"
+    supported = pdef.name in sdef.halo_dist
+    if knob in (None, "auto"):
+        return "halo" if (supported and halo_profitable) else "dense"
+    if knob == "halo" and not supported:
+        raise ValueError(
+            f"solver {sdef.name!r} does not support halo communication "
+            f"plans with preconditioner {pdef.name!r}")
+    return knob
 
 
 def substrate_kind(sdef: SolverDef, pdef: PrecondDef, local: bool,
@@ -278,15 +332,18 @@ def _run_jacobi(c: SolveContext, b, x0):
 register_solver(SolverDef(
     name="pcg", run=_run_pcg, fused_precond_apply=True,
     fused_local=_ALL_PRECONDS, fused_dist=_ALL_PRECONDS,
+    halo_dist=_ALL_PRECONDS,
 ))
 register_solver(SolverDef(
     name="pcg_tol", run=_run_pcg_tol, tolerance=True,
     fused_precond_apply=True,
     fused_local=_ALL_PRECONDS, fused_dist=_ALL_PRECONDS,
+    halo_dist=_ALL_PRECONDS,
 ))
 register_solver(SolverDef(
     name="cg", run=_run_cg, preconditioned=False,
     fused_local=_ALL_PRECONDS, fused_dist=_ALL_PRECONDS,
+    halo_dist=_ALL_PRECONDS,
 ))
 register_solver(SolverDef(
     name="pcg_pipe", run=_run_pcg_pipe,
@@ -343,5 +400,9 @@ register_precond(PrecondDef(
 register_precond(PrecondDef(
     name="block_ic0", factorized=True,
     fused_local_kind="fused_ic0", fused_shard_kind="fused_shard_ic0",
+    # the whole-solve SpTRSV substrate buys HBM traffic with VPU work --
+    # ~7x SLOWER than the reference apply on CPU (BENCH_pcg tol_solves at
+    # lap2d_32), so 'auto' only picks it where kernels dispatch
+    fused_local_needs_kernels=True,
     local_apply=_block_ic0_apply,
 ))

@@ -205,17 +205,22 @@ def fused_ic0_local_substrate(cols, vals, factors, n: int,
 
 def _shard_stream_ops(matvec, psum):
     """The shared per-tile pair (dot, fold_matvec_dot) for the shard_map
-    substrates.  The p-fold stays a local jnp composition -- under
-    shard_map the SpMV is the NoC closure, so there is no single matrix
-    stream to fold into; the fused win is collective fusion (see the
-    flavors below)."""
+    substrates.  The folded p-update executes here, INSIDE the per-tile
+    shard closure, immediately around the communication the matvec closure
+    performs (the compiled halo exchange when the engine lowered a halo
+    layout, the dense collectives otherwise) -- distributed iterations run
+    the same top-of-step folded recurrence as the local fused path, and
+    only the updated p's halo crosses the NoC.  The fold itself is the jnp
+    composition on the (u,) shard: a gather-time kernel fold would need
+    the halo-extended p carried across iterations (a TPU follow-up, see
+    ROADMAP); the fused win here is collective fusion (flavors below)."""
 
     def dot(u, v):
         return psum(_dot(u, v))
 
     def fold_matvec_dot(z, p, beta):
-        p = z + beta * p
-        ap = matvec(p)
+        p = z + beta * p                 # folded update, inside the closure
+        ap = matvec(p)                   # halo exchange (or dense gather)
         return p, ap, psum(_dot(p, ap))
 
     return dot, fold_matvec_dot
@@ -230,8 +235,9 @@ def fused_shard_substrate(matvec, dinv, psum) -> SolverSubstrate:
     collective fusion: the one-pass update emits local [rr, rz] partials
     that ride a SINGLE stacked psum instead of two back-to-back
     latency-bound reductions (plus the local Pallas kernel on TPU).  The
-    p-fold stays a local jnp composition -- under shard_map the SpMV is the
-    NoC closure, so there is no single matrix stream to fold into.
+    p-update folds at the top of the step inside this same closure (see
+    ``_shard_stream_ops``), wrapped around whatever communication the
+    matvec closure compiled -- halo pull schedule or dense collectives.
     """
 
     dot, fold_matvec_dot = _shard_stream_ops(matvec, psum)

@@ -47,10 +47,12 @@ def _solver_main(args) -> int:
             raise SystemExit("--mesh-shape must be RxC, e.g. 2x2")
         mesh = make_mesh(shape, ("data", "model"))
 
-    eng = AzulEngine(m, mesh=mesh, precond=args.precond, dtype=np.float64)
+    eng = AzulEngine(m, mesh=mesh, precond=args.precond, dtype=np.float64,
+                     layout=args.layout, reorder=args.reorder)
     # per-bucket plans are built from this spec (batch filled per bucket);
     # dispatch resolves once at plan construction, not per step
-    spec = SolveSpec(method=args.method, iters=args.iters, tol=args.tol)
+    spec = SolveSpec(method=args.method, iters=args.iters, tol=args.tol,
+                     layout=args.layout)
     srv = SolveServer(eng, max_batch=args.coalesce, spec=spec)
 
     import scipy.sparse as sp
@@ -74,6 +76,7 @@ def _solver_main(args) -> int:
         "solves_per_s": round(args.requests / dt, 2),
         "verify_maxerr": err,
         "substrate": eng.last_solve_info.get("substrate", "reference"),
+        "layout": eng.last_solve_info.get("layout", "dense"),
     }
     if args.method == "pcg_tol":
         its = [done[rid].iters for rid in ids]
@@ -108,6 +111,11 @@ def main(argv=None):
                     help="relative residual target for --method pcg_tol")
     ap.add_argument("--mesh-shape", default="",
                     help="e.g. 2x2 -- empty = single device")
+    ap.add_argument("--layout", default="auto",
+                    choices=("auto", "halo", "dense"),
+                    help="distributed comm layout (see launch.solve)")
+    ap.add_argument("--reorder", default="none", choices=("none", "rcm"),
+                    help="bandwidth-reducing RCM reordering")
     args = ap.parse_args(argv)
 
     if args.solver:

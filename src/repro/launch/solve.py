@@ -38,6 +38,15 @@ def main(argv=None):
     ap.add_argument("--mode", default="2d", choices=("1d", "2d"))
     ap.add_argument("--mesh-shape", default="",
                     help="e.g. 2x2 -- empty = single device")
+    ap.add_argument("--layout", default="auto",
+                    choices=("auto", "halo", "dense"),
+                    help="distributed comm layout: halo = the compiled "
+                         "pull schedule, dense = blanket collectives, "
+                         "auto = halo where it moves fewer bytes")
+    ap.add_argument("--reorder", default="none", choices=("none", "rcm"),
+                    help="bandwidth-reducing RCM reordering (shrinks halos)")
+    ap.add_argument("--balance", default="nnz", choices=("nnz", "rows"),
+                    help="row-block load balance (nnz = prefix-sum splits)")
     args = ap.parse_args(argv)
 
     from ..core.engine import AzulEngine
@@ -60,14 +69,15 @@ def main(argv=None):
     from ..core.formats import csr_to_dense  # noqa -- only for tiny oracles
     fused = {"auto": "auto", "on": True, "off": False}[args.fused]
     eng = AzulEngine(m, mesh=mesh, mode=args.mode, precond=args.precond,
-                     dtype=np.float64, fused=fused)
+                     balance=args.balance, dtype=np.float64, fused=fused,
+                     layout=args.layout, reorder=args.reorder)
     import scipy.sparse as sp
     a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
     b = a @ x_true
     # plan/execute: lower the spec once, run the compiled plan
     plan = eng.plan(SolveSpec(method=args.method, iters=args.iters,
                               tol=args.tol, max_iters=args.max_iters,
-                              fused=fused))
+                              fused=fused, layout=args.layout))
     x, norms = plan(b)
     rel = float(np.linalg.norm(x - x_true) / np.linalg.norm(x_true))
     out = {
@@ -76,9 +86,13 @@ def main(argv=None):
         "iters": args.iters, "mode": eng.mode,
         "substrate": plan.info["substrate"],
         "fused": bool(plan.spec.fused),
+        "layout": plan.info["layout"],
+        "reorder": plan.info["reorder"],
         "final_residual": float(norms[-1] if norms.ndim == 1 else norms[-1, 0]),
         "rel_error": rel,
     }
+    if "noc" in plan.info:
+        out["noc"] = plan.info["noc"]
     if plan.spec.tol is not None:
         out["tol"] = plan.spec.tol
         out["iters_run"] = int(np.asarray(plan.last_iters))

@@ -22,6 +22,8 @@ import repro.serve as serve
 CORE_EXPORTS = {
     # formats
     "CSR", "ELL", "BCSR",
+    # communication plans (structure-compiled halo schedules)
+    "CommPlan",
     # engine + plan/execute API
     "AzulEngine", "SolveSpec", "SolvePlan", "PlanCache",
     # registry
@@ -39,7 +41,8 @@ SERVE_EXPORTS = {"generate", "SlotServer", "SolveServer", "SolveOutcome",
 SIGNATURES = {
     "core.AzulEngine.__init__": (
         "self", "a", "mesh", "mode", "row_axes", "col_axes", "precond",
-        "balance", "dtype", "row_pad", "width_pad", "fused",
+        "balance", "dtype", "row_pad", "width_pad", "fused", "layout",
+        "reorder",
     ),
     "core.AzulEngine.plan": ("self", "spec", "kwargs"),
     "core.AzulEngine.solve": (                    # deprecated shim, frozen
@@ -52,7 +55,7 @@ SIGNATURES = {
     "core.AzulEngine.from_device_vec": ("self", "v"),
     "core.SolveSpec.__init__": (
         "self", "method", "precond", "iters", "tol", "max_iters", "batch",
-        "fused",
+        "fused", "layout", "reorder",
     ),
     "core.SolvePlan.__call__": ("self", "b", "x0"),
     "core.PlanCache.get": ("self", "spec", "build", "env"),
@@ -111,6 +114,13 @@ def test_builtin_registry_population():
     assert core.get_solver("pcg").tolerance is False
     assert core.get_precond("none").name == "identity"   # alias resolution
     assert core.get_precond("block_ic0").fused_local_kind == "fused_ic0"
+    # halo comm-plan capability: the substrate-phrased methods support it,
+    # the smoother/pipelined solvers stay on dense collectives
+    assert {"identity", "jacobi", "block_ic0"} <= set(
+        core.get_solver("pcg").halo_dist)
+    assert core.get_solver("pcg_tol").halo_dist == core.get_solver("pcg").halo_dist
+    assert core.get_solver("pcg_pipe").halo_dist == frozenset()
+    assert core.get_precond("block_ic0").fused_local_needs_kernels is True
 
 
 def test_solvespec_is_frozen_and_hashable():

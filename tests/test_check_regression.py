@@ -22,7 +22,7 @@ CURRENT = os.path.join(REPO, "BENCH_pcg.json")
 
 def _payload():
     return {
-        "schema": "bench_pcg/v2",
+        "schema": "bench_pcg/v3",
         "fused_vs_unfused": [{
             "matrix": "m", "us_per_iter_fused": 100.0,
             "us_per_iter_unfused": 120.0, "trace_rel_maxdiff": 0.0,
@@ -37,6 +37,13 @@ def _payload():
             "substrate_fused": "fused_ic0", "iters_fused": 30,
             "iters_reference": 30, "iters_match": True, "x_maxdiff": 0.0,
             "us_per_iter_fused": 200.0, "us_per_iter_unfused": 220.0,
+        }],
+        "noc_plans": [{
+            "matrix": "m", "reorder": "none", "mode": "1d", "grid": "8",
+            "plan": "halo", "halo_width": 2,
+            "gather_words_halo": 256, "gather_words_dense": 896,
+            "bytes_per_iter_halo": 2048, "bytes_per_iter_dense": 7168,
+            "reduction": 3.5,
         }],
     }
 
@@ -97,6 +104,38 @@ def test_modeled_traffic_change_fails():
     assert any("modeled_traffic" in f for f in g.failures)
 
 
+def test_halo_plan_dense_fallback_fails():
+    """A config that used to cut a halo plan and now falls back to dense
+    all-gathers is a NoC-traffic regression with a dedicated message."""
+    cur = _payload()
+    cur["noc_plans"][0]["plan"] = "dense"
+    g = check(cur, _payload())
+    assert any("halo-plan regression" in f for f in g.failures)
+
+
+def test_halo_width_growth_fails():
+    """Halo width and modeled bytes are host-deterministic: any drift is a
+    real partitioning/comm-plan behaviour change."""
+    cur = _payload()
+    cur["noc_plans"][0]["halo_width"] = 5
+    cur["noc_plans"][0]["bytes_per_iter_halo"] = 5120
+    g = check(cur, _payload())
+    assert any("halo_width" in f for f in g.failures)
+    assert any("bytes_per_iter_halo" in f for f in g.failures)
+
+
+def test_dense_to_halo_improvement_passes_plan_check():
+    """The reverse direction (dense baseline -> halo current) is an
+    improvement, not a regression -- but the byte fields still compare
+    exactly, so flipping requires a re-baseline (a deliberate act)."""
+    base = _payload()
+    base["noc_plans"][0]["plan"] = "dense"
+    cur = _payload()
+    g = check(cur, base)
+    assert any("plan" in f and "halo-plan regression" not in f
+               for f in g.failures)
+
+
 def test_extra_current_entries_are_fine():
     """Current may cover MORE than baseline (new matrices ride along)."""
     cur = _payload()
@@ -148,8 +187,16 @@ def test_committed_bench_passes_gate():
 
 def test_committed_baseline_is_selfconsistent():
     base = json.load(open(BASELINE))
-    assert base["schema"] == "bench_pcg/v2"
+    assert base["schema"] == "bench_pcg/v3"
     assert base["tol_solves"], "baseline must pin tolerance iteration counts"
+    assert base["noc_plans"], "baseline must pin the comm-plan traffic records"
+    # the acceptance bar: banded patterns must cut halo plans whose modeled
+    # NoC bytes/iteration are strictly below the dense all-gather model
+    halo = [e for e in base["noc_plans"]
+            if e["matrix"] in ("lap2d_32", "banded_1k") and e["grid"] == "8"]
+    assert halo and all(e["plan"] == "halo" for e in halo)
+    assert all(e["bytes_per_iter_halo"] < e["bytes_per_iter_dense"]
+               for e in halo)
     for e in base["tol_solves"]:
         assert e["iters_match"] is True
         assert e["iters_fused"] == e["iters_reference"]

@@ -1,0 +1,436 @@
+"""Partitioning / communication-plan correctness.
+
+Property tests (hypothesis, with the ``_hypothesis_compat`` fallback) for
+the tile-graph communication plans of :mod:`repro.core.commplan` and the
+partitioning machinery feeding them:
+
+* halo-scheduled SpMV reproduces the dense-gather SpMV **bit-for-bit**
+  (same gather values, same per-row summation order -- verified with a
+  pure-NumPy simulator of the per-tile pull schedule, 1D and 2D, including
+  nonsymmetric patterns);
+* RCM reordering is a valid permutation, ``permute_csr`` round-trips
+  exactly, and the engine's ``reorder`` machinery reproduces dense
+  SpMV/solve results through ``row_perm`` round-trips, batched included;
+* nnz-balanced 2D plans reconstruct the matrix exactly through the
+  ``pad2g`` embedding and keep the vector shards whole;
+* the halo/dense decision: banded structure cuts halo plans whose modeled
+  bytes are strictly below the dense all-gather model, unstructured
+  matrices fall back to dense;
+* spec canonicalization of the new ``layout``/``reorder`` fields.
+
+The multi-device end-to-end checks (halo == dense bitwise under real
+``shard_map``, iteration-count parity, reorder on a mesh) run in a
+subprocess on a small forced-host-device mesh -- the PR-time ``dist``
+smoke.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import commplan
+from repro.core.engine import AzulEngine
+from repro.core.formats import csr_from_scipy
+from repro.core.partition import (
+    matrix_bandwidth, padded_layout_1d, permute_csr, plan_1d, plan_2d,
+    rcm_permutation,
+)
+from repro.core.plan import SolveSpec
+from repro.data.matrices import laplacian_2d
+
+
+def _mat(n, density, seed, symmetric=False, banded=False):
+    rng = np.random.default_rng(seed)
+    if banded:
+        bw = max(1, n // 10)
+        a = sp.diags(
+            [rng.standard_normal(n - abs(k)) for k in range(-bw, bw + 1)],
+            offsets=list(range(-bw, bw + 1)), format="csr",
+        )
+    else:
+        a = sp.random(n, n, density=density, random_state=seed, format="csr")
+    a.setdiag(2.0 + np.arange(n) * 0.01)
+    a = a.tocsr()
+    if symmetric:
+        a = ((a + a.T) * 0.5).tocsr()
+    return csr_from_scipy(a)
+
+
+def _dense(m):
+    return sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape).toarray()
+
+
+# -- halo simulator (the pull schedule, executed in NumPy) --------------------
+
+
+def _sim_1d(cp, vals, cols_pad, x_pad, u, parts):
+    """Halo and dense gathers of the same 1D partition, side by side."""
+    y_halo = np.zeros_like(x_pad)
+    y_dense = np.zeros_like(x_pad)
+    for t in range(parts):
+        shards = [x_pad[t * u:(t + 1) * u]]
+        for d in cp.deltas:
+            s = (t + d) % parts
+            shards.append(x_pad[s * u:(s + 1) * u])
+        x_ext = np.concatenate(shards)
+        y_halo[t * u:(t + 1) * u] = np.sum(vals[t] * x_ext[cp.cols_halo[t]],
+                                           axis=1)
+        y_dense[t * u:(t + 1) * u] = np.sum(vals[t] * x_pad[cols_pad[t]],
+                                            axis=1)
+    return y_halo, y_dense
+
+
+def _cols_pad_1d(p1):
+    return padded_layout_1d(p1)[0]
+
+
+@given(st.integers(16, 80), st.integers(2, 8), st.booleans(), st.booleans(),
+       st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_halo_spmv_1d_bit_identical_to_dense(n, parts, banded, symmetric, seed):
+    """The pull schedule gathers the same values the all-gather would, in
+    the same ELL slot order -- bitwise-equal SpMV, nonsymmetric included."""
+    m = _mat(n, 0.1, seed, symmetric=symmetric, banded=banded)
+    p1 = plan_1d(m, parts, balance="nnz", dtype=np.float64)
+    u = p1.rows_per_tile
+    cols_pad = _cols_pad_1d(p1)
+    vals = np.asarray(p1.vals)
+    cp = commplan.compile_comm_plan_1d(cols_pad, vals, u, parts, itemsize=8)
+    rng = np.random.default_rng(seed)
+    x_pad = np.zeros(p1.n_padded)
+    # embed through pad2g exactly as the engine does
+    pad2g = np.full(p1.n_padded, n, np.int64)
+    for t in range(parts):
+        cnt = int(p1.row_offsets[t + 1] - p1.row_offsets[t])
+        pad2g[t * u:t * u + cnt] = np.arange(p1.row_offsets[t],
+                                             p1.row_offsets[t + 1])
+    x = rng.standard_normal(n)
+    x_pad[pad2g < n] = x[pad2g[pad2g < n]]
+    y_halo, y_dense = _sim_1d(cp, vals, cols_pad, x_pad, u, parts)
+    assert np.array_equal(y_halo, y_dense)
+    # and both equal the dense oracle through the row_perm round-trip
+    y = np.zeros(n)
+    y[pad2g[pad2g < n]] = y_dense[pad2g < n]
+    np.testing.assert_allclose(y, _dense(m) @ x, atol=1e-12)
+    # the schedule never pulls shards nothing references
+    assert len(cp.deltas) <= parts - 1
+    assert all(0 < d < parts for d in cp.deltas)
+
+
+@given(st.integers(16, 64), st.sampled_from([(2, 2), (4, 1), (2, 4), (4, 2)]),
+       st.booleans(), st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_halo_spmv_2d_bit_identical_to_dense(n, grid, banded, seed):
+    pr, pc = grid
+    m = _mat(n, 0.12, seed, banded=banded)
+    p2 = plan_2d(m, pr, pc, dtype=np.float64, balance="nnz")
+    u = p2.n_padded // (pr * pc)
+    br, bc = p2.block_rows, p2.block_cols
+    cols = np.asarray(p2.cols)
+    vals = np.asarray(p2.vals)
+    cp = commplan.compile_comm_plan_2d(cols, vals, pr, pc, u, itemsize=8)
+    rng = np.random.default_rng(seed)
+    x_pad = np.zeros(p2.n_padded)
+    if p2.pad2g is None:
+        x = rng.standard_normal(n)
+        x_pad[:n] = x
+        pad2g = np.r_[np.arange(n), np.full(p2.n_padded - n, n)]
+    else:
+        pad2g = p2.pad2g
+        x = rng.standard_normal(n)
+        x_pad[pad2g < n] = x[pad2g[pad2g < n]]
+    y_halo = np.zeros(p2.n_padded)
+    y_dense = np.zeros(p2.n_padded)
+    for i in range(pr):
+        for j in range(pc):
+            t = i * pc + j
+            xj = x_pad[j * bc:(j + 1) * bc]          # the dense gather
+            shards = [xj[i * u:(i + 1) * u]]
+            for d in cp.deltas:
+                k = (i + d) % pr
+                shards.append(xj[k * u:(k + 1) * u])
+            x_ext = np.concatenate(shards)
+            y_halo[i * br:(i + 1) * br] += np.sum(
+                vals[t] * x_ext[cp.cols_halo[t]], axis=1)
+            y_dense[i * br:(i + 1) * br] += np.sum(
+                vals[t] * xj[cols[t]], axis=1)
+    assert np.array_equal(y_halo, y_dense)
+    y = np.zeros(n)
+    y[pad2g[pad2g < n]] = y_dense[pad2g < n]
+    np.testing.assert_allclose(y, _dense(m) @ x, atol=1e-12)
+
+
+# -- RCM + permute_csr --------------------------------------------------------
+
+
+@given(st.integers(8, 80), st.floats(0.03, 0.3), st.booleans(),
+       st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_rcm_is_permutation_and_permute_roundtrips(n, density, symmetric, seed):
+    m = _mat(n, density, seed, symmetric=symmetric)
+    perm = rcm_permutation(m)
+    assert sorted(perm) == list(range(n))
+    mp = permute_csr(m, perm)
+    # P A P^T, exactly
+    assert np.array_equal(_dense(mp), _dense(m)[np.ix_(perm, perm)])
+    # inverse permutation restores the original bit-for-bit
+    iperm = np.empty(n, np.int64)
+    iperm[perm] = np.arange(n)
+    back = permute_csr(mp, iperm)
+    assert np.array_equal(back.indptr, m.indptr)
+    assert np.array_equal(back.indices, m.indices)
+    assert np.array_equal(back.data, m.data)
+
+
+def test_rcm_reduces_bandwidth_on_shuffled_band():
+    """A banded matrix under a random shuffle: RCM must recover a
+    bandwidth far below the shuffled one (the halo shrinks with it)."""
+    n = 128
+    base = _mat(n, 0.0, 3, symmetric=True, banded=True)
+    shuffle = np.random.default_rng(0).permutation(n)
+    shuffled = permute_csr(base, shuffle)
+    bw_shuffled = matrix_bandwidth(shuffled)
+    rec = permute_csr(shuffled, rcm_permutation(shuffled))
+    assert matrix_bandwidth(rec) < bw_shuffled // 2
+    # and the recovered band cuts a halo plan where the shuffle could not
+    def halo_width_1d(m, parts=8):
+        p1 = plan_1d(m, parts, balance="nnz", dtype=np.float64)
+        cp = commplan.compile_comm_plan_1d(
+            _cols_pad_1d(p1), np.asarray(p1.vals), p1.rows_per_tile, parts,
+            itemsize=8)
+        return cp.halo_width, cp.use_halo
+    w_shuf, halo_shuf = halo_width_1d(shuffled)
+    w_rcm, halo_rcm = halo_width_1d(rec)
+    assert w_rcm < w_shuf and halo_rcm
+    assert not halo_shuf
+
+
+# -- nnz-balanced 2D ----------------------------------------------------------
+
+
+@given(st.integers(16, 64), st.sampled_from([(2, 2), (4, 2), (2, 4)]),
+       st.floats(0.05, 0.3), st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_plan_2d_nnz_balanced_reconstructs_exactly(n, grid, density, seed):
+    pr, pc = grid
+    m = _mat(n, density, seed)
+    p = plan_2d(m, pr, pc, dtype=np.float64, balance="nnz")
+    assert p.n_padded % (pr * pc) == 0            # whole u shards
+    br, bc = p.block_rows, p.block_cols
+    cols, vals = np.asarray(p.cols), np.asarray(p.vals)
+    pad2g = (p.pad2g if p.pad2g is not None
+             else np.r_[np.arange(n), np.full(p.n_padded - n, n)])
+    # accumulate every stored entry into padded-global coordinates
+    full = np.zeros((p.n_padded, p.n_padded))
+    for i in range(pr):
+        for j in range(pc):
+            t = i * pc + j
+            rr = np.arange(br)[:, None].repeat(cols.shape[2], 1) + i * br
+            cc = cols[t] + j * bc
+            np.add.at(full, (rr, cc), np.where(vals[t] != 0, vals[t], 0.0))
+    valid = pad2g < n
+    rec = full[np.ix_(valid, valid)]
+    want = _dense(m)[np.ix_(pad2g[valid], pad2g[valid])]
+    assert np.array_equal(rec, want)
+    # padding rows/cols carry nothing
+    assert np.all(full[~valid] == 0) and np.all(full[:, ~valid] == 0)
+
+
+def test_plan_2d_uniform_degenerates():
+    """An nnz split that lands on the uniform geometry IS the uniform
+    plan (no pad2g), so uniform-dependent consumers keep working."""
+    m = laplacian_2d(16)                       # symmetric nnz profile
+    p = plan_2d(m, 2, 2, dtype=np.float64, balance="nnz")
+    assert p.pad2g is None and p.row_offsets is None
+
+
+# -- engine reorder round-trips ----------------------------------------------
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_engine_rcm_reorder_roundtrip_local(batched):
+    m = _mat(60, 0.08, 5, symmetric=True)
+    A = _dense(m)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((3, 60) if batched else (60,))
+    eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64,
+                     reorder="rcm")
+    # embed/extract is an exact round-trip through the row permutation
+    assert np.array_equal(
+        eng.from_device_vec(np.asarray(eng.to_device_vec(x))), x)
+    np.testing.assert_allclose(eng.spmv(x), x @ A.T if batched else A @ x,
+                               atol=1e-12)
+    b = x @ A.T if batched else A @ x
+    spec = SolveSpec(method="pcg", iters=120,
+                     batch=3 if batched else None)
+    xr, _ = eng.plan(spec)(b)
+    np.testing.assert_allclose(xr, x, atol=1e-7)
+    assert eng.plan(spec).info["reorder"] == "rcm"
+
+
+def test_engine_reorder_rejects_mismatched_spec():
+    m = _mat(32, 0.1, 1, symmetric=True)
+    eng = AzulEngine(m, mesh=None, dtype=np.float64)   # reorder="none"
+    with pytest.raises(ValueError, match="reorder"):
+        eng.plan(SolveSpec(method="pcg", reorder="rcm"))
+    eng_r = AzulEngine(m, mesh=None, dtype=np.float64, reorder="rcm")
+    with pytest.raises(ValueError, match="reorder"):
+        eng_r.plan(SolveSpec(method="pcg", reorder="none"))
+    # naming the engine's own reorder is fine
+    assert eng_r.plan(SolveSpec(method="pcg", reorder="rcm")).info[
+        "reorder"] == "rcm"
+
+
+def test_layout_validation():
+    m = _mat(32, 0.1, 1, symmetric=True)
+    eng = AzulEngine(m, mesh=None, dtype=np.float64)
+    # local engines have no NoC: halo is rejected, auto/dense lower dense
+    with pytest.raises(ValueError, match="halo"):
+        eng.plan(SolveSpec(method="pcg", layout="halo"))
+    assert eng.plan(SolveSpec(method="pcg")).info["layout"] == "dense"
+    with pytest.raises(ValueError, match="layout"):
+        eng.plan(SolveSpec(method="pcg", layout="mesh"))
+    with pytest.raises(ValueError, match="layout"):
+        AzulEngine(m, mesh=None, dtype=np.float64, layout="halo")
+    with pytest.raises(ValueError, match="reorder"):
+        AzulEngine(m, mesh=None, dtype=np.float64, reorder="amd")
+
+
+def test_comm_plan_decision_banded_vs_unstructured():
+    """The acceptance bar, host-side: banded structure -> halo plan with
+    modeled bytes strictly below dense; unstructured -> dense fallback."""
+    banded = laplacian_2d(32)                          # lap2d-style pattern
+    p1 = plan_1d(banded, 8, balance="nnz", dtype=np.float64)
+    cp = commplan.compile_comm_plan_1d(
+        _cols_pad_1d(p1), np.asarray(p1.vals), p1.rows_per_tile, 8,
+        itemsize=8)
+    assert cp.use_halo
+    assert cp.bytes_per_iter("halo") < cp.bytes_per_iter("dense")
+    assert cp.model()["plan"] == "halo"
+
+    rnd = _mat(256, 0.1, 7)                            # dense coupling
+    pr = plan_1d(rnd, 8, balance="nnz", dtype=np.float64)
+    cpr = commplan.compile_comm_plan_1d(
+        _cols_pad_1d(pr), np.asarray(pr.vals), pr.rows_per_tile, 8,
+        itemsize=8)
+    assert not cpr.use_halo
+    assert cpr.model()["plan"] == "dense"
+
+
+# -- multi-device end to end (small-mesh PR smoke) ---------------------------
+
+_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+import scipy.sparse as sp
+from repro.core.engine import AzulEngine
+from repro.core.formats import csr_from_scipy
+from repro.core.plan import SolveSpec
+from repro.data.matrices import laplacian_2d
+from repro.launch.mesh import make_mesh
+
+m = laplacian_2d(16)                  # n=256, banded
+n = m.shape[0]
+A = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+rng = np.random.default_rng(1)
+xt = rng.standard_normal(n); b = A @ xt
+Xt = rng.standard_normal((3, n)); Bk = Xt @ A.toarray().T
+
+# (4, 1): the banded halo pays on the row axis; (2, 2): dense fallback
+for shape, expect_halo in (((4, 1), True), ((2, 2), False)):
+    mesh = make_mesh(shape, ("data", "model")[: len(shape)])
+    for mode in ("2d", "1d"):
+        eng = AzulEngine(m, mesh=mesh, mode=mode, precond="jacobi",
+                         dtype=np.float64)
+        cp = eng.comm_plan
+        if mode == "1d":
+            assert cp.use_halo, (shape, mode, cp.deltas)   # P=4 row split
+        else:
+            assert cp.use_halo == expect_halo, (shape, mode, cp.deltas)
+        assert np.allclose(eng.spmv(xt), A @ xt, atol=1e-10), (shape, mode)
+        assert np.allclose(eng.spmv(Xt), Bk, atol=1e-10), (shape, mode)
+        # halo and dense programs agree BITWISE (same values, same sums)
+        ph = eng.plan(SolveSpec(method="pcg", iters=60, layout="halo"))
+        pd = eng.plan(SolveSpec(method="pcg", iters=60, layout="dense"))
+        xh, nh = ph(b); xd, nd = pd(b)
+        assert np.array_equal(xh, xd), (shape, mode, "x halo!=dense")
+        assert np.array_equal(nh, nd), (shape, mode, "norms halo!=dense")
+        assert ph.info["layout"] == "halo" and pd.info["layout"] == "dense"
+        assert ph.info["noc"]["halo_width"] == len(cp.deltas)
+        if cp.use_halo:
+            assert (ph.info["noc"]["bytes_per_iter_halo"]
+                    < ph.info["noc"]["bytes_per_iter_dense"]), (shape, mode)
+        # folded p-update inside the shard closure: fused-halo stops at the
+        # SAME iteration as the dense reference path, single and batched
+        for batch, rhs in ((None, b), (3, Bk)):
+            th = eng.plan(SolveSpec(method="pcg_tol", tol=1e-9,
+                                    max_iters=200, layout="halo",
+                                    fused=True, batch=batch))
+            tr = eng.plan(SolveSpec(method="pcg_tol", tol=1e-9,
+                                    max_iters=200, layout="dense",
+                                    fused=False, batch=batch))
+            xh2, _ = th(rhs); xr2, _ = tr(rhs)
+            assert np.array_equal(np.asarray(th.last_iters),
+                                  np.asarray(tr.last_iters)), (shape, mode)
+            assert np.allclose(xh2, xr2, atol=1e-9), (shape, mode)
+
+# auto layout picks halo where profitable and records it in the info
+mesh = make_mesh((4, 1), ("data", "model"))
+eng = AzulEngine(m, mesh=mesh, mode="1d", precond="jacobi", dtype=np.float64)
+pa = eng.plan(SolveSpec(method="pcg_tol", tol=1e-9, max_iters=200))
+assert pa.info["layout"] == "halo"
+xa, _ = pa(b)
+assert np.allclose(xa, xt, atol=1e-6)
+assert eng.last_solve_info["layout"] == "halo"
+assert eng.last_solve_info["noc"]["plan"] == "halo"
+
+# spec layout='auto' DEFERS to the engine-level pin: an engine forced to
+# dense stays dense even where the comm plan says halo would pay
+eng_d = AzulEngine(m, mesh=mesh, mode="1d", precond="jacobi",
+                   dtype=np.float64, layout="dense")
+assert eng_d.comm_plan.use_halo                      # halo WOULD pay...
+pd_ = eng_d.plan(SolveSpec(method="pcg", iters=60, layout="auto"))
+assert pd_.info["layout"] == "dense"                 # ...but the pin wins
+assert eng_d.plan(SolveSpec(method="pcg", iters=60,
+                            layout="halo")).info["layout"] == "halo"
+
+# RCM reorder on a mesh: same answers through the row_perm round-trip,
+# and block_ic0 keeps working on the reordered, nnz-balanced partition
+eng_r = AzulEngine(m, mesh=mesh, mode="2d", precond="block_ic0",
+                   dtype=np.float64, reorder="rcm")
+pr_ = eng_r.plan(SolveSpec(method="pcg_tol", tol=1e-9, max_iters=300))
+xr, _ = pr_(b)
+assert np.allclose(xr, xt, atol=1e-6), "rcm dist solve"
+assert np.allclose(eng_r.spmv(Xt), Bk, atol=1e-10), "rcm dist spmm"
+assert pr_.info["reorder"] == "rcm"
+
+# single-tile axes: a (1, 4) grid has pr == 1 -- transpose and pulls are
+# identities, the program still matches the oracle
+mesh1 = make_mesh((1, 4), ("data", "model"))
+eng1 = AzulEngine(m, mesh=mesh1, mode="2d", precond="jacobi", dtype=np.float64)
+assert np.allclose(eng1.spmv(xt), A @ xt, atol=1e-10), "pr==1 spmv"
+x1, _ = eng1.plan(SolveSpec(method="pcg", iters=120))(b)
+assert np.allclose(x1, xt, atol=1e-6), "pr==1 solve"
+
+print("COMMPLAN_DIST_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.dist
+def test_commplan_multidevice_small_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    env["JAX_ENABLE_X64"] = "1"
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=560,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "COMMPLAN_DIST_OK" in r.stdout

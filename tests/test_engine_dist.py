@@ -52,7 +52,10 @@ for mode in ("2d", "1d"):
     xk0, _ = eng.solve(Bk, x0=np.zeros(n), method="pcg", iters=80)
     assert np.allclose(xk0, X_ref, atol=1e-6), f"{mode} batched b + shared x0"
 
-eng2 = AzulEngine(m, mesh=mesh, mode="2d", precond="block_ic0", dtype=np.float64)
+# balance="rows": this engine also runs build_sptrsv below, which needs
+# uniform row blocks (the default nnz balance may shift block boundaries)
+eng2 = AzulEngine(m, mesh=mesh, mode="2d", precond="block_ic0", dtype=np.float64,
+                  balance="rows")
 x2, n2 = eng2.solve(b, method="pcg", iters=60)
 assert np.abs(x2 - x_true).max() < 1e-6, "block_ic0 dist"
 

@@ -1,12 +1,69 @@
 """NoC layer edge cases under real multi-device shard_map (subprocess with
 forced host devices): mesh_transpose on non-square meshes, gather/scatter of
-batch-stacked shards, and the 1D-plan fallback with batched vectors."""
+batch-stacked shards, reverse_vector / pull_shard semantics, and the
+1D-plan fallback with batched vectors.  Single-tile-axis identities (p == 1
+must emit NO ppermute) run in-process on a (1, 1) mesh."""
 
 import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import noc
+from repro.core.engine import _shard_map
+from repro.launch.mesh import make_mesh
+
+
+def test_single_tile_axes_are_identity_without_ppermute():
+    """p == 1 along every axis: neighbor_shift / pull_shard /
+    mesh_transpose / reverse_vector must be value-identities AND emit no
+    collective-permute at all (the NoC hop disappears, not a no-op
+    message).  Runs on the ordinary single-device test process."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    x = jnp.arange(12, dtype=jnp.float64)
+    spec = P(("data", "model"))
+
+    cases = {
+        "neighbor_shift": lambda s: noc.neighbor_shift(s, "data", 1),
+        "pull_shard": lambda s: noc.pull_shard(s, ("data", "model"), 1),
+        "mesh_transpose": lambda s: noc.mesh_transpose(s, ("data",), ("model",)),
+    }
+    for name, fn in cases.items():
+        f = jax.jit(_shard_map(fn, mesh, in_specs=spec, out_specs=spec))
+        assert np.array_equal(np.asarray(f(x)), np.asarray(x)), name
+        hlo = f.lower(x).as_text()
+        assert "collective-permute" not in hlo and "ppermute" not in hlo, name
+
+    # reverse_vector on one tile is the pure local flip -- still no hop
+    f = jax.jit(_shard_map(lambda s: noc.reverse_vector(s, ("data", "model")),
+                           mesh, in_specs=spec, out_specs=spec))
+    assert np.array_equal(np.asarray(f(x)), np.asarray(x)[::-1])
+    hlo = f.lower(x).as_text()
+    assert "collective-permute" not in hlo and "ppermute" not in hlo
+
+    # batched shards flip the vector axis, never the batch axis
+    xb = jnp.stack([x, 2.0 * x])
+    fb = jax.jit(_shard_map(
+        lambda s: noc.reverse_vector(s, ("data", "model"), vec_axis=1),
+        mesh, in_specs=P(None, ("data", "model")),
+        out_specs=P(None, ("data", "model"))))
+    assert np.array_equal(np.asarray(fb(xb)), np.asarray(xb)[:, ::-1])
+
+
+def test_zero_shift_elided():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    x = jnp.arange(8, dtype=jnp.float64)
+    f = jax.jit(_shard_map(lambda s: noc.neighbor_shift(s, "data", 0),
+                           mesh, in_specs=P(("data", "model")),
+                           out_specs=P(("data", "model"))))
+    assert np.array_equal(np.asarray(f(x)), np.asarray(x))
+    assert "collective-permute" not in f.lower(x).as_text()
 
 _SCRIPT = r"""
 import numpy as np, jax, jax.numpy as jnp
@@ -66,6 +123,34 @@ for (pr, pc) in ((2, 4), (4, 2), (2, 2)):
     )
     gs = np.asarray(jax.jit(fs)(jnp.asarray(xb)))
     assert np.allclose(gs, pr * pc * xb), f"batched reduce_scatter {pr}x{pc}"
+
+    # reverse_vector: global reversal of contiguous shards, single + batched
+    frv = _shard_map(
+        lambda s: noc.reverse_vector(s, ("data", "model")),
+        mesh, in_specs=P(("data", "model")), out_specs=P(("data", "model")),
+    )
+    grv = np.asarray(jax.jit(frv)(jnp.asarray(x)))
+    assert np.array_equal(grv, x[::-1]), f"reverse_vector {pr}x{pc}"
+    frvb = _shard_map(
+        lambda s: noc.reverse_vector(s, ("data", "model"), vec_axis=1),
+        mesh, in_specs=P(None, ("data", "model")),
+        out_specs=P(None, ("data", "model")),
+    )
+    grvb = np.asarray(jax.jit(frvb)(jnp.asarray(xb)))
+    assert np.array_equal(grvb, xb[:, ::-1]), f"batched reverse_vector {pr}x{pc}"
+
+    # pull_shard: tile t receives shard (t + d) % P, for every delta
+    Pn = pr * pc
+    for d in (1, 2, Pn - 1, Pn):                     # Pn: identity wrap
+        fp = _shard_map(
+            lambda s, d=d: noc.pull_shard(s, ("data", "model"), d),
+            mesh, in_specs=P(("data", "model")), out_specs=P(("data", "model")),
+        )
+        gp = np.asarray(jax.jit(fp)(jnp.asarray(x)))
+        want_p = np.concatenate([
+            x[((t + d) % Pn) * u:(((t + d) % Pn) + 1) * u] for t in range(Pn)
+        ])
+        assert np.array_equal(gp, want_p), f"pull_shard d={d} {pr}x{pc}"
 
 # --- non-square 2d engines + 1D-plan fallback, batched end to end ----------
 rng = np.random.default_rng(0)
