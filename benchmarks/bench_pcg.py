@@ -274,6 +274,71 @@ def run_tol_solves(
     return rows, payload
 
 
+def run_pipelined_solves(
+    tol: float = 1e-8, max_iters: int = 400,
+    matrices=("lap2d_32", "banded_1k"),
+    preconds=("jacobi", "block_ic0"),
+) -> tuple[list[tuple[str, float, str]], list[dict]]:
+    """Pipelined vs standard PCG in tolerance mode: the PR 6 promotion's
+    regression record.  Per (matrix, precond): iteration counts of BOTH
+    methods (discrete -- gated exactly, like ``tol_solves``), the solution
+    agreement between the two recurrences, the trace-head check (the
+    pipelined r0 comes from the stacked init reduction and must equal
+    ``||b||`` -- the injected-reduction bug regression), and the structural
+    reduction count the method exists for: ONE stacked all-reduce per
+    iteration against standard PCG's two."""
+    rows, payload = [], []
+    rng = np.random.default_rng(0)
+    mats = suite("small")
+    for name in matrices:
+        m = mats[name]
+        a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+        b = a @ rng.standard_normal(m.shape[0])
+        bn = float(np.linalg.norm(b))
+        for pc in preconds:
+            eng = AzulEngine(m, mesh=None, precond=pc, dtype=np.float64)
+
+            def timed(method):
+                plan = eng.plan(SolveSpec(method=method, tol=tol,
+                                          max_iters=max_iters))
+                plan(b)                                     # warm jit
+                t0 = time.perf_counter()
+                x, norms = plan(b)
+                dt = time.perf_counter() - t0
+                return dt, x, int(np.asarray(plan.last_iters)), norms
+
+            dt_p, x_p, it_p, trace_p = timed("pcg_pipelined_tol")
+            dt_s, x_s, it_s, _ = timed("pcg_tol")
+            entry = {
+                "matrix": name,
+                "precond": pc,
+                "n": int(m.shape[0]),
+                "tol": tol,
+                "iters_pipelined": it_p,
+                "iters_pcg": it_s,
+                "x_vs_pcg_maxdiff": float(np.abs(x_p - x_s).max()),
+                # trace head = ||b||: the stacked init reduction's rr slot
+                "r0_reldiff": abs(float(np.asarray(trace_p)[0]) - bn) / bn,
+                # the communication structure, not a measurement: the
+                # stacked 3-way pdots is ONE collective; standard PCG
+                # carries two dependent reductions per iteration
+                "reductions_per_iter_pipelined": 1,
+                "reductions_per_iter_pcg": 2,
+                "us_per_iter_pipelined": round(dt_p / max(it_p, 1) * 1e6, 3),
+                "us_per_iter_pcg": round(dt_s / max(it_s, 1) * 1e6, 3),
+                "trace_points": _trace_points(trace_p, it_p),
+                "trace_spark": sparkline(trace_p, it_p),
+            }
+            payload.append(entry)
+            rows.append((
+                f"pcg_pipelined_{name}_{pc}", dt_p / max(it_p, 1) * 1e6,
+                f"iters={it_p} iters_pcg={it_s} "
+                f"x_vs_pcg_maxdiff={entry['x_vs_pcg_maxdiff']:.2e} "
+                f"r0_reldiff={entry['r0_reldiff']:.2e}",
+            ))
+    return rows, payload
+
+
 def run_noc_plans(
     matrices=("lap2d_32", "banded_1k", "rspd_1k"),
     reorders=("none", "rcm"),
@@ -331,19 +396,21 @@ def run_noc_plans(
 
 
 def collect_json(fused_payload, batch_payload, tol_payload=None,
-                 noc_payload=None) -> dict:
+                 noc_payload=None, pipelined_payload=None) -> dict:
     """Assemble the machine-readable perf-trajectory record (BENCH_pcg.json
     schema: see README "Performance").  v2 added the tolerance-solve section
     (fused-vs-reference iteration counts, the regression gate's exact-match
-    signal); v3 adds the comm-plan section (modeled NoC bytes/iteration,
+    signal); v3 added the comm-plan section (modeled NoC bytes/iteration,
     halo-vs-dense plan choice per partition -- host-deterministic, gated
-    exactly)."""
+    exactly); v4 adds the pipelined section (pipelined-vs-standard PCG
+    iteration counts, reduction structure, the r0 trace-head regression)
+    and the comm-overlap fields on the noc_plans entries."""
     import jax
 
     from repro.kernels import ops
 
     return {
-        "schema": "bench_pcg/v3",
+        "schema": "bench_pcg/v4",
         "backend": jax.default_backend(),
         "kernel_mode": ops.backend_mode(),
         "x64": bool(jax.config.jax_enable_x64),
@@ -351,6 +418,7 @@ def collect_json(fused_payload, batch_payload, tol_payload=None,
         "batch_sweep": batch_payload,
         "tol_solves": tol_payload or [],
         "noc_plans": noc_payload or [],
+        "pipelined": pipelined_payload or [],
     }
 
 
@@ -373,7 +441,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     rows = [] if args.skip_convergence else run()
-    fused_payload, batch_payload, tol_payload, noc_payload = [], [], [], []
+    fused_payload, batch_payload, tol_payload = [], [], []
+    noc_payload, pipe_payload = [], []
     if args.fused_compare or args.json:
         mats = tuple(s for s in args.matrices.split(",") if s)
         frows, fused_payload = run_fused_compare(iters=args.iters, matrices=mats)
@@ -382,6 +451,10 @@ def main(argv=None) -> int:
             matrices=tuple(m for m in mats if m in suite("small"))
         )
         rows += trows
+        prows, pipe_payload = run_pipelined_solves(
+            matrices=tuple(m for m in mats if m in suite("small"))
+        )
+        rows += prows
         nrows, noc_payload = run_noc_plans(
             matrices=tuple(m for m in mats if m in suite("small"))
         )
@@ -399,7 +472,7 @@ def main(argv=None) -> int:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(collect_json(fused_payload, batch_payload, tol_payload,
-                                   noc_payload),
+                                   noc_payload, pipe_payload),
                       f, indent=1)
         print(f"# wrote {args.json}")
     return 0

@@ -20,12 +20,18 @@ machines:
   exact match -- the model only moves when someone changes the fusion
   itself, which should be a deliberate, baseline-updating act.
 * **Communication plans** (``noc_plans``): exact match on the plan choice,
-  halo width and modeled bytes/iteration per (matrix, reorder, mode,
-  grid).  The comm-plan compile is pure host NumPy, so any drift is a real
-  behaviour change; in particular a **dense fallback where a halo plan
-  previously applied** (halo -> dense) is flagged as a halo-plan
-  regression -- the partition/reordering stopped producing a halo sparse
-  enough to pay.
+  halo width, modeled bytes/iteration and the comm-overlap fields
+  (interior nnz fraction, hidden/exposed gather words, overlap
+  efficiency) per (matrix, reorder, mode, grid).  The comm-plan compile is
+  pure host NumPy, so any drift is a real behaviour change; in particular
+  a **dense fallback where a halo plan previously applied** (halo ->
+  dense) is flagged as a halo-plan regression -- the partition/reordering
+  stopped producing a halo sparse enough to pay.
+* **Pipelined PCG** (``pipelined``): iteration counts of the pipelined
+  and standard tolerance solves (exact), the per-iteration reduction
+  structure (exact -- 1 stacked collective vs 2), the r0 trace-head
+  agreement with ``||b||`` and the solution agreement between the two
+  recurrences (absolute thresholds).
 * **Timings** (``us_per_iter*``): within ``--timing-ratio`` (default 10x)
   of baseline.  Interpret-mode CPU timings are noisy and machine-dependent;
   the generous ratio still catches order-of-magnitude regressions (an
@@ -57,6 +63,11 @@ import shutil
 import sys
 
 EQUIV_TOL = 1e-8     # fused-vs-reference agreement fields (f64 payloads)
+# pipelined vs standard PCG run DIFFERENT recurrences to the same relative
+# tolerance: both solutions sit within tol of truth but not bitwise of each
+# other, so their agreement bound is looser than EQUIV_TOL (observed
+# ~1e-12 on the smoke suite; 1e-6 leaves conditioning headroom)
+PIPE_X_TOL = 1e-6
 
 
 def _index(entries: list[dict], keys: tuple[str, ...]) -> dict:
@@ -155,8 +166,28 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0) -> Gate:
         else:
             g.exact(where, "plan", ce.get("plan"), be.get("plan"))
         for field in ("halo_width", "gather_words_halo", "gather_words_dense",
-                      "bytes_per_iter_halo", "bytes_per_iter_dense"):
+                      "bytes_per_iter_halo", "bytes_per_iter_dense",
+                      "interior_frac_nnz", "overlap_interior_words",
+                      "overlap_hidden_words", "overlap_exposed_words",
+                      "overlap_efficiency"):
             g.exact(where, field, ce.get(field), be.get(field))
+
+    for where, ce, be in g.section("pipelined", ("matrix", "precond"),
+                                   cur.get("pipelined", []),
+                                   base.get("pipelined", [])):
+        g.exact(where, "iters_pipelined", ce.get("iters_pipelined"),
+                be.get("iters_pipelined"))
+        g.exact(where, "iters_pcg", ce.get("iters_pcg"), be.get("iters_pcg"))
+        g.exact(where, "reductions_per_iter_pipelined",
+                ce.get("reductions_per_iter_pipelined"), 1)
+        g.exact(where, "reductions_per_iter_pcg",
+                ce.get("reductions_per_iter_pcg"), 2)
+        g.leq(where, "r0_reldiff", ce.get("r0_reldiff"), EQUIV_TOL)
+        g.leq(where, "x_vs_pcg_maxdiff", ce.get("x_vs_pcg_maxdiff"),
+              PIPE_X_TOL)
+        g.timing(where, "us_per_iter_pipelined",
+                 ce.get("us_per_iter_pipelined"),
+                 be.get("us_per_iter_pipelined"))
     return g
 
 
@@ -182,9 +213,10 @@ def main(argv=None) -> int:
         with open(args.current) as f:
             cur = json.load(f)
         problems = []
-        if cur.get("schema") != "bench_pcg/v3":
+        if cur.get("schema") != "bench_pcg/v4":
             problems.append(f"unexpected schema {cur.get('schema')!r}")
-        for section in ("fused_vs_unfused", "tol_solves", "noc_plans"):
+        for section in ("fused_vs_unfused", "tol_solves", "noc_plans",
+                        "pipelined"):
             if not cur.get(section):
                 problems.append(f"section {section!r} is empty/missing")
         if problems:

@@ -76,10 +76,13 @@ def main(argv=None) -> None:
             trows, tol_payload = bench_pcg.run_tol_solves(
                 max_iters=120 if args.smoke else 400, matrices=tol_mats
             )
+            prows, pipe_payload = bench_pcg.run_pipelined_solves(
+                max_iters=120 if args.smoke else 400, matrices=tol_mats
+            )
             # comm-plan traffic records are host-side NumPy (no devices,
             # milliseconds) -- full coverage even in the smoke run
             nrows, noc_payload = bench_pcg.run_noc_plans()
-            for name, us, derived in frows + brows + trows + nrows:
+            for name, us, derived in frows + brows + trows + prows + nrows:
                 print(f"{name},{us:.1f},{derived}")
             for e in tol_payload:
                 # tolerance-mode convergence from the bounded trace ring
@@ -88,7 +91,8 @@ def main(argv=None) -> None:
             with open(args.json, "w") as f:
                 json.dump(
                     bench_pcg.collect_json(fused_payload, batch_payload,
-                                           tol_payload, noc_payload),
+                                           tol_payload, noc_payload,
+                                           pipe_payload),
                     f, indent=1)
             print(f"# wrote {args.json}")
         except Exception:

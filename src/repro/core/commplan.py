@@ -22,7 +22,18 @@ plan, it compiles ONCE (pure NumPy) the per-tile halo structure --
   ``use_halo`` decision: the halo plan applies only when it moves strictly
   fewer shard-words than the dense all-gather (otherwise the engine keeps
   the dense collectives -- e.g. an unstructured matrix whose tiles
-  reference every remote shard).
+  reference every remote shard);
+* the **interior/frontier row split** for communication hiding: a row is
+  *interior* when every stored nonzero references the tile's own shard
+  (its halo-remapped column ids all land in slot 0), *frontier* otherwise.
+  The engine's overlapped matvec computes the interior rows against
+  ``[own shard, zeros]`` -- no data dependence on the in-flight
+  ``ppermute`` pulls -- and adds the frontier rows once the halo lands;
+  by SpMV linearity the split sum is value-identical to the single-pass
+  halo SpMV.  The split also yields the **modeled overlap efficiency**:
+  how many of the halo's gather words the interior compute stream can
+  hide (``overlap_hidden_words`` / ``overlap_exposed_words``),
+  host-deterministic so the CI gate compares it exactly.
 
 The engine (:mod:`repro.core.engine`) builds its ``shard_map`` SpMV
 closures on this schedule when a plan's ``layout`` resolves to ``"halo"``
@@ -60,6 +71,10 @@ class CommPlan(NamedTuple):
                     the two layouts (2d: mesh transpose + output scatter).
     ``use_halo``    True when the halo schedule moves strictly fewer
                     gather-stage words than the dense all-gather.
+    ``interior_mask``  (tiles, rows_p) bool: True for rows whose stored
+                    nonzeros all reference the tile's own shard (every
+                    halo-remapped column id < u) -- computable before the
+                    pulled shards land.
     """
 
     mode: str                     # "1d" | "2d"
@@ -70,6 +85,9 @@ class CommPlan(NamedTuple):
     itemsize: int
     fixed_words: int
     use_halo: bool
+    interior_mask: np.ndarray | None = None   # (tiles, rows_p) bool
+    interior_nnz: int = 0         # stored nonzeros in interior rows
+    total_nnz: int = 0            # stored nonzeros, all rows
 
     @property
     def halo_width(self) -> int:
@@ -90,6 +108,40 @@ class CommPlan(NamedTuple):
                   else self.gather_words_dense)
         return (self.fixed_words + gather) * self.itemsize
 
+    @property
+    def interior_frac_nnz(self) -> float:
+        """Fraction of stored nonzeros in interior rows (the compute
+        stream available to hide the pull stage behind)."""
+        if not self.total_nnz:
+            return 1.0
+        return round(self.interior_nnz / self.total_nnz, 4)
+
+    @property
+    def overlap_interior_words(self) -> int:
+        """Per-tile interior MACs a tile streams while its pulls fly --
+        the time budget (1 word/cycle NoC, 1 MAC/cycle PE, the paper's
+        normalization) available for hiding the gather stage."""
+        tiles = max(self.cols_halo.shape[0], 1)
+        return int(self.interior_nnz // tiles)
+
+    @property
+    def overlap_hidden_words(self) -> int:
+        """Gather words the interior stream covers: min(gather, interior
+        work).  The transpose/scatter stages stay exposed (they bound the
+        SpMV's output, not its input)."""
+        return min(self.gather_words_halo, self.overlap_interior_words)
+
+    @property
+    def overlap_exposed_words(self) -> int:
+        """Gather words left on the critical path after overlap."""
+        return self.gather_words_halo - self.overlap_hidden_words
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """hidden / gather in [0, 1]; 1.0 when there is nothing to pull."""
+        g = self.gather_words_halo
+        return round(self.overlap_hidden_words / g, 4) if g else 1.0
+
     def model(self) -> dict:
         """The benchmark/regression-gate record: plan choice, halo width,
         and both layouts' modeled traffic (host-deterministic, so the CI
@@ -107,6 +159,11 @@ class CommPlan(NamedTuple):
             "bytes_per_iter_halo": int(halo),
             "bytes_per_iter_dense": int(dense),
             "reduction": round(dense / halo, 3) if halo else float(dense > 0),
+            "interior_frac_nnz": float(self.interior_frac_nnz),
+            "overlap_interior_words": int(self.overlap_interior_words),
+            "overlap_hidden_words": int(self.overlap_hidden_words),
+            "overlap_exposed_words": int(self.overlap_exposed_words),
+            "overlap_efficiency": float(self.overlap_efficiency),
         }
 
 
@@ -158,6 +215,23 @@ def _deltas_from_need(need: np.ndarray, tile_coord: np.ndarray,
     return tuple(sorted(ds))
 
 
+def _interior_split(cols_halo: np.ndarray, vals: np.ndarray, u: int):
+    """(mask, interior_nnz, total_nnz): the interior/frontier row split.
+
+    A row is interior iff every *stored* nonzero's halo-remapped column
+    lands in slot 0 (``col < u``, the tile's own shard); padding entries
+    are already pinned to column 0 by :func:`halo_remap_cols`, so they
+    never mark a row remote.  Mode-independent: slot 0 means "own shard"
+    under both the 1d and 2d remaps.
+    """
+    live = np.asarray(vals) != 0
+    remote = (cols_halo >= u) & live
+    mask = ~remote.any(axis=2)
+    total = int(live.sum())
+    interior = int((live & mask[:, :, None]).sum())
+    return mask, interior, total
+
+
 def _decide(deltas: tuple, p: int) -> bool:
     """Halo pays only when it moves strictly fewer shard-words than the
     dense all-gather; ties (and p == 1) keep the single fused collective."""
@@ -178,8 +252,11 @@ def compile_comm_plan_1d(cols_pad: np.ndarray, vals: np.ndarray, u: int,
     need = _needed_shards(cols_pad, vals, u, parts)
     deltas = _deltas_from_need(need, coord, parts)
     cols_halo = halo_remap_cols(cols_pad, vals, u, parts, deltas, coord)
+    mask, interior, total = _interior_split(cols_halo, vals, u)
     return CommPlan("1d", deltas, cols_halo, parts, u, itemsize,
-                    fixed_words=0, use_halo=_decide(deltas, parts))
+                    fixed_words=0, use_halo=_decide(deltas, parts),
+                    interior_mask=mask, interior_nnz=interior,
+                    total_nnz=total)
 
 
 def compile_comm_plan_2d(cols: np.ndarray, vals: np.ndarray, pr: int,
@@ -209,5 +286,8 @@ def compile_comm_plan_2d(cols: np.ndarray, vals: np.ndarray, pr: int,
     # noc.mesh_transpose elides it, so it costs nothing on the NoC;
     # scatter: ring reduce-scatter of br partials receives (pc-1) u-words
     fixed = (u if (pr > 1 and pc > 1) else 0) + (pc - 1) * u
+    mask, interior, total = _interior_split(cols_halo, vals, u)
     return CommPlan("2d", deltas, cols_halo, pr, u, itemsize,
-                    fixed_words=fixed, use_halo=_decide(deltas, pr))
+                    fixed_words=fixed, use_halo=_decide(deltas, pr),
+                    interior_mask=mask, interior_nnz=interior,
+                    total_nnz=total)

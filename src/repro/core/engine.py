@@ -139,6 +139,21 @@ def local_sptrsv(cols, vals, diag_inv, b, sched_rows):
     return x[:rows_p]
 
 
+def _ell_block_apply(cols_loc, vals_loc, xj):
+    """The per-tile ELL gather-and-reduce on one (1, rows, w) block shard:
+    Pallas kernels when active, the jnp reference otherwise.  ``xj`` is the
+    assembled x buffer in solver layout ((m,) or (k, m)); kernel calls
+    transpose batched inputs to the (m, k) kernel layout."""
+    from ..kernels import ops
+    if xj.ndim == 2:                              # (k, bc) stacked
+        if ops.kernels_active():                  # Pallas path (TPU)
+            return ops.ell_spmm(cols_loc[0], vals_loc[0], xj.T).T
+        return spmm_ell_padded(cols_loc[0], vals_loc[0], xj)
+    if ops.kernels_active():
+        return ops.ell_spmv(cols_loc[0], vals_loc[0], xj)
+    return spmv_ell_padded(cols_loc[0], vals_loc[0], xj)
+
+
 def _host_diag(m: CSR, r0: int, r1: int) -> np.ndarray:
     """Diagonal entries of rows [r0, r1) (0.0 where absent), host side.
 
@@ -251,6 +266,7 @@ class AzulEngine:
         self._pad2g = None             # padded->global row map (1d / nnz-2d)
         self.comm_plan = None          # compiled halo schedule (dist modes)
         self._cols_halo_dev = None     # lazily device_put halo-remapped cols
+        self._vals_split_dev = None    # lazily split interior/frontier vals
         self._compiled: dict = {}      # spmv/spmm programs (vector ops)
         self._trsv_cache: dict = {}
         # spec-keyed compiled solve plans (see repro.core.plan): replaces
@@ -510,15 +526,7 @@ class AzulEngine:
         col_axis = col_axes[0] if len(col_axes) == 1 else col_axes
         deltas = self.comm_plan.deltas if layout == "halo" else ()
 
-        def _local(cols_loc, vals_loc, xj):
-            from ..kernels import ops
-            if xj.ndim == 2:                              # (k, bc) stacked
-                if ops.kernels_active():                  # Pallas path (TPU)
-                    return ops.ell_spmm(cols_loc[0], vals_loc[0], xj.T).T
-                return spmm_ell_padded(cols_loc[0], vals_loc[0], xj)
-            if ops.kernels_active():
-                return ops.ell_spmv(cols_loc[0], vals_loc[0], xj)
-            return spmv_ell_padded(cols_loc[0], vals_loc[0], xj)
+        _local = _ell_block_apply
 
         def _pull(x_loc, axes, va):
             # the halo buffer: own shard at slot 0, then one bounded
@@ -559,19 +567,81 @@ class AzulEngine:
         return dot
 
     def _dot2(self):
-        """Two dots, ONE collective (pipelined-CG reduction fusion)."""
+        """N stacked dots, ONE collective (pipelined-CG reduction fusion).
+        Accepts flat ``(a1, b1, a2, b2, ...)`` pairs and psums the stacked
+        partials once; the pipelined recurrence rides its whole per-
+        iteration reduction load ([gamma, delta, rr]) on a single call."""
         axes = self._all_axes
 
-        def dot2(a1, b1, a2, b2):
-            kd = a1.ndim > 1
+        def dot2(*vs):
+            kd = vs[0].ndim > 1
             return lax.psum(
-                jnp.stack([
-                    jnp.sum(a1 * b1, axis=-1, keepdims=kd),
-                    jnp.sum(a2 * b2, axis=-1, keepdims=kd),
-                ]),
+                jnp.stack([jnp.sum(a * b, axis=-1, keepdims=kd)
+                           for a, b in zip(vs[::2], vs[1::2])]),
                 axes,
             )
         return dot2
+
+    def _mk_matvec_split(self):
+        """The communication-hiding SpMV as a ``(start, finish)`` pair
+        (halo layout only; see ``commplan`` on the interior/frontier
+        split).
+
+        ``start(x_loc)`` issues the communication for x -- the 2d mesh
+        transpose plus the compiled ``ppermute`` pull schedule -- and
+        returns the in-flight halo tuple ``(own, pulled...)``.
+        ``finish(halo, cols_loc, vi_loc, vf_loc)`` computes
+
+            y = A_interior @ [own, 0...] + A_frontier @ [own, pulled...]
+
+        The interior pass has NO data dependence on the pulled shards, so
+        the latency-hiding scheduler is free to stream it while the
+        permutes fly; ``vi``/``vf`` zero complementary row sets of the
+        same val blocks, so by SpMV linearity the sum is value-identical
+        to the single-pass halo SpMV.  The pipelined solver calls
+        ``start`` on the NEXT iteration's operand at the tail of each
+        step, putting the whole update/reduction/psolve tail between
+        issue and use (double-buffered halo)."""
+        row_axes, col_axes, mode = self.row_axes, self.col_axes, self.mode
+        col_axis = col_axes[0] if len(col_axes) == 1 else col_axes
+        deltas = self.comm_plan.deltas
+        pull_axes = row_axes if mode == "2d" else self._all_axes
+
+        def start(x_loc):
+            xc = (noc.mesh_transpose(x_loc, row_axes, col_axes)
+                  if mode == "2d" else x_loc)
+            return (xc,) + tuple(
+                noc.pull_shard(xc, pull_axes, d) for d in deltas
+            )
+
+        def finish(halo, cols_loc, vi_loc, vf_loc):
+            xc, pulled = halo[0], halo[1:]
+            va = xc.ndim - 1
+            x_int = jnp.concatenate(
+                [xc] + [jnp.zeros_like(s) for s in pulled], axis=va)
+            x_ext = jnp.concatenate([xc, *pulled], axis=va)
+            y = (_ell_block_apply(cols_loc, vi_loc, x_int)
+                 + _ell_block_apply(cols_loc, vf_loc, x_ext))
+            if mode == "2d":
+                return noc.reduce_scatter_along(y, col_axis, vec_axis=va)
+            return y
+
+        return start, finish
+
+    def _split_vals(self):
+        """Interior/frontier val blocks for the overlap lowering,
+        device-put on FIRST use: the split doubles the val footprint, so
+        dense plans and non-overlapping methods never pay it.  Each block
+        keeps the full ELL shape with the complementary row set zeroed
+        (``comm_plan.interior_mask``)."""
+        if self._vals_split_dev is None:
+            vals = np.asarray(self.partition_plan.vals)
+            mask = self.comm_plan.interior_mask[:, :, None]
+            vi = np.where(mask, vals, 0).astype(vals.dtype)
+            vf = np.where(mask, 0, vals).astype(vals.dtype)
+            self._vals_split_dev = (self._put(vi, self._blk_spec),
+                                    self._put(vf, self._blk_spec))
+        return self._vals_split_dev
 
     # -- public ops ---------------------------------------------------------
 
@@ -693,11 +763,23 @@ class AzulEngine:
         }
         if self.comm_plan is not None:
             # the modeled NoC record: halo width + bytes/iteration of the
-            # layout this plan actually lowered to (and the alternative)
+            # layout this plan actually lowered to (and the alternative),
+            # plus the overlap model and whether THIS plan lowered the
+            # split communication-hiding matvec
             noc_model = self.comm_plan.model()
             noc_model["plan"] = spec.layout
+            noc_model["comm_overlap"] = self._overlaps(sdef, spec, kind)
             info["noc"] = noc_model
         return SolvePlan(self, spec, fn, info, cell)
+
+    @staticmethod
+    def _overlaps(sdef, spec: SolveSpec, kind: str) -> bool:
+        """Whether a plan lowers the split communication-hiding matvec:
+        the method's recurrence must consume it (``comm_overlap``), the
+        layout must be the compiled pull schedule, and the lowering must
+        build a shard substrate to hang ``matvec_start``/``finish`` on."""
+        return (sdef.comm_overlap and spec.layout == "halo"
+                and kind in ("fused_shard", "fused_shard_ic0"))
 
     def _lower_local(self, spec: SolveSpec, sdef, kind: str, cell: list):
         """Single-device program: padded-ELL closures + fused substrate
@@ -762,6 +844,16 @@ class AzulEngine:
             extra_args = self._pc_l + self._pc_u + (self._pc_k,)
             extra_specs = (s3, s3, s2, s3, s3, s3, s2, s3, vec)
 
+        # communication hiding: the split val blocks ride as the LAST two
+        # operands (the precond operand indices above stay stable) and the
+        # shard substrate grows matvec_start/finish over them
+        overlap = self._overlaps(sdef, spec, kind)
+        if overlap:
+            vi_dev, vf_dev = self._split_vals()
+            extra_args = extra_args + (vi_dev, vf_dev)
+            extra_specs = extra_specs + (blk, blk)
+            mv_start, mv_finish = self._mk_matvec_split()
+
         psum_axes = self._all_axes
 
         def prog(b_loc, x0_loc, cols_loc, vals_loc, *extra):
@@ -809,6 +901,13 @@ class AzulEngine:
                 # triangular solves as the (collective-free) psolve
                 sub = fused_shard_ic0_substrate(
                     amv, ps, lambda s: lax.psum(s, psum_axes)
+                )
+            if overlap:
+                vi_loc, vf_loc = extra[-2], extra[-1]
+                sub = sub._replace(
+                    matvec_start=mv_start,
+                    matvec_finish=lambda h: mv_finish(h, cols_loc, vi_loc,
+                                                      vf_loc),
                 )
             ctx = registry.SolveContext(
                 matvec=amv, psolve=ps, dinv=dinv_loc, dot=dot, dot2=dot2,

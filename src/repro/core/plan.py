@@ -90,9 +90,10 @@ def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
     Canonicalization is what kills the stringly-typed cache-key fragility:
     tolerance fields are meaningful only on tolerance methods (elsewhere
     they are forced to None), ``iters`` is folded into ``max_iters`` for
-    tolerance methods, precond aliases resolve to registry names, and the
-    tri-state fused knob becomes the resolved bool.  Equal configurations
-    therefore collapse to equal specs -- and one compiled plan."""
+    tolerance methods, method/precond aliases resolve to registry names
+    (``pcg_pipe`` and ``pcg_pipelined`` share one plan), and the tri-state
+    fused knob becomes the resolved bool.  Equal configurations therefore
+    collapse to equal specs -- and one compiled plan."""
     sdef = registry.get_solver(spec.method)
     pdef = registry.get_precond(engine.precond)
     if spec.precond is not None:
@@ -134,8 +135,8 @@ def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
         iters = max_iters          # one budget field: iters mirrors the cap
     else:
         tol, max_iters, iters = None, None, int(spec.iters)
-    return replace(spec, precond=pdef.name, iters=iters, tol=tol,
-                   max_iters=max_iters, fused=fused, layout=layout,
+    return replace(spec, method=sdef.name, precond=pdef.name, iters=iters,
+                   tol=tol, max_iters=max_iters, fused=fused, layout=layout,
                    reorder=engine.reorder)
 
 

@@ -86,12 +86,18 @@ class SolverDef:
     marks methods whose fused update applies M^-1 in-stream, so a
     factorized preconditioner lowers them to its heavyweight substrate
     kind (``fused_ic0`` / ``fused_shard_ic0``).  ``*_precond_override``
-    remaps the preconditioner used to build ``psolve`` per mode (the
-    pipelined solver runs local preconditioners only).  ``halo_dist``
-    lists the preconditioner names the method's distributed lowering may
-    run on a compiled halo-exchange communication plan
+    remaps the preconditioner used to build ``psolve`` per mode.
+    ``halo_dist`` lists the preconditioner names the method's distributed
+    lowering may run on a compiled halo-exchange communication plan
     (:mod:`repro.core.commplan`) instead of dense collectives -- the
     substrate-phrased methods whose matvec is the engine's NoC closure.
+    ``comm_overlap`` marks methods whose recurrence can consume the split
+    communication-hiding matvec (``matvec_start``/``matvec_finish``): on a
+    halo layout the engine lowers their SpMV as interior/frontier passes
+    with the pull schedule double-buffered across iterations.  ``aliases``
+    are alternate spellings ``get_solver`` resolves to this entry;
+    canonicalization rewrites specs to the canonical name so aliased plans
+    share one cache slot.
     """
 
     name: str
@@ -106,6 +112,8 @@ class SolverDef:
     halo_dist: frozenset = frozenset()
     local_precond_override: dict = field(default_factory=dict)
     dist_precond_override: dict = field(default_factory=dict)
+    comm_overlap: bool = False
+    aliases: tuple = ()
 
 
 @dataclass(frozen=True)
@@ -139,12 +147,15 @@ class PrecondDef:
 # ---------------------------------------------------------------------------
 
 _SOLVERS: dict[str, SolverDef] = {}
+_SOLVER_ALIASES: dict[str, str] = {}
 _PRECONDS: dict[str, PrecondDef] = {}
 _PRECOND_ALIASES: dict[str, str] = {}
 
 
 def register_solver(sdef: SolverDef) -> SolverDef:
     _SOLVERS[sdef.name] = sdef
+    for a in sdef.aliases:
+        _SOLVER_ALIASES[a] = sdef.name
     return sdef
 
 
@@ -156,7 +167,10 @@ def register_precond(pdef: PrecondDef) -> PrecondDef:
 
 
 def unregister_solver(name: str) -> None:
-    _SOLVERS.pop(name, None)
+    sdef = _SOLVERS.pop(name, None)
+    if sdef is not None:
+        for a in sdef.aliases:
+            _SOLVER_ALIASES.pop(a, None)
 
 
 def unregister_precond(name: str) -> None:
@@ -167,6 +181,7 @@ def unregister_precond(name: str) -> None:
 
 
 def get_solver(name: str) -> SolverDef:
+    name = _SOLVER_ALIASES.get(name, name)
     try:
         return _SOLVERS[name]
     except KeyError:
@@ -269,8 +284,9 @@ def effective_precond(sdef: SolverDef, engine_precond: str,
                       local: bool) -> PrecondDef:
     """The preconditioner a solver's ``psolve`` is actually built from:
     unpreconditioned methods get identity (or jacobi when the iteration
-    itself needs the diagonal), and per-mode overrides apply (the
-    pipelined solver runs local preconditioners only)."""
+    itself needs the diagonal), and per-mode overrides apply (none of the
+    builtins override since pcg_pipelined's promotion; the hook stays for
+    external methods with restricted psolve support)."""
     if not sdef.preconditioned:
         return get_precond("jacobi" if sdef.needs_dinv else "identity")
     ov = sdef.local_precond_override if local else sdef.dist_precond_override
@@ -312,14 +328,27 @@ def _run_cg(c: SolveContext, b, x0):
                       substrate=c.substrate, **_dot_kw(c))
 
 
-def _run_pcg_pipe(c: SolveContext, b, x0):
-    from . import solvers
-
+def _pipe_kw(c: SolveContext) -> dict:
     kw = _dot_kw(c)
     if c.dot2 is not None:
         kw["dot2"] = c.dot2
+    return kw
+
+
+def _run_pcg_pipelined(c: SolveContext, b, x0):
+    from . import solvers
+
     return solvers.pcg_pipelined(c.matvec, b, psolve=c.psolve, x0=x0,
-                                 iters=c.iters, substrate=c.substrate, **kw)
+                                 iters=c.iters, substrate=c.substrate,
+                                 **_pipe_kw(c))
+
+
+def _run_pcg_pipelined_tol(c: SolveContext, b, x0):
+    from . import solvers
+
+    return solvers.pcg_pipelined_tol(c.matvec, b, psolve=c.psolve, x0=x0,
+                                     tol=c.tol, max_iters=c.max_iters,
+                                     substrate=c.substrate, **_pipe_kw(c))
 
 
 def _run_jacobi(c: SolveContext, b, x0):
@@ -346,12 +375,17 @@ register_solver(SolverDef(
     halo_dist=_ALL_PRECONDS,
 ))
 register_solver(SolverDef(
-    name="pcg_pipe", run=_run_pcg_pipe,
-    # local preconditioners only: the CG-CG recurrence already fuses its
-    # reductions distributed, so a shard substrate would change nothing
-    fused_local=_LOCAL_PRECONDS, fused_dist=frozenset(),
-    local_precond_override={"block_ic0": "identity"},
-    dist_precond_override={"block_ic0": "jacobi"},
+    name="pcg_pipelined", run=_run_pcg_pipelined,
+    fused_precond_apply=True,
+    fused_local=_ALL_PRECONDS, fused_dist=_ALL_PRECONDS,
+    halo_dist=_ALL_PRECONDS, comm_overlap=True,
+    aliases=("pcg_pipe",),      # pre-promotion spelling (PR 6 migration)
+))
+register_solver(SolverDef(
+    name="pcg_pipelined_tol", run=_run_pcg_pipelined_tol, tolerance=True,
+    fused_precond_apply=True,
+    fused_local=_ALL_PRECONDS, fused_dist=_ALL_PRECONDS,
+    halo_dist=_ALL_PRECONDS, comm_overlap=True,
 ))
 register_solver(SolverDef(
     name="jacobi", run=_run_jacobi, preconditioned=False, needs_dinv=True,

@@ -46,8 +46,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from .substrate import SolverSubstrate, reference_substrate
+from .substrate import pipe_update as _pipe_update
 
-__all__ = ["SolveResult", "cg", "pcg", "pcg_pipelined", "jacobi", "pcg_tol"]
+__all__ = ["SolveResult", "cg", "pcg", "pcg_pipelined",
+           "pcg_pipelined_tol", "jacobi", "pcg_tol"]
 
 Vec = jnp.ndarray
 MatVec = Callable[[Vec], Vec]
@@ -142,13 +144,57 @@ def pcg(
     return SolveResult(x, jnp.concatenate([r0[None], norms]), _iters_like(b, iters))
 
 
+def _pipe_ops(matvec, psolve, dot, dot2, substrate):
+    """Resolve the pipelined iteration's op bundle (shared by the fixed-
+    and tolerance-mode variants).
+
+    Returns ``(sub, pdots, pupd, overlapped)`` where ``pdots(r, u, w)`` is
+    the stacked [gamma=(r,u), delta=(w,u), rr=(r,r)] reduction -- the
+    iteration's ONE collective.  Precedence: an explicit substrate's
+    ``pipe_dots`` (shard flavors psum the stack once); else the injected
+    ``dot2`` (the engine's stacked-psum reducer, so even the *reference*
+    distributed path keeps one collective); else a stack of ``sub.dot``.
+    ``overlapped`` is True when the substrate carries the split
+    communication-hiding matvec (``matvec_start``/``matvec_finish``).
+    """
+    sub = substrate if substrate is not None else reference_substrate(
+        matvec, psolve, dot
+    )
+    if substrate is not None and substrate.pipe_dots is not None:
+        pdots = substrate.pipe_dots
+    elif dot2 is not None:
+        def pdots(r, u, w):
+            return dot2(r, u, w, u, r, r)
+    elif sub.pipe_dots is not None:
+        pdots = sub.pipe_dots
+    else:
+        def pdots(r, u, w):
+            return jnp.stack([sub.dot(r, u), sub.dot(w, u), sub.dot(r, r)])
+    pupd = sub.pipe_update if sub.pipe_update is not None else _pipe_update
+    overlapped = (sub.matvec_start is not None
+                  and sub.matvec_finish is not None)
+    return sub, pdots, pupd, overlapped
+
+
+def _pipe_scalars(first, gamma, delta, gamma_old, alpha_old):
+    """The Chronopoulos-Gear scalar recurrence with breakdown guards:
+    beta = gamma/gamma_old (0 on the first step), alpha = gamma / (delta -
+    beta*gamma/alpha_old).  Zero denominators (converged or zero RHS) give
+    alpha = 0 -- the iteration freezes instead of emitting NaN."""
+    beta = jnp.where(first, 0.0,
+                     gamma / jnp.where(gamma_old == 0, 1.0, gamma_old))
+    denom = delta - beta * gamma / jnp.where(alpha_old == 0, 1.0, alpha_old)
+    alpha = gamma / jnp.where(denom == 0, 1.0, denom)
+    return beta, alpha
+
+
 def pcg_pipelined(
     matvec: MatVec,
     b: Vec,
     psolve: Callable[[Vec], Vec],
     x0: Vec | None = None,
     iters: int = 100,
-    dot2: Callable[[Vec, Vec, Vec, Vec], jnp.ndarray] | None = None,
+    dot2: Callable[..., jnp.ndarray] | None = None,
     dot: Dot = _default_dot,
     substrate: SolverSubstrate | None = None,
 ) -> SolveResult:
@@ -157,58 +203,132 @@ def pcg_pipelined(
     Standard PCG issues 2-3 separate global reductions per iteration (rz,
     pAp, ||r||) -- each a latency-bound psum across the whole pod.  The
     CG-CG recurrence computes gamma = (r,u) and delta = (w,u) on the same
-    vectors, so both dots ride a single stacked psum; the residual norm is
-    recovered from gamma (u = M^-1 r: monotone surrogate) instead of a
-    third reduction.  Beyond-paper optimization; numerically equivalent in
-    exact arithmetic (Tiwari & Vadhiyar 2022, the paper's ref [5]).
+    vectors, so both dots -- plus rr = (r,r), which makes the trace the
+    TRUE residual norm, comparable with ``pcg``'s -- ride a single stacked
+    reduction.  The initial residual norm comes from the same stacked
+    reduction, so it is globally correct under ``shard_map`` too.  Beyond-
+    paper optimization; numerically equivalent in exact arithmetic (Tiwari
+    & Vadhiyar 2022, the paper's ref [5]).
 
-    ``dot2(a1, b1, a2, b2)`` returns stacked [dot(a1,b1), dot(a2,b2)] with
-    a single collective; the engine injects a psum-of-stack version.  A
-    ``substrate`` supplies kernel-backed ``matvec``/``psolve`` (the CG-CG
-    recurrence already fuses its reductions, so only those two ops differ).
+    Communication hiding: the matvec operand of step ``k+1`` is
+    ``m = M^-1 w``, computable at the *tail* of step ``k`` with no
+    collective.  The scan therefore carries ``(m, halo)``: when the
+    substrate supplies the split matvec (``matvec_start``/
+    ``matvec_finish``), each step issues the halo pulls for the next
+    operand before returning, and the in-flight exchange overlaps the
+    whole update/reduction/psolve tail (double-buffered across
+    iterations).  Without the split ops the step simply calls ``matvec``
+    -- identical values either way (SpMV linearity; see ``commplan``).
+
+    ``dot2(a1, b1, a2, b2, ...)`` stacks dot(ai, bi) pairs under a single
+    collective (the engine injects a psum-of-stack version); a
+    ``substrate`` supplies kernel-backed ops including the stacked
+    ``pipe_dots`` and the one-pass 8-vector ``pipe_update``.
     """
-    if substrate is not None:
-        matvec, psolve = substrate.matvec, substrate.psolve
-    if dot2 is None:
-        def dot2(a1, b1, a2, b2):
-            return jnp.stack([dot(a1, b1), dot(a2, b2)])
-
+    sub, pdots, pupd, overlapped = _pipe_ops(matvec, psolve, dot, dot2,
+                                             substrate)
     x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - matvec(x)
-    u = psolve(r)
-    w = matvec(u)
-    gd = dot2(r, u, w, u)
+    r = b - sub.matvec(x)
+    u = sub.psolve(r)
+    w = sub.matvec(u)
+    gd = pdots(r, u, w)            # ONE stacked reduction: [gamma, delta, rr]
     gamma, delta = gd[0], gd[1]
-    r0 = _norm(jnp.maximum(dot(r, r), 0.0))
+    r0 = _norm(jnp.maximum(gd[2], 0.0))
+    m = sub.psolve(w)              # first matvec operand, issued pre-loop
+    h = sub.matvec_start(m) if overlapped else ()
 
     zv = jnp.zeros_like(b)
-    state = (x, r, u, w, zv, zv, zv, zv, gamma, delta,
+    state = (x, r, u, w, zv, zv, zv, zv, m, h, gamma, delta,
              jnp.ones_like(gamma), jnp.ones_like(gamma))
 
     def step(carry, i):
-        (x, r, u, w, z, q, s, p, gamma, delta, gamma_old, alpha_old) = carry
-        m = psolve(w)
-        n = matvec(m)
-        first = i == 0
-        beta = jnp.where(first, 0.0, gamma / jnp.where(gamma_old == 0, 1.0, gamma_old))
-        denom = delta - beta * gamma / jnp.where(alpha_old == 0, 1.0, alpha_old)
-        alpha = gamma / jnp.where(denom == 0, 1.0, denom)
-        z = n + beta * z
-        q = m + beta * q
-        s = w + beta * s
-        p = u + beta * p
-        x = x + alpha * p
-        r = r - alpha * s
-        u = u - alpha * q
-        w = w - alpha * z
-        gd = dot2(r, u, w, u)
-        res_sq = gd[0]          # (r, M^-1 r) surrogate for the trace
-        return (x, r, u, w, z, q, s, p, gd[0], gd[1], gamma, alpha), _norm(
-            jnp.abs(res_sq)
-        )
+        (x, r, u, w, z, q, s, p, m, h, gamma, delta,
+         gamma_old, alpha_old) = carry
+        nv = sub.matvec_finish(h) if overlapped else sub.matvec(m)
+        beta, alpha = _pipe_scalars(i == 0, gamma, delta,
+                                    gamma_old, alpha_old)
+        x, r, u, w, z, q, s, p = pupd(beta, alpha, x, r, u, w, z, q, s, p,
+                                      m, nv)
+        gd = pdots(r, u, w)        # the iteration's ONE collective
+        m = sub.psolve(w)          # next operand: local, so its halo
+        h = sub.matvec_start(m) if overlapped else ()   # flies over the tail
+        return (x, r, u, w, z, q, s, p, m, h, gd[0], gd[1], gamma,
+                alpha), _norm(jnp.maximum(gd[2], 0.0))
 
     state, norms = lax.scan(step, state, jnp.arange(iters))
-    return SolveResult(state[0], jnp.concatenate([r0[None], norms]), _iters_like(b, iters))
+    return SolveResult(state[0], jnp.concatenate([r0[None], norms]),
+                       _iters_like(b, iters))
+
+
+def pcg_pipelined_tol(
+    matvec: MatVec,
+    b: Vec,
+    psolve: Callable[[Vec], Vec],
+    x0: Vec | None = None,
+    tol: float = 1e-8,
+    max_iters: int = 1000,
+    dot2: Callable[..., jnp.ndarray] | None = None,
+    dot: Dot = _default_dot,
+    substrate: SolverSubstrate | None = None,
+) -> SolveResult:
+    """Pipelined PCG with relative-tolerance stopping (while_loop).
+
+    Same recurrence and op bundle as :func:`pcg_pipelined`; the stopping
+    test reuses the rr slot of the iteration's single stacked reduction
+    (the true ``|r|``, same quantity ``pcg_tol`` tests), so tolerance mode
+    still has exactly ONE collective per iteration.  The bounded residual
+    ring, batched semantics and tail-fill match :func:`pcg_tol`."""
+    sub, pdots, pupd, overlapped = _pipe_ops(matvec, psolve, dot, dot2,
+                                             substrate)
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - sub.matvec(x)
+    u = sub.psolve(r)
+    w = sub.matvec(u)
+    gd = pdots(r, u, w)
+    gamma, delta = gd[0], gd[1]
+    r0n = _norm(jnp.maximum(gd[2], 0.0))
+    bnorm = _norm(jnp.maximum(sub.dot(b, b), 0.0))
+    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+    m = sub.psolve(w)
+    h = sub.matvec_start(m) if overlapped else ()
+    zv = jnp.zeros_like(b)
+    trace0 = jnp.zeros((max_iters + 1,) + r0n.shape, r0n.dtype).at[0].set(r0n)
+
+    def cond(state):
+        act, k = state[16], state[18]
+        return jnp.any(act) & (k < max_iters)
+
+    def body(state):
+        (x, r, u, w, z, q, s, p, m, h, gamma, delta, gamma_old, alpha_old,
+         _rn, it, act, trace, k) = state
+        it = it + act.astype(jnp.int32)
+        nv = sub.matvec_finish(h) if overlapped else sub.matvec(m)
+        beta, alpha = _pipe_scalars(k == 0, gamma, delta,
+                                    gamma_old, alpha_old)
+        x, r, u, w, z, q, s, p = pupd(beta, alpha, x, r, u, w, z, q, s, p,
+                                      m, nv)
+        gd = pdots(r, u, w)        # ONE collective; rr drives the test
+        rn = _norm(jnp.maximum(gd[2], 0.0))
+        trace = trace.at[k + 1].set(rn)
+        act = rn / bnorm > tol
+        m = sub.psolve(w)
+        h = sub.matvec_start(m) if overlapped else ()
+        return (x, r, u, w, z, q, s, p, m, h, gd[0], gd[1], gamma, alpha,
+                rn, it, act, trace, k + 1)
+
+    act0 = r0n / bnorm > tol
+    it0 = _iters_like(b, 0)
+    state = lax.while_loop(
+        cond, body,
+        (x, r, u, w, zv, zv, zv, zv, m, h, gamma, delta,
+         jnp.ones_like(gamma), jnp.ones_like(gamma), r0n, it0, act0,
+         trace0, jnp.int32(0)),
+    )
+    x, it, trace, k = state[0], state[15], state[17], state[18]
+    idx = jnp.arange(max_iters + 1)
+    written = (idx <= k).reshape((-1,) + (1,) * (trace.ndim - 1))
+    trace = jnp.where(written, trace, trace[k])
+    return SolveResult(x, trace, it)
 
 
 def pcg_tol(

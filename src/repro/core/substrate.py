@@ -20,6 +20,33 @@ A *substrate* bundles the callables one PCG iteration consumes:
                                    itself fuses in via the whole-solve
                                    SpTRSV kernel)
 
+and, for the pipelined (Chronopoulos-Gear) recurrence:
+
+  ``pipe_dots(r, u, w)``        -- stacked [gamma=(r,u), delta=(w,u),
+                                   rr=(r,r)]: the pipelined iteration's
+                                   ONE reduction.  Shard flavors emit a
+                                   single stacked psum of all three
+                                   partials; rr rides along for free, so
+                                   the trace is the true ``|r|`` (not the
+                                   (r, M^-1 r) surrogate).
+  ``pipe_update(beta, alpha, x, r, u, w, z, q, s, p, m, n)``
+                                -- the one-pass 8-vector update (all four
+                                   auxiliary recurrences + the four axpys,
+                                   no reduction inside).
+  ``matvec_start(v)`` / ``matvec_finish(halo)``
+                                -- the split communication-hiding SpMV
+                                   (engine shard substrates only, halo
+                                   layout): ``start`` issues the ppermute
+                                   pull schedule and returns the in-flight
+                                   halo; ``finish`` streams the interior
+                                   rows (no dependence on the pulls) and
+                                   adds the frontier rows once the halo
+                                   lands.  The pipelined solver issues
+                                   ``start`` on the NEXT matvec operand at
+                                   the tail of each step (double-buffered
+                                   halo), so the whole update/reduction/
+                                   psolve tail overlaps the exchange.
+
 ``solvers.pcg``/``solvers.pcg_tol`` are written against this interface;
 which implementation backs it is a deployment decision:
 
@@ -63,6 +90,7 @@ from . import spops
 
 __all__ = [
     "SolverSubstrate",
+    "pipe_update",
     "reference_substrate",
     "fused_local_substrate",
     "fused_ic0_local_substrate",
@@ -79,7 +107,11 @@ def _dot(u, v):
 
 
 class SolverSubstrate(NamedTuple):
-    """The per-iteration op bundle PCG runs against (see module docstring)."""
+    """The per-iteration op bundle PCG runs against (see module docstring).
+
+    The trailing pipelined-CG fields default to None so third-party
+    substrates built positionally keep working; ``solvers.pcg_pipelined``
+    falls back to jnp compositions when they are unset."""
 
     kind: str
     matvec: Callable
@@ -87,6 +119,50 @@ class SolverSubstrate(NamedTuple):
     dot: Callable
     fold_matvec_dot: Callable
     update: Callable
+    pipe_dots: Callable | None = None
+    pipe_update: Callable | None = None
+    matvec_start: Callable | None = None
+    matvec_finish: Callable | None = None
+
+
+def pipe_update(beta, alpha, x, r, u, w, z, q, s, p, m, n):
+    """The Chronopoulos-Gear one-pass 8-vector update.
+
+    Inputs are the carried vectors plus the two per-step products
+    m = M^-1 w and n = A m; returns the new (x, r, u, w, z, q, s, p).
+    Reduction-free by construction -- every dot the recurrence needs is in
+    ``pipe_dots``, so one iteration has exactly ONE collective.  This jnp
+    composition is the shared fallback; a single-launch Pallas version is
+    a TPU follow-up (the vectors already stream once each here, so XLA
+    fuses it into one elementwise pass).
+    """
+    z = n + beta * z
+    q = m + beta * q
+    s = w + beta * s
+    p = u + beta * p
+    x = x + alpha * p
+    r = r - alpha * s
+    u = u - alpha * q
+    w = w - alpha * z
+    return x, r, u, w, z, q, s, p
+
+
+def _pipe_dots_local(dot):
+    """Local stacked [gamma, delta, rr] (no collective)."""
+
+    def pipe_dots(r, u, w):
+        return jnp.stack([dot(r, u), dot(w, u), dot(r, r)])
+
+    return pipe_dots
+
+
+def _pipe_dots_shard(psum):
+    """Shard flavor: all three partials ride ONE stacked psum."""
+
+    def pipe_dots(r, u, w):
+        return psum(jnp.stack([_dot(r, u), _dot(w, u), _dot(r, r)]))
+
+    return pipe_dots
 
 
 def reference_substrate(matvec, psolve, dot=None) -> SolverSubstrate:
@@ -108,7 +184,9 @@ def reference_substrate(matvec, psolve, dot=None) -> SolverSubstrate:
         return x, r, z, rr, rz
 
     return SolverSubstrate("reference", matvec, psolve, dot,
-                           fold_matvec_dot, update)
+                           fold_matvec_dot, update,
+                           pipe_dots=_pipe_dots_local(dot),
+                           pipe_update=pipe_update)
 
 
 def _ell_stream_ops(cols, vals):
@@ -161,7 +239,9 @@ def fused_local_substrate(cols, vals, dinv=None) -> SolverSubstrate:
         return ops.cg_update(alpha, x, r, p, ap, dinv)
 
     return SolverSubstrate("fused", matvec, psolve, _dot,
-                           fold_matvec_dot, update)
+                           fold_matvec_dot, update,
+                           pipe_dots=_pipe_dots_local(_dot),
+                           pipe_update=pipe_update)
 
 
 def fused_ic0_local_substrate(cols, vals, factors, n: int,
@@ -200,7 +280,9 @@ def fused_ic0_local_substrate(cols, vals, factors, n: int,
         return xo, ro, z, rr, rz
 
     return SolverSubstrate("fused_ic0", matvec, psolve, _dot,
-                           fold_matvec_dot, update)
+                           fold_matvec_dot, update,
+                           pipe_dots=_pipe_dots_local(_dot),
+                           pipe_update=pipe_update)
 
 
 def _shard_stream_ops(matvec, psum):
@@ -251,7 +333,9 @@ def fused_shard_substrate(matvec, dinv, psum) -> SolverSubstrate:
         return x, r, z, s[0], s[1]
 
     return SolverSubstrate("fused_shard", matvec, psolve, dot,
-                           fold_matvec_dot, update)
+                           fold_matvec_dot, update,
+                           pipe_dots=_pipe_dots_shard(psum),
+                           pipe_update=pipe_update)
 
 
 def fused_shard_ic0_substrate(matvec, psolve_local, psum) -> SolverSubstrate:
@@ -272,7 +356,9 @@ def fused_shard_ic0_substrate(matvec, psolve_local, psum) -> SolverSubstrate:
         return xo, ro, z, s[0], s[1]
 
     return SolverSubstrate("fused_shard_ic0", matvec, psolve_local, dot,
-                           fold_matvec_dot, update)
+                           fold_matvec_dot, update,
+                           pipe_dots=_pipe_dots_shard(psum),
+                           pipe_update=pipe_update)
 
 
 def modeled_vector_traffic(ell_width: float) -> dict:

@@ -25,7 +25,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--matrix", default="lap2d_32")
     ap.add_argument("--method", default="pcg",
-                    choices=("pcg", "pcg_tol", "pcg_pipe", "cg", "jacobi"))
+                    choices=("pcg", "pcg_tol", "pcg_pipelined",
+                             "pcg_pipelined_tol", "pcg_pipe", "cg",
+                             "jacobi"))   # pcg_pipe = pcg_pipelined alias
     ap.add_argument("--precond", default="jacobi",
                     choices=("jacobi", "block_ic0", "none"))
     ap.add_argument("--iters", type=int, default=100)

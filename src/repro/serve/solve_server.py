@@ -47,12 +47,17 @@ class SolveRequest(NamedTuple):
 
 class SolveOutcome(NamedTuple):
     req_id: int
-    x: np.ndarray                 # (n,) solution
+    x: np.ndarray                 # (n,) solution, in the request's dtype
     res_norms: np.ndarray         # this request's residual trace (bounded
                                   # max_iters ring for tolerance mode)
-    batch_size: int               # how many RHS shared the solve
+    batch_size: int               # how many RHS shared the solve: the
+                                  # bucketed batch width k_pad, zero pad
+                                  # RHS included (batch_size - requests
+                                  # is this solve's padding overhead)
     iters: int = -1               # iterations spent on THIS request
                                   # (tolerance mode; -1 = fixed-iter solve)
+    requests: int = -1            # real (un-padded) requests coalesced
+                                  # into the solve this outcome rode
 
 
 class SolveServer:
@@ -135,7 +140,10 @@ class SolveServer:
         take, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch:]
         k = len(take)
         k_pad = self._bucket(k)
-        batch = np.zeros((k_pad, self.engine.n))
+        # stage in the ENGINE dtype (np.zeros defaults to float64): the
+        # operand then enters the program exactly as traced -- no silent
+        # downcast-on-device, no per-dtype retrace risk
+        batch = np.zeros((k_pad, self.engine.n), dtype=self.engine.dtype)
         for i, req in enumerate(take):
             batch[i] = req.b
         plan = self.plan_for(k_pad)
@@ -154,10 +162,20 @@ class SolveServer:
         its = np.full(k_pad, -1, np.int64)
         if self._tolerance:
             its = np.atleast_1d(np.asarray(plan.last_iters)).astype(np.int64)
-        # norms: (iters + 1, k_pad) -- hand each request its own column
+        # norms: (iters + 1, k_pad) -- hand each request its own column;
+        # solutions go back in the request's (floating) dtype, so a
+        # float64 client of a float32 engine round-trips its own type
+        def _x_out(i, req):
+            xi = np.asarray(x[i])
+            if np.issubdtype(req.b.dtype, np.floating):
+                return xi.astype(req.b.dtype, copy=False)
+            return xi
+
         return {
-            req.req_id: SolveOutcome(req.req_id, np.asarray(x[i]),
-                                     np.asarray(norms[:, i]), k, int(its[i]))
+            req.req_id: SolveOutcome(req.req_id, _x_out(i, req),
+                                     np.asarray(norms[:, i]),
+                                     batch_size=k_pad, iters=int(its[i]),
+                                     requests=k)
             for i, req in enumerate(take)
         }
 

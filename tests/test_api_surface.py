@@ -105,21 +105,26 @@ def test_public_signatures_frozen():
 
 
 def test_builtin_registry_population():
-    assert {"cg", "pcg", "pcg_pipe", "pcg_tol", "jacobi"} <= set(
-        core.solver_names()
-    )
+    assert {"cg", "pcg", "pcg_pipelined", "pcg_pipelined_tol", "pcg_tol",
+            "jacobi"} <= set(core.solver_names())
     assert {"identity", "jacobi", "block_ic0"} <= set(core.precond_names())
     # capability metadata the engine dispatch relies on
     assert core.get_solver("pcg_tol").tolerance is True
     assert core.get_solver("pcg").tolerance is False
+    assert core.get_solver("pcg_pipelined_tol").tolerance is True
     assert core.get_precond("none").name == "identity"   # alias resolution
+    assert core.get_solver("pcg_pipe").name == "pcg_pipelined"  # PR 6 alias
     assert core.get_precond("block_ic0").fused_local_kind == "fused_ic0"
-    # halo comm-plan capability: the substrate-phrased methods support it,
-    # the smoother/pipelined solvers stay on dense collectives
+    # halo comm-plan capability: every substrate-phrased method supports
+    # it; the pipelined variants additionally lower the split
+    # communication-hiding matvec (comm_overlap)
     assert {"identity", "jacobi", "block_ic0"} <= set(
         core.get_solver("pcg").halo_dist)
     assert core.get_solver("pcg_tol").halo_dist == core.get_solver("pcg").halo_dist
-    assert core.get_solver("pcg_pipe").halo_dist == frozenset()
+    assert core.get_solver("pcg_pipelined").halo_dist == core.get_solver(
+        "pcg").halo_dist
+    assert core.get_solver("pcg_pipelined").comm_overlap is True
+    assert core.get_solver("pcg").comm_overlap is False
     assert core.get_precond("block_ic0").fused_local_needs_kernels is True
 
 

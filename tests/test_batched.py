@@ -121,7 +121,7 @@ def test_batched_pcg_tol_per_rhs_iters():
 # -- batched solvers through jacobi / pipelined variants ---------------------
 
 
-@pytest.mark.parametrize("method", ["cg", "pcg", "pcg_pipe", "jacobi"])
+@pytest.mark.parametrize("method", ["cg", "pcg", "pcg_pipelined", "jacobi"])
 def test_engine_batched_methods_match_single(method):
     m = laplacian_2d(10)
     rng = np.random.default_rng(5)
@@ -187,3 +187,63 @@ def test_solve_server_coalesces_and_verifies():
 
     with pytest.raises(ValueError):
         srv.submit(np.zeros(3))
+
+
+class _PlanSpy:
+    """Wraps a SolvePlan to capture the dtype of every staged batch the
+    server hands it (the plan surface SolveServer.step consumes)."""
+
+    def __init__(self, plan, staged):
+        self._plan = plan
+        self._staged = staged
+
+    def __call__(self, b, x0=None):
+        self._staged.append(np.asarray(b).dtype)
+        return self._plan(b) if x0 is None else self._plan(b, x0=x0)
+
+    @property
+    def traces(self):
+        return self._plan.traces
+
+    @property
+    def last_iters(self):
+        return self._plan.last_iters
+
+
+def test_solve_server_stages_engine_dtype_preserves_request_dtype():
+    """Regression: step() used to stage the coalesced batch in a bare
+    np.zeros((k_pad, n)) -- float64 regardless of the engine dtype.  The
+    batch must be staged in the ENGINE dtype (no downcast-on-device /
+    retrace risk) while each outcome's x comes back in the REQUEST dtype."""
+    m, a = _spd_pair(48, 0.1, 13)
+    eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float32)
+    srv = SolveServer(eng, max_batch=4, method="pcg", iters=120)
+    staged = []
+    orig = srv.plan_for
+    srv.plan_for = lambda k_pad: _PlanSpy(orig(k_pad), staged)
+    rng = np.random.default_rng(13)
+    x_true = rng.standard_normal((3, 48))          # float64 client RHS
+    ids = [srv.submit(a @ x_true[i]) for i in range(3)]
+    out = srv.step()
+    assert staged == [np.dtype(np.float32)]        # engine-dtype staging
+    for i, rid in enumerate(ids):
+        assert out[rid].x.dtype == np.float64      # request dtype preserved
+        np.testing.assert_allclose(out[rid].x, x_true[i], atol=2e-3)
+
+
+def test_solve_server_outcome_reports_batch_and_request_counts():
+    """batch_size is the padded solve width k_pad (what the docstring
+    always promised); requests is the real coalesced count -- together
+    they make the stats fill ratio auditable per outcome."""
+    m, a = _spd_pair(40, 0.1, 5)
+    eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
+    srv = SolveServer(eng, max_batch=8, method="pcg", iters=80)
+    rng = np.random.default_rng(5)
+    ids = [srv.submit(a @ rng.standard_normal(40)) for _ in range(3)]
+    out = srv.step()
+    for rid in ids:
+        assert out[rid].batch_size == 4            # 3 bucketed up to 4
+        assert out[rid].requests == 3
+    assert srv.stats["padded_rhs"] == 1
+    assert (out[ids[0]].batch_size - out[ids[0]].requests
+            == srv.stats["padded_rhs"])

@@ -22,7 +22,7 @@ CURRENT = os.path.join(REPO, "BENCH_pcg.json")
 
 def _payload():
     return {
-        "schema": "bench_pcg/v3",
+        "schema": "bench_pcg/v4",
         "fused_vs_unfused": [{
             "matrix": "m", "us_per_iter_fused": 100.0,
             "us_per_iter_unfused": 120.0, "trace_rel_maxdiff": 0.0,
@@ -44,6 +44,17 @@ def _payload():
             "gather_words_halo": 256, "gather_words_dense": 896,
             "bytes_per_iter_halo": 2048, "bytes_per_iter_dense": 7168,
             "reduction": 3.5,
+            "interior_frac_nnz": 0.8, "overlap_interior_words": 300,
+            "overlap_hidden_words": 256, "overlap_exposed_words": 0,
+            "overlap_efficiency": 1.0,
+        }],
+        "pipelined": [{
+            "matrix": "m", "precond": "jacobi", "tol": 1e-8,
+            "iters_pipelined": 30, "iters_pcg": 30,
+            "x_vs_pcg_maxdiff": 0.0, "r0_reldiff": 0.0,
+            "reductions_per_iter_pipelined": 1,
+            "reductions_per_iter_pcg": 2,
+            "us_per_iter_pipelined": 150.0, "us_per_iter_pcg": 180.0,
         }],
     }
 
@@ -124,6 +135,43 @@ def test_halo_width_growth_fails():
     assert any("bytes_per_iter_halo" in f for f in g.failures)
 
 
+def test_pipelined_iteration_drift_fails():
+    cur = _payload()
+    cur["pipelined"][0]["iters_pipelined"] = 35
+    g = check(cur, _payload())
+    assert any("iters_pipelined" in f for f in g.failures)
+
+
+def test_pipelined_reduction_structure_drift_fails():
+    """The single-stacked-collective structure is the method's point: a
+    payload claiming anything but 1-vs-2 reductions per iteration means
+    the recurrence (or the record) changed."""
+    cur = _payload()
+    cur["pipelined"][0]["reductions_per_iter_pipelined"] = 2
+    g = check(cur, _payload())
+    assert any("reductions_per_iter_pipelined" in f for f in g.failures)
+
+
+def test_pipelined_r0_divergence_fails():
+    """The trace head must stay the globally-reduced ||b|| (the injected-
+    reduction bug this gate exists to keep fixed)."""
+    cur = _payload()
+    cur["pipelined"][0]["r0_reldiff"] = 0.5
+    g = check(cur, _payload())
+    assert any("r0_reldiff" in f for f in g.failures)
+
+
+def test_overlap_model_drift_fails():
+    """The comm-overlap fields are host-deterministic model outputs: any
+    drift is a real interior/frontier-split behaviour change."""
+    cur = _payload()
+    cur["noc_plans"][0]["overlap_efficiency"] = 0.5
+    cur["noc_plans"][0]["overlap_exposed_words"] = 128
+    g = check(cur, _payload())
+    assert any("overlap_efficiency" in f for f in g.failures)
+    assert any("overlap_exposed_words" in f for f in g.failures)
+
+
 def test_dense_to_halo_improvement_passes_plan_check():
     """The reverse direction (dense baseline -> halo current) is an
     improvement, not a regression -- but the byte fields still compare
@@ -187,9 +235,18 @@ def test_committed_bench_passes_gate():
 
 def test_committed_baseline_is_selfconsistent():
     base = json.load(open(BASELINE))
-    assert base["schema"] == "bench_pcg/v3"
+    assert base["schema"] == "bench_pcg/v4"
     assert base["tol_solves"], "baseline must pin tolerance iteration counts"
     assert base["noc_plans"], "baseline must pin the comm-plan traffic records"
+    assert base["pipelined"], "baseline must pin the pipelined-PCG record"
+    for e in base["pipelined"]:
+        assert e["reductions_per_iter_pipelined"] == 1
+        assert e["reductions_per_iter_pcg"] == 2
+        assert e["r0_reldiff"] <= 1e-8
+    for e in base["noc_plans"]:
+        assert 0.0 <= e["overlap_efficiency"] <= 1.0
+        assert (e["overlap_hidden_words"] + e["overlap_exposed_words"]
+                == e["gather_words_halo"])
     # the acceptance bar: banded patterns must cut halo plans whose modeled
     # NoC bytes/iteration are strictly below the dense all-gather model
     halo = [e for e in base["noc_plans"]

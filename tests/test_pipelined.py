@@ -1,0 +1,242 @@
+"""Pipelined PCG as a first-class method (PR 6).
+
+Local coverage for the promoted ``pcg_pipelined`` / ``pcg_pipelined_tol``
+solvers -- the Chronopoulos--Gear recurrence with ONE stacked reduction
+per iteration:
+
+* the ``pcg_pipe`` alias collapses onto the canonical plan-cache slot;
+* breakdown guards: a zero RHS (gamma = delta = 0) produces exact zeros,
+  never NaN, in fixed-iteration, tolerance and batched modes;
+* the convergence trace is the TRUE residual norm ``||b - A x||`` -- the
+  regression for the old surrogate ``sqrt((r, M^-1 r))`` trace, which
+  under jacobi differs by ~sqrt(diag);
+* fused and reference lowerings of the tolerance variant stop at the
+  SAME iteration (the registry's iteration-count equality contract).
+
+The multi-device checks (r0 reduced under ``shard_map`` -- the injected-
+reduction regression; halo-overlap == dense bitwise; one all-reduce per
+iteration asserted from the lowered HLO) run in a subprocess on a forced
+host-device mesh, marked ``slow``/``dist`` like the commplan smoke.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core.engine import AzulEngine
+from repro.core.plan import SolveSpec
+from repro.data.matrices import laplacian_2d
+
+
+def _setup(n=14, precond="jacobi"):
+    m = laplacian_2d(n)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    eng = AzulEngine(m, mesh=None, precond=precond, dtype=np.float64)
+    rng = np.random.default_rng(6)
+    x_true = rng.standard_normal(m.shape[0])
+    return a, eng, x_true, a @ x_true
+
+
+# -- alias / registry ---------------------------------------------------------
+
+
+def test_alias_collapses_to_one_plan_cache_slot():
+    """'pcg_pipe' is the pre-promotion spelling: canonicalization rewrites
+    it to 'pcg_pipelined', so both spellings hit the SAME compiled plan."""
+    _, eng, _, _ = _setup()
+    p1 = eng.plan(SolveSpec(method="pcg_pipe", iters=20))
+    p2 = eng.plan(SolveSpec(method="pcg_pipelined", iters=20))
+    assert p1 is p2
+    assert p1.spec.method == "pcg_pipelined"
+    assert len(eng.plans) == 1
+
+
+# -- breakdown guards ---------------------------------------------------------
+
+
+def test_zero_rhs_fixed_iters_no_nan():
+    """b = 0 drives gamma = delta = 0 through every iteration: the guarded
+    scalars must yield alpha = beta = 0, not 0/0 NaN."""
+    _, eng, _, _ = _setup()
+    z = np.zeros(eng.n)
+    x, norms = eng.plan(SolveSpec(method="pcg_pipelined", iters=30))(z)
+    assert np.all(np.asarray(x) == 0.0)
+    assert np.all(np.asarray(norms) == 0.0)
+    assert np.all(np.isfinite(np.asarray(norms)))
+
+
+def test_zero_rhs_tolerance_converges_at_zero_iters():
+    _, eng, _, _ = _setup()
+    plan = eng.plan(SolveSpec(method="pcg_pipelined_tol", tol=1e-10,
+                              max_iters=50))
+    x, norms = plan(np.zeros(eng.n))
+    assert int(np.asarray(plan.last_iters)) == 0
+    assert np.all(np.asarray(x) == 0.0)
+    assert np.all(np.asarray(norms) == 0.0)
+
+
+def test_zero_rhs_batched_column_stays_finite():
+    """A zero column inside a batch must not poison its neighbours."""
+    a, eng, x_true, b = _setup()
+    B = np.stack([b, np.zeros(eng.n)])
+    plan = eng.plan(SolveSpec(method="pcg_pipelined_tol", tol=1e-9,
+                              max_iters=300, batch=2))
+    x, norms = plan(B)
+    its = np.asarray(plan.last_iters)
+    assert its[1] == 0 and 0 < its[0] < 300
+    assert np.all(np.asarray(norms)[:, 1] == 0.0)
+    np.testing.assert_allclose(np.asarray(x)[0], x_true, atol=1e-6)
+    assert np.all(np.asarray(x)[1] == 0.0)
+
+
+# -- the trace is the true residual -------------------------------------------
+
+
+def test_trace_is_true_residual_norm():
+    """Regression for the surrogate trace: the old pcg_pipe recorded
+    ``sqrt((r, M^-1 r))``, which under jacobi on a Laplacian is off by
+    ~``sqrt(diag)=2``; the promoted method traces ``||b - A x||``."""
+    a, eng, _, b = _setup(precond="jacobi")
+    plan = eng.plan(SolveSpec(method="pcg_pipelined", iters=25))
+    x, norms = plan(b)
+    norms = np.asarray(norms)
+    assert norms[0] == pytest.approx(np.linalg.norm(b), rel=1e-12)
+    true_final = np.linalg.norm(b - a @ np.asarray(x))
+    assert norms[-1] == pytest.approx(true_final, rel=1e-6)
+    # and it matches the standard pcg trace (same math, same norm)
+    _, n_ref = eng.plan(SolveSpec(method="pcg", iters=25))(b)
+    np.testing.assert_allclose(norms, np.asarray(n_ref), rtol=1e-5,
+                               atol=1e-12)
+
+
+# -- fused == reference iteration counts --------------------------------------
+
+
+@pytest.mark.parametrize("precond", ["jacobi", "none"])
+def test_tolerance_fused_vs_reference_iteration_parity(precond):
+    a, eng, x_true, b = _setup(precond=precond)
+    tf = eng.plan(SolveSpec(method="pcg_pipelined_tol", tol=1e-9,
+                            max_iters=400, fused=True))
+    tr = eng.plan(SolveSpec(method="pcg_pipelined_tol", tol=1e-9,
+                            max_iters=400, fused=False))
+    assert tf.info["substrate"] != "reference"
+    assert tr.info["substrate"] == "reference"
+    xf, _ = tf(b)
+    xr, _ = tr(b)
+    assert np.array_equal(np.asarray(tf.last_iters),
+                          np.asarray(tr.last_iters))
+    np.testing.assert_allclose(np.asarray(xf), np.asarray(xr), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(xf), x_true, atol=1e-6)
+
+
+# -- multi-device end to end (small-mesh PR smoke) ----------------------------
+
+_SCRIPT = r"""
+import numpy as np
+import scipy.sparse as sp
+from repro.core.engine import AzulEngine
+from repro.core.plan import SolveSpec
+from repro.data.matrices import laplacian_2d
+from repro.launch.mesh import make_mesh
+
+m = laplacian_2d(16)                  # n=256, banded
+n = m.shape[0]
+A = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+rng = np.random.default_rng(1)
+xt = rng.standard_normal(n); b = A @ xt
+Xt = rng.standard_normal((3, n)); Bk = Xt @ A.toarray().T
+bn = np.linalg.norm(b)
+
+mesh = make_mesh((4, 1), ("data", "model"))
+for mode in ("1d", "2d"):
+    eng = AzulEngine(m, mesh=mesh, mode=mode, precond="jacobi",
+                     dtype=np.float64)
+    assert eng.comm_plan.use_halo, mode
+
+    ph = eng.plan(SolveSpec(method="pcg_pipelined", iters=60, layout="halo"))
+    pd = eng.plan(SolveSpec(method="pcg_pipelined", iters=60, layout="dense"))
+    xh, nh = ph(b); xd, nd = pd(b)
+
+    # r0 regression: the init reduction runs through the injected psum'd
+    # pdots -- the trace head is the GLOBAL ||b||, not one shard's slice
+    assert np.isclose(np.asarray(nh)[0], bn, rtol=1e-10), (mode, "r0 halo")
+    assert np.isclose(np.asarray(nd)[0], bn, rtol=1e-10), (mode, "r0 dense")
+
+    # the communication-hiding split matvec is pure re-association of the
+    # same per-slot products: halo-overlap == dense BITWISE
+    assert np.array_equal(xh, xd), (mode, "x halo!=dense")
+    assert np.array_equal(nh, nd), (mode, "norms halo!=dense")
+    assert np.allclose(np.asarray(xh), xt, atol=1e-6), mode
+
+    # the overlap lowering is recorded in the plan's NoC model
+    noc = ph.info["noc"]
+    assert noc["comm_overlap"] is True, mode
+    assert 0.0 <= noc["overlap_efficiency"] <= 1.0
+    assert noc["overlap_hidden_words"] + noc["overlap_exposed_words"] \
+        == noc["gather_words_halo"]
+    assert 0.0 < noc["interior_frac_nnz"] <= 1.0
+    assert eng.plan(SolveSpec(method="pcg", iters=60, layout="halo")
+                    ).info["noc"]["comm_overlap"] is False
+
+    # batched RHS: same bitwise identity
+    phb = eng.plan(SolveSpec(method="pcg_pipelined", iters=60,
+                             layout="halo", batch=3))
+    pdb = eng.plan(SolveSpec(method="pcg_pipelined", iters=60,
+                             layout="dense", batch=3))
+    xhb, nhb = phb(Bk); xdb, ndb = pdb(Bk)
+    assert np.array_equal(xhb, xdb), (mode, "batched x")
+    assert np.array_equal(nhb, ndb), (mode, "batched norms")
+
+    # tolerance mode: halo-overlap stops at the SAME iteration as dense
+    th = eng.plan(SolveSpec(method="pcg_pipelined_tol", tol=1e-9,
+                            max_iters=200, layout="halo"))
+    td = eng.plan(SolveSpec(method="pcg_pipelined_tol", tol=1e-9,
+                            max_iters=200, layout="dense"))
+    xth, _ = th(b); xtd, _ = td(b)
+    assert np.array_equal(np.asarray(th.last_iters),
+                          np.asarray(td.last_iters)), mode
+    assert np.allclose(np.asarray(xth), xt, atol=1e-6), mode
+
+# ONE collective per iteration, asserted from the lowered HLO: the fixed-
+# iteration pipelined program contains exactly TWO all-reduces total (the
+# init pdots + the scan-body pdots), while standard pcg carries its two
+# split reductions per iteration (4 all-reduces).  The halo matvec itself
+# lowers to collective-permutes, never all-reduce/all-gather.
+eng = AzulEngine(m, mesh=mesh, mode="1d", precond="jacobi", dtype=np.float64)
+bdev = eng.to_device_vec(b)
+x0dev = eng.to_device_vec(np.zeros(n))
+def collectives(plan):
+    txt = plan.fn.lower(bdev, x0dev).as_text()
+    return (txt.count("stablehlo.all_reduce"),
+            txt.count("stablehlo.collective_permute"),
+            txt.count("stablehlo.all_gather"))
+ar, cp_, ag = collectives(eng.plan(SolveSpec(method="pcg_pipelined",
+                                             iters=60, layout="halo")))
+assert ar == 2, f"pipelined halo all_reduce {ar} != 2"
+assert ag == 0 and cp_ > 0, (cp_, ag)
+ar_pcg, _, _ = collectives(eng.plan(SolveSpec(method="pcg", iters=60,
+                                              layout="halo")))
+assert ar_pcg == 4, f"pcg halo all_reduce {ar_pcg} != 4"
+
+print("PIPELINED_DIST_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.dist
+def test_pipelined_multidevice_small_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    env["JAX_ENABLE_X64"] = "1"
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=560,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "PIPELINED_DIST_OK" in r.stdout

@@ -236,7 +236,8 @@ def test_pcg_tol_batched_trace_per_rhs():
 
 
 def test_registry_lists_builtins():
-    assert {"cg", "pcg", "pcg_pipe", "pcg_tol", "jacobi"} <= set(solver_names())
+    assert {"cg", "pcg", "pcg_pipelined", "pcg_pipelined_tol", "pcg_tol",
+            "jacobi"} <= set(solver_names())
     assert {"identity", "jacobi", "block_ic0"} <= set(precond_names())
 
 

@@ -102,6 +102,6 @@ def test_pipelined_cg_matches_pcg():
     b = a @ x_true
     eng = AzulEngine(m, precond="jacobi", dtype=np.float64)
     x1, _ = eng.solve(b, method="pcg", iters=100)
-    x2, _ = eng.solve(b, method="pcg_pipe", iters=100)
+    x2, _ = eng.solve(b, method="pcg_pipelined", iters=100)
     assert np.allclose(x1, x_true, atol=1e-8)
     assert np.allclose(x2, x_true, atol=1e-7)
