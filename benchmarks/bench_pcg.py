@@ -395,8 +395,102 @@ def run_noc_plans(
     return rows, payload
 
 
+
+def run_guarded_solves(
+    tol: float = 1e-8, max_iters: int = 400,
+    matrices=("lap2d_32",),
+    methods=("pcg_tol", "pcg_pipelined_tol"),
+) -> tuple[list[tuple[str, float, str]], list[dict]]:
+    """Guarded vs lean (guard=False) solves: the fault-tolerance layer's
+    regression record.  Per (matrix, method):
+
+    * iteration counts of both paths and ``x_bitwise_identical`` -- the
+      guards' contract is that a CLEAN solve is bit-for-bit unchanged
+      (the freeze-select is a no-op on an all-good mask);
+    * per-iteration timings of both paths -- the gate bounds the guard
+      overhead against the lean loop ON THE SAME machine/run, which is a
+      much tighter signal than cross-machine baseline ratios;
+    * ``collectives_guarded``/``collectives_unguarded`` counted from the
+      lowered HLO -- guards read reduction slots the iteration already
+      computed, so they must add ZERO collectives (locally both are 0; the
+      4-device halo equality is asserted in tests/test_faults.py);
+    * ``detects_indefinite`` -- an injectable plan handed values with a
+      negated diagonal entry must report ``breakdown`` (the end-to-end
+      detection probe, exercising the same program the clean runs timed).
+    """
+    rows, payload = [], []
+    rng = np.random.default_rng(0)
+    mats = suite("small")
+    for name in matrices:
+        m = mats[name]
+        a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+        b = a @ rng.standard_normal(m.shape[0])
+        eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
+        for method in methods:
+
+            def timed(guard):
+                plan = eng.plan(SolveSpec(method=method, tol=tol,
+                                          max_iters=max_iters, guard=guard))
+                plan(b)                                     # warm jit
+                t0 = time.perf_counter()
+                x, _ = plan(b)
+                dt = time.perf_counter() - t0
+                hlo = plan.fn.lower(eng.to_device_vec(b),
+                                    eng.to_device_vec(np.zeros_like(b))
+                                    ).as_text()
+                return dt, x, int(np.asarray(plan.last_iters)), \
+                    plan.last_status_names, \
+                    hlo.count("stablehlo.all_reduce") + \
+                    hlo.count("stablehlo.collective_permute")
+
+            dt_g, x_g, it_g, status_g, coll_g = timed(True)
+            dt_u, x_u, it_u, _, coll_u = timed(False)
+
+            # detection probe: negate one diagonal entry through the
+            # injectable value operand -- A stops being SPD, the guards
+            # must say so (breakdown), and x must come back finite
+            pi = eng.plan(SolveSpec(method=method, tol=tol,
+                                    max_iters=max_iters, injectable=True))
+            vbad = eng.vals_template()
+            cols = eng.cols_template()
+            row = 1
+            slot = int(np.where(cols[row] == row)[0][0])
+            vbad[row, slot] *= -1000.0
+            x_bad, _ = pi(b, vals=vbad)
+            detected = pi.last_status_names == "breakdown"
+
+            entry = {
+                "matrix": name,
+                "method": method,
+                "precond": "jacobi",
+                "n": int(m.shape[0]),
+                "tol": tol,
+                "iters_guarded": it_g,
+                "iters_unguarded": it_u,
+                "iters_match": it_g == it_u,
+                "x_bitwise_identical": bool((x_g == x_u).all()),
+                "status_clean": status_g,
+                "collectives_guarded": int(coll_g),
+                "collectives_unguarded": int(coll_u),
+                "collectives_match": int(coll_g) == int(coll_u),
+                "detects_indefinite": bool(detected),
+                "bad_x_finite": bool(np.isfinite(x_bad).all()),
+                "us_per_iter_guarded": round(dt_g / max(it_g, 1) * 1e6, 3),
+                "us_per_iter_unguarded": round(dt_u / max(it_u, 1) * 1e6, 3),
+            }
+            payload.append(entry)
+            rows.append((
+                f"guarded_{name}_{method}", dt_g / max(it_g, 1) * 1e6,
+                f"iters={it_g} bitwise={entry['x_bitwise_identical']} "
+                f"collectives={coll_g}=={coll_u} "
+                f"detects_indefinite={detected}",
+            ))
+    return rows, payload
+
+
 def collect_json(fused_payload, batch_payload, tol_payload=None,
-                 noc_payload=None, pipelined_payload=None) -> dict:
+                 noc_payload=None, pipelined_payload=None,
+                 guarded_payload=None) -> dict:
     """Assemble the machine-readable perf-trajectory record (BENCH_pcg.json
     schema: see README "Performance").  v2 added the tolerance-solve section
     (fused-vs-reference iteration counts, the regression gate's exact-match
@@ -404,13 +498,15 @@ def collect_json(fused_payload, batch_payload, tol_payload=None,
     halo-vs-dense plan choice per partition -- host-deterministic, gated
     exactly); v4 adds the pipelined section (pipelined-vs-standard PCG
     iteration counts, reduction structure, the r0 trace-head regression)
-    and the comm-overlap fields on the noc_plans entries."""
+    and the comm-overlap fields on the noc_plans entries; v5 adds the
+    guarded section (guard-vs-lean timings, bitwise-identity and
+    zero-extra-collectives assertions, the indefinite-detection probe)."""
     import jax
 
     from repro.kernels import ops
 
     return {
-        "schema": "bench_pcg/v4",
+        "schema": "bench_pcg/v5",
         "backend": jax.default_backend(),
         "kernel_mode": ops.backend_mode(),
         "x64": bool(jax.config.jax_enable_x64),
@@ -419,6 +515,7 @@ def collect_json(fused_payload, batch_payload, tol_payload=None,
         "tol_solves": tol_payload or [],
         "noc_plans": noc_payload or [],
         "pipelined": pipelined_payload or [],
+        "guarded": guarded_payload or [],
     }
 
 
@@ -442,7 +539,7 @@ def main(argv=None) -> int:
 
     rows = [] if args.skip_convergence else run()
     fused_payload, batch_payload, tol_payload = [], [], []
-    noc_payload, pipe_payload = [], []
+    noc_payload, pipe_payload, guarded_payload = [], [], []
     if args.fused_compare or args.json:
         mats = tuple(s for s in args.matrices.split(",") if s)
         frows, fused_payload = run_fused_compare(iters=args.iters, matrices=mats)
@@ -455,6 +552,10 @@ def main(argv=None) -> int:
             matrices=tuple(m for m in mats if m in suite("small"))
         )
         rows += prows
+        grows, guarded_payload = run_guarded_solves(
+            matrices=tuple(m for m in mats if m in suite("small"))[:1]
+        )
+        rows += grows
         nrows, noc_payload = run_noc_plans(
             matrices=tuple(m for m in mats if m in suite("small"))
         )
@@ -472,7 +573,8 @@ def main(argv=None) -> int:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(collect_json(fused_payload, batch_payload, tol_payload,
-                                   noc_payload, pipe_payload),
+                                   noc_payload, pipe_payload,
+                                   guarded_payload),
                       f, indent=1)
         print(f"# wrote {args.json}")
     return 0

@@ -32,6 +32,14 @@ machines:
   structure (exact -- 1 stacked collective vs 2), the r0 trace-head
   agreement with ``||b||`` and the solution agreement between the two
   recurrences (absolute thresholds).
+* **Guarded solves** (``guarded``): the fault-tolerance layer's contract.
+  Iteration counts guarded vs lean (exact), ``x_bitwise_identical`` and
+  ``collectives_match`` must stay True (guards may not change a clean
+  solve's bits nor add collectives), ``detects_indefinite`` must stay True
+  (the end-to-end detection probe), and the guarded per-iteration timing is
+  bounded BOTH against its baseline and against the SAME RUN's lean loop
+  (``--guard-overhead``, default 2x) -- the overhead of the in-loop health
+  checks is gated where it is actually measurable.
 * **Timings** (``us_per_iter*``): within ``--timing-ratio`` (default 10x)
   of baseline.  Interpret-mode CPU timings are noisy and machine-dependent;
   the generous ratio still catches order-of-magnitude regressions (an
@@ -75,8 +83,9 @@ def _index(entries: list[dict], keys: tuple[str, ...]) -> dict:
 
 
 class Gate:
-    def __init__(self, timing_ratio: float):
+    def __init__(self, timing_ratio: float, guard_overhead: float = 2.0):
         self.ratio = timing_ratio
+        self.guard_overhead = guard_overhead
         self.failures: list[str] = []
         self.checks = 0
 
@@ -114,8 +123,9 @@ class Gate:
             yield f"{name}{list(k)}", ce, be
 
 
-def check(cur: dict, base: dict, timing_ratio: float = 10.0) -> Gate:
-    g = Gate(timing_ratio)
+def check(cur: dict, base: dict, timing_ratio: float = 10.0,
+          guard_overhead: float = 2.0) -> Gate:
+    g = Gate(timing_ratio, guard_overhead)
     g.exact("payload", "schema", cur.get("schema"), base.get("schema"))
 
     for where, ce, be in g.section("tol_solves", ("matrix", "precond"),
@@ -172,6 +182,41 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0) -> Gate:
                       "overlap_efficiency"):
             g.exact(where, field, ce.get(field), be.get(field))
 
+    for where, ce, be in g.section("guarded", ("matrix", "method"),
+                                   cur.get("guarded", []),
+                                   base.get("guarded", [])):
+        g.exact(where, "iters_guarded", ce.get("iters_guarded"),
+                be.get("iters_guarded"))
+        g.exact(where, "iters_unguarded", ce.get("iters_unguarded"),
+                be.get("iters_unguarded"))
+        g.exact(where, "iters_match", ce.get("iters_match"), True)
+        g.exact(where, "x_bitwise_identical",
+                ce.get("x_bitwise_identical"), True)
+        g.exact(where, "status_clean", ce.get("status_clean"),
+                be.get("status_clean"))
+        # zero-extra-collectives invariant: the guards read reduction slots
+        # the iteration already computed, so the lowered program's
+        # collective count may not move (asserted per-payload AND pinned to
+        # the baseline's count)
+        g.exact(where, "collectives_match", ce.get("collectives_match"),
+                True)
+        g.exact(where, "collectives_guarded", ce.get("collectives_guarded"),
+                be.get("collectives_guarded"))
+        g.exact(where, "detects_indefinite",
+                ce.get("detects_indefinite"), True)
+        g.exact(where, "bad_x_finite", ce.get("bad_x_finite"), True)
+        g.timing(where, "us_per_iter_guarded", ce.get("us_per_iter_guarded"),
+                 be.get("us_per_iter_guarded"))
+        # guard overhead vs the lean loop, same machine/run
+        g.checks += 1
+        ug, uu = ce.get("us_per_iter_guarded"), ce.get("us_per_iter_unguarded")
+        if ug is None or uu is None:
+            g.fail(f"{where}: guarded/unguarded timing missing "
+                   f"({ug!r}, {uu!r})")
+        elif uu > 0 and ug > uu * g.guard_overhead:
+            g.fail(f"{where}: guard overhead {ug:.1f} us vs lean {uu:.1f} us "
+                   f"(> {g.guard_overhead:.1f}x)")
+
     for where, ce, be in g.section("pipelined", ("matrix", "precond"),
                                    cur.get("pipelined", []),
                                    base.get("pipelined", [])):
@@ -200,6 +245,9 @@ def main(argv=None) -> int:
     ap.add_argument("--timing-ratio", type=float, default=10.0,
                     help="allowed current/baseline timing ratio (generous: "
                          "interpret-mode CPU timings are machine-dependent)")
+    ap.add_argument("--guard-overhead", type=float, default=2.0,
+                    help="allowed guarded/lean per-iteration timing ratio "
+                         "within ONE payload (same machine, same run)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="overwrite the baseline with the current payload "
                          "(the documented escape hatch for intentional "
@@ -213,10 +261,10 @@ def main(argv=None) -> int:
         with open(args.current) as f:
             cur = json.load(f)
         problems = []
-        if cur.get("schema") != "bench_pcg/v4":
+        if cur.get("schema") != "bench_pcg/v5":
             problems.append(f"unexpected schema {cur.get('schema')!r}")
         for section in ("fused_vs_unfused", "tol_solves", "noc_plans",
-                        "pipelined"):
+                        "pipelined", "guarded"):
             if not cur.get(section):
                 problems.append(f"section {section!r} is empty/missing")
         if problems:
@@ -232,7 +280,8 @@ def main(argv=None) -> int:
         cur = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
-    g = check(cur, base, timing_ratio=args.timing_ratio)
+    g = check(cur, base, timing_ratio=args.timing_ratio,
+              guard_overhead=args.guard_overhead)
     if g.failures:
         print(f"PERF REGRESSION: {len(g.failures)} failure(s) "
               f"({g.checks} checks):")

@@ -79,10 +79,15 @@ def main(argv=None) -> None:
             prows, pipe_payload = bench_pcg.run_pipelined_solves(
                 max_iters=120 if args.smoke else 400, matrices=tol_mats
             )
+            grows, guarded_payload = bench_pcg.run_guarded_solves(
+                max_iters=120 if args.smoke else 400,
+                matrices=matrices[:1]
+            )
             # comm-plan traffic records are host-side NumPy (no devices,
             # milliseconds) -- full coverage even in the smoke run
             nrows, noc_payload = bench_pcg.run_noc_plans()
-            for name, us, derived in frows + brows + trows + prows + nrows:
+            for name, us, derived in (frows + brows + trows + prows +
+                                      grows + nrows):
                 print(f"{name},{us:.1f},{derived}")
             for e in tol_payload:
                 # tolerance-mode convergence from the bounded trace ring
@@ -92,7 +97,7 @@ def main(argv=None) -> None:
                 json.dump(
                     bench_pcg.collect_json(fused_payload, batch_payload,
                                            tol_payload, noc_payload,
-                                           pipe_payload),
+                                           pipe_payload, guarded_payload),
                     f, indent=1)
             print(f"# wrote {args.json}")
         except Exception:

@@ -1,2 +1,8 @@
 """Checkpoint substrate: sharded atomic async save/restore."""
-from .manager import CheckpointManager, save, restore, latest_step  # noqa: F401
+from .manager import (  # noqa: F401
+    CheckpointManager,
+    CorruptCheckpointError,
+    latest_step,
+    restore,
+    save,
+)

@@ -29,7 +29,8 @@ import threading
 import numpy as np
 import jax
 
-__all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["save", "save_async", "restore", "latest_step",
+           "CheckpointManager", "CorruptCheckpointError"]
 
 _SEP = "/"
 
@@ -72,6 +73,13 @@ def save(tree, directory: str, step: int, keep: int | None = 3) -> str:
     ).hexdigest()
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        # the rename below is the commit point: the manifest must be ON
+        # DISK before the directory becomes visible as a valid checkpoint,
+        # or a crash between rename and writeback leaves a step dir whose
+        # manifest is empty/truncated -- exactly the torn state restore's
+        # checksum scan exists to rule out
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -97,47 +105,100 @@ def _all_steps(directory: str) -> list[int]:
     return out
 
 
+def latest_step_valid(directory: str, s: int) -> bool:
+    """Does step ``s`` have a manifest whose self-checksum holds?"""
+    try:
+        with open(os.path.join(directory, f"step_{s:08d}", "manifest.json")) as f:
+            man = json.load(f)
+        chk = hashlib.sha256(
+            json.dumps(man["leaves"], sort_keys=True).encode()
+        ).hexdigest()
+        return chk == man["checksum"]
+    except (json.JSONDecodeError, KeyError, OSError):
+        return False
+
+
 def latest_step(directory: str) -> int | None:
-    steps = _all_steps(directory)
-    for s in sorted(steps, reverse=True):
-        try:
-            with open(os.path.join(directory, f"step_{s:08d}", "manifest.json")) as f:
-                man = json.load(f)
-            chk = hashlib.sha256(
-                json.dumps(man["leaves"], sort_keys=True).encode()
-            ).hexdigest()
-            if chk == man["checksum"]:
-                return s
-        except (json.JSONDecodeError, KeyError, OSError):
-            continue  # partial/corrupt -- fall back to an older step
-    return None
+    for s in sorted(_all_steps(directory), reverse=True):
+        if latest_step_valid(directory, s):
+            return s
+    return None  # partial/corrupt dirs fall through to older steps
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A step directory failed leaf verification (truncated/flipped data)."""
+
+
+def _load_step(directory: str, step: int, flat: dict):
+    """Load and VERIFY one step's leaves against its manifest: shape,
+    dtype, and content sum must match what was recorded at save time.
+    Raises CorruptCheckpointError on any mismatch -- a torn write or
+    bit-rotted .npy must not restore silently."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            man = json.load(f)
+        out = {}
+        for key in flat:
+            meta = man["leaves"][key]
+            arr = np.load(os.path.join(d, meta["file"]))
+            if list(arr.shape) != meta["shape"] or str(arr.dtype) != meta["dtype"]:
+                raise CorruptCheckpointError(
+                    f"{d}/{meta['file']}: shape/dtype mismatch vs manifest")
+            got = float(np.sum(arr.astype(np.float64))) if arr.size else 0.0
+            want = meta["sum"]
+            ok = (got == want) or (
+                np.isfinite(want)
+                and abs(got - want) <= 1e-9 * max(1.0, abs(want)))
+            if not ok:
+                raise CorruptCheckpointError(
+                    f"{d}/{meta['file']}: content sum {got!r} != recorded "
+                    f"{want!r} (corrupted or truncated leaf)")
+            out[key] = arr
+        return out
+    except CorruptCheckpointError:
+        raise
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(f"{d}: unreadable ({e})") from e
 
 
 def restore(tree_like, directory: str, step: int | None = None,
             sharding_tree=None):
     """Restore into the structure of ``tree_like`` (shapes/dtypes may be
     ShapeDtypeStructs).  ``sharding_tree``: optional matching tree of
-    NamedShardings for direct sharded placement (elastic remesh)."""
-    step = latest_step(directory) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no valid checkpoint under {directory}")
-    d = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        man = json.load(f)
+    NamedShardings for direct sharded placement (elastic remesh).
 
+    Every leaf is verified against the manifest (shape/dtype/content sum).
+    With ``step=None`` the scan walks valid steps newest-to-oldest and
+    falls back past any step whose LEAVES fail verification even though
+    its manifest checksum holds -- a partially-written or corrupted
+    checkpoint costs one interval of progress, never a bad restore.  An
+    explicit ``step`` raises CorruptCheckpointError instead."""
     flat, treedef = _flatten(tree_like)
+    if step is not None:
+        out, used = _load_step(directory, step, flat), step
+    else:
+        candidates = [s for s in sorted(_all_steps(directory), reverse=True)
+                      if latest_step_valid(directory, s)]
+        out = used = None
+        for s in candidates:
+            try:
+                out, used = _load_step(directory, s, flat), s
+                break
+            except CorruptCheckpointError:
+                continue       # torn step: fall back to the previous one
+        if out is None:
+            raise FileNotFoundError(f"no valid checkpoint under {directory}")
     flat_sh = None
     if sharding_tree is not None:
         flat_sh, _ = _flatten(sharding_tree)
-    out = {}
+    leaves = []
     for key in flat:
-        meta = man["leaves"][key]
-        arr = np.load(os.path.join(d, meta["file"]))
+        arr = out[key]
         if flat_sh is not None:
             arr = jax.device_put(arr, flat_sh[key])
-        out[key] = arr
-    leaves = [out[k] for k in flat]
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), used
 
 
 class CheckpointManager:

@@ -88,6 +88,7 @@ from .partition import (padded_layout_1d, permute_csr, plan_1d, plan_2d,
                         rcm_permutation, tile_csr)
 from .plan import PlanCache, SolvePlan, SolveSpec, canonicalize, warn_deprecated
 from .precond import ic0 as host_ic0
+from .solvers import ensure_status
 from .spops import spmm_ell_padded, spmv_ell_padded
 from .substrate import (fused_ic0_local_substrate, fused_local_substrate,
                         fused_shard_ic0_substrate, fused_shard_substrate)
@@ -267,6 +268,7 @@ class AzulEngine:
         self.comm_plan = None          # compiled halo schedule (dist modes)
         self._cols_halo_dev = None     # lazily device_put halo-remapped cols
         self._vals_split_dev = None    # lazily split interior/frontier vals
+        self._imask_dev = None         # lazily device_put interior mask
         self._compiled: dict = {}      # spmv/spmm programs (vector ops)
         self._trsv_cache: dict = {}
         # spec-keyed compiled solve plans (see repro.core.plan): replaces
@@ -371,6 +373,7 @@ class AzulEngine:
             cols_pad, np.asarray(plan.vals), self.u, parts,
             itemsize=np.dtype(self.dtype).itemsize,
         )
+        self._cols_pad_host = cols_pad
         self.cols = self._put(cols_pad, self._blk_spec)
         self.vals = self._put(plan.vals, self._blk_spec)
         segs = [(int(offs[t]), int(offs[t + 1])) for t in range(parts)]
@@ -643,6 +646,75 @@ class AzulEngine:
                                     self._put(vf, self._blk_spec))
         return self._vals_split_dev
 
+    def _interior_mask_dev(self):
+        """The (tiles, rows_p) interior-row mask as a device operand
+        (injectable overlap plans recompute the interior/frontier val
+        split in-program from it)."""
+        if self._imask_dev is None:
+            self._imask_dev = self._put(self.comm_plan.interior_mask,
+                                        P(self._all_axes, None))
+        return self._imask_dev
+
+    # -- fault-injection surface --------------------------------------------
+
+    def vals_template(self) -> np.ndarray:
+        """Host copy of the packed matrix value buffer in the layout the
+        compiled programs consume -- (rows, w) local ELL or (tiles,
+        rows_p, w) stacked dist blocks.  Corrupt a copy (see
+        ``repro.ft.inject``) and hand it to an injectable plan:
+        ``plan(b, vals=corrupted)``."""
+        if self.mode == "local":
+            return np.array(self.ell.vals)
+        return np.array(self.partition_plan.vals)
+
+    def cols_template(self) -> np.ndarray:
+        """Host copy of the packed ELL column indices matching
+        ``vals_template`` (padded-global ids locally and in 1d mode)."""
+        if self.mode == "local":
+            return np.array(self.ell.cols)
+        if self.mode == "1d":
+            return np.array(self._cols_pad_host)
+        return np.array(self.partition_plan.cols)
+
+    def halo_entry_mask(self) -> np.ndarray:
+        """Boolean mask over ``vals_template()`` marking stored entries
+        whose contribution depends on REMOTE vector shards -- the words a
+        dropped or corrupted halo exchange poisons.  1d mode classifies
+        per entry (global column outside the tile's own u-shard); 2d mode
+        uses the comm plan's frontier rows (every stored entry of a row
+        whose structure references any remote shard)."""
+        if self.mode == "local":
+            raise ValueError("halo faults need a distributed engine "
+                             "(single-device engines have no exchange)")
+        vals = self.vals_template()
+        if self.mode == "1d":
+            cols = self.cols_template()
+            tiles = np.arange(cols.shape[0])[:, None, None]
+            return ((cols // self.u) != tiles) & (vals != 0)
+        imask = (self.comm_plan.interior_mask
+                 if self.comm_plan is not None else None)
+        if imask is None:
+            return vals != 0
+        return (~imask[:, :, None]) & (vals != 0)
+
+    def vals_operand(self, vals=None):
+        """Device operand for an injectable plan's ``vals`` argument: the
+        engine's clean resident buffer when None, else a device_put of the
+        caller's host buffer (shape-checked against the packed layout)."""
+        if vals is None:
+            return (jnp.asarray(self.ell.vals) if self.mode == "local"
+                    else self.vals)
+        vals = np.asarray(vals, dtype=self.dtype)
+        want = ((np.asarray(self.ell.vals).shape if self.mode == "local"
+                 else np.asarray(self.partition_plan.vals).shape))
+        if vals.shape != want:
+            raise ValueError(
+                f"vals must match the packed value-buffer shape {want}, "
+                f"got {vals.shape}")
+        if self.mode == "local":
+            return jnp.asarray(vals)
+        return self._put(vals, self._blk_spec)
+
     # -- public ops ---------------------------------------------------------
 
     def spmv(self, x) -> np.ndarray:
@@ -783,34 +855,57 @@ class AzulEngine:
 
     def _lower_local(self, spec: SolveSpec, sdef, kind: str, cell: list):
         """Single-device program: padded-ELL closures + fused substrate
-        per the resolved kind, jitted (one trace per plan)."""
+        per the resolved kind, jitted (one trace per plan).
+
+        Injectable plans take the packed value buffer as a runtime operand
+        (the fault-injection surface -- ``plan(b, vals=corrupted)``)
+        instead of closing over it as a trace constant; the substrate and
+        matvec closures rebuild from the operand inside the trace, so one
+        compiled program serves clean and corrupted operators alike.  The
+        preconditioner operands (diagonal, IC(0) factors) stay clean --
+        faults target the streamed matrix."""
         ell = self.ell
         dinv = self._dinv_pad
         eff = registry.effective_precond(sdef, self.precond, local=True)
-        sub = None
-        if kind == "fused_ic0":
-            sub = fused_ic0_local_substrate(ell.cols, ell.vals, self._ic0,
-                                            self.n, self.n_pad)
-        elif kind == "fused":
-            sub = fused_local_substrate(
-                ell.cols, ell.vals, dinv=dinv if eff.uses_dinv else None,
-            )
         psolve = eff.local_apply(self)
 
-        def mv(x):
-            if x.ndim == 2:
-                return spmm_ell_padded(ell.cols, ell.vals, x)
-            return spmv_ell_padded(ell.cols, ell.vals, x)
+        def build_ctx(vals):
+            sub = None
+            if kind == "fused_ic0":
+                sub = fused_ic0_local_substrate(ell.cols, vals, self._ic0,
+                                                self.n, self.n_pad)
+            elif kind == "fused":
+                sub = fused_local_substrate(
+                    ell.cols, vals, dinv=dinv if eff.uses_dinv else None,
+                )
 
-        ctx = registry.SolveContext(
-            matvec=mv, psolve=psolve, dinv=dinv, substrate=sub,
-            iters=spec.iters, tol=spec.tol, max_iters=spec.max_iters,
-        )
+            def mv(x):
+                if x.ndim == 2:
+                    return spmm_ell_padded(ell.cols, vals, x)
+                return spmv_ell_padded(ell.cols, vals, x)
+
+            return registry.SolveContext(
+                matvec=mv, psolve=psolve, dinv=dinv, substrate=sub,
+                iters=spec.iters, tol=spec.tol, max_iters=spec.max_iters,
+                guard=spec.guard,
+            )
+
+        if spec.injectable:
+            def prog(b_pad, x0_pad, vals_rt):
+                cell[0] += 1
+                res = ensure_status(
+                    sdef.run(build_ctx(vals_rt), b_pad, x0_pad), b_pad)
+                return (res.x, res.res_norms, res.iters, res.status,
+                        res.bad_iter)
+
+            return jax.jit(prog)
+
+        ctx = build_ctx(ell.vals)
 
         def prog(b_pad, x0_pad):
             cell[0] += 1
-            res = sdef.run(ctx, b_pad, x0_pad)
-            return res.x, res.res_norms, res.iters
+            res = ensure_status(sdef.run(ctx, b_pad, x0_pad), b_pad)
+            return res.x, res.res_norms, res.iters, res.status, res.bad_iter
 
         return jax.jit(prog)
 
@@ -846,13 +941,20 @@ class AzulEngine:
 
         # communication hiding: the split val blocks ride as the LAST two
         # operands (the precond operand indices above stay stable) and the
-        # shard substrate grows matvec_start/finish over them
+        # shard substrate grows matvec_start/finish over them.  Injectable
+        # plans instead carry the interior-row mask and recompute the
+        # split in-program from the runtime vals operand (the host split
+        # would bake the clean values back in).
         overlap = self._overlaps(sdef, spec, kind)
         if overlap:
-            vi_dev, vf_dev = self._split_vals()
-            extra_args = extra_args + (vi_dev, vf_dev)
-            extra_specs = extra_specs + (blk, blk)
             mv_start, mv_finish = self._mk_matvec_split()
+            if spec.injectable:
+                extra_args = extra_args + (self._interior_mask_dev(),)
+                extra_specs = extra_specs + (P(self._all_axes, None),)
+            else:
+                vi_dev, vf_dev = self._split_vals()
+                extra_args = extra_args + (vi_dev, vf_dev)
+                extra_specs = extra_specs + (blk, blk)
 
         psum_axes = self._all_axes
 
@@ -903,7 +1005,12 @@ class AzulEngine:
                     amv, ps, lambda s: lax.psum(s, psum_axes)
                 )
             if overlap:
-                vi_loc, vf_loc = extra[-2], extra[-1]
+                if spec.injectable:
+                    mask_loc = extra[-1][..., None]
+                    vi_loc = jnp.where(mask_loc, vals_loc, 0)
+                    vf_loc = jnp.where(mask_loc, 0, vals_loc)
+                else:
+                    vi_loc, vf_loc = extra[-2], extra[-1]
                 sub = sub._replace(
                     matvec_start=mv_start,
                     matvec_finish=lambda h: mv_finish(h, cols_loc, vi_loc,
@@ -912,20 +1019,27 @@ class AzulEngine:
             ctx = registry.SolveContext(
                 matvec=amv, psolve=ps, dinv=dinv_loc, dot=dot, dot2=dot2,
                 substrate=sub, iters=spec.iters, tol=spec.tol,
-                max_iters=spec.max_iters,
+                max_iters=spec.max_iters, guard=spec.guard,
             )
-            res = sdef.run(ctx, b_loc, x0_loc)
-            return res.x, res.res_norms, res.iters
+            res = ensure_status(sdef.run(ctx, b_loc, x0_loc), b_loc)
+            # status/bad_iter derive from psum'd reduction slots, so they
+            # are replicated across tiles -- P() outputs like iters
+            return res.x, res.res_norms, res.iters, res.status, res.bad_iter
 
         f = _shard_map(
             prog, mesh=mesh,
             in_specs=(io_vec, io_vec, blk, blk) + extra_specs,
-            out_specs=(io_vec, P(), P()),
+            out_specs=(io_vec, P(), P(), P(), P()),
         )
 
-        def outer(b, x0):
-            cell[0] += 1
-            return f(b, x0, cols, vals, *extra_args)
+        if spec.injectable:
+            def outer(b, x0, vals_rt):
+                cell[0] += 1
+                return f(b, x0, cols, vals_rt, *extra_args)
+        else:
+            def outer(b, x0):
+                cell[0] += 1
+                return f(b, x0, cols, vals, *extra_args)
 
         return jax.jit(outer)
 

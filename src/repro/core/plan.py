@@ -71,6 +71,17 @@ class SolveSpec:
                decision like ``precond`` -- the matrix is repacked under
                the permutation, so a spec naming a different reorder than
                the engine was built with is rejected)
+    guard      in-loop numerical health guards (breakdown/divergence/
+               stagnation detection + structured per-RHS status; see
+               ``core.solvers``).  Default True; forced to False for
+               methods without the ``guarded`` capability.  ``guard=False``
+               on a guarded method lowers the lean pre-guard loop (the
+               A/B baseline the regression gate times against).
+    injectable matrix values become a runtime program argument instead of
+               a closed-over constant: ``plan(b, vals=...)`` can substitute
+               a (corrupted) value buffer per call without retracing --
+               the fault-injection surface (``repro.ft.inject``).  Default
+               False (values stay baked in; marginally faster dispatch).
     """
 
     method: str = "pcg"
@@ -82,6 +93,8 @@ class SolveSpec:
     fused: Any = "auto"
     layout: str | None = None
     reorder: str | None = None
+    guard: bool = True
+    injectable: bool = False
 
 
 def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
@@ -135,9 +148,16 @@ def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
         iters = max_iters          # one budget field: iters mirrors the cap
     else:
         tol, max_iters, iters = None, None, int(spec.iters)
+    if spec.guard not in (True, False):
+        raise ValueError(f"guard must be True or False, got {spec.guard!r}")
+    if spec.injectable not in (True, False):
+        raise ValueError(
+            f"injectable must be True or False, got {spec.injectable!r}")
+    guard = bool(spec.guard) and sdef.guarded
     return replace(spec, method=sdef.name, precond=pdef.name, iters=iters,
                    tol=tol, max_iters=max_iters, fused=fused, layout=layout,
-                   reorder=engine.reorder)
+                   reorder=engine.reorder, guard=guard,
+                   injectable=bool(spec.injectable))
 
 
 class SolvePlan:
@@ -155,6 +175,9 @@ class SolvePlan:
     traces      times the program was (re)traced -- 1 in steady state
     executions  times the plan was called
     last_iters  per-RHS iteration counts of the most recent execution
+    last_status per-RHS structured status codes (int32 STATUS_*) of the
+                most recent execution; ``last_status_names`` spells them
+    last_bad_iter  per-RHS first guard-tripped iteration (-1 = none)
     """
 
     def __init__(self, engine, spec: SolveSpec, fn: Callable, info: dict,
@@ -166,13 +189,29 @@ class SolvePlan:
         self._trace_cell = trace_cell
         self.executions = 0
         self.last_iters = None
+        self.last_status = None
+        self.last_bad_iter = None
 
     @property
     def fn(self):
         """The jitted device program ``fn(b_dev, x0_dev) -> (x, norms,
-        iters)`` in the engine's padded layout (exposed for ``.lower()``
-        introspection -- the roofline dry-run path)."""
+        iters, status, bad_iter)`` in the engine's padded layout (plus a
+        trailing ``vals`` operand for injectable plans; exposed for
+        ``.lower()`` introspection -- the roofline dry-run path)."""
         return self._fn
+
+    @property
+    def last_status_names(self):
+        """``last_status`` spelled via ``solvers.status_name`` (str for a
+        single RHS, list of str for a batch); None before any execution."""
+        if self.last_status is None:
+            return None
+        from . import solvers
+
+        st = np.asarray(self.last_status)
+        if st.ndim == 0:
+            return solvers.status_name(int(st))
+        return [solvers.status_name(int(c)) for c in st]
 
     @property
     def traces(self) -> int:
@@ -188,10 +227,15 @@ class SolvePlan:
                 "matching batch"
             )
 
-    def __call__(self, b, x0=None):
+    def __call__(self, b, x0=None, vals=None):
         """Execute: returns (x, res_norms) as numpy, mirroring the RHS
-        shape; per-RHS iteration counts land in ``self.last_iters`` (and,
-        for engine-level compatibility, ``engine.last_solve_info``)."""
+        shape; per-RHS iteration counts land in ``self.last_iters``,
+        structured status in ``self.last_status``/``last_bad_iter`` (and,
+        for engine-level compatibility, ``engine.last_solve_info``).
+
+        ``vals`` (injectable plans only) substitutes the matrix value
+        buffer for THIS call -- same shape/dtype as the engine's packed
+        values; None runs the clean operator."""
         b = np.asarray(b)
         self._check(b)
         if x0 is None:
@@ -203,11 +247,23 @@ class SolvePlan:
                 # so b and x0 agree on the batched sharding spec
                 x0 = np.broadcast_to(x0, b.shape)
         eng = self.engine
-        x, norms, its = self._fn(eng.to_device_vec(b), eng.to_device_vec(x0))
+        args = (eng.to_device_vec(b), eng.to_device_vec(x0))
+        if self.spec.injectable:
+            args += (eng.vals_operand(vals),)
+        elif vals is not None:
+            raise ValueError(
+                "this plan closes over the matrix values as constants; "
+                "build the spec with injectable=True to pass vals per call")
+        x, norms, its, status, bad = self._fn(*args)
         self.executions += 1
         self.last_iters = np.asarray(its)
+        self.last_status = np.asarray(status)
+        self.last_bad_iter = np.asarray(bad)
         info = dict(self.info)
         info["iters"] = self.last_iters
+        info["status"] = self.last_status
+        info["status_names"] = self.last_status_names
+        info["bad_iter"] = self.last_bad_iter
         eng.last_solve_info = info
         return eng.from_device_vec(np.asarray(x)), np.asarray(norms)
 

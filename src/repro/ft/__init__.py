@@ -1,3 +1,9 @@
-"""Fault tolerance: restart manager, elastic remesh, straggler mitigation."""
-from .restart import RestartManager  # noqa: F401
+"""Fault tolerance: restart manager, elastic remesh, straggler mitigation,
+deterministic fault injection for solves."""
+from .inject import FaultInjector, FaultSpec, corrupt_vals  # noqa: F401
+from .restart import (  # noqa: F401
+    FTSolveReport,
+    RestartManager,
+    SolveRestartManager,
+)
 from .straggler import StepTimer  # noqa: F401

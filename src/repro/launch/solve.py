@@ -11,6 +11,18 @@
 Add --mesh-shape 2x2 (any grid whose product <= device count) to run the
 distributed AzulEngine; on the CPU container use
 XLA_FLAGS=--xla_force_host_platform_device_count=N.
+
+Fault-tolerance demo flags:
+
+    # inject a NaN into the streamed values at iteration 15 and let the
+    # chunked restart driver detect it, roll back, and reconverge:
+    PYTHONPATH=src python -m repro.launch.solve --matrix lap2d_32 \
+        --method pcg_tol --max-iters 400 --inject nan --inject-at 15 \
+        --ft-chunk 20
+
+--no-guard runs the lean pre-guard loop (the A/B baseline); every run
+reports the structured solve ``status`` (converged | maxiter | breakdown |
+diverged | stagnated | unguarded) in the JSON output.
 """
 
 from __future__ import annotations
@@ -49,7 +61,30 @@ def main(argv=None):
                     help="bandwidth-reducing RCM reordering (shrinks halos)")
     ap.add_argument("--balance", default="nnz", choices=("nnz", "rows"),
                     help="row-block load balance (nnz = prefix-sum splits)")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="disable in-loop numerical health guards (the "
+                         "lean pre-guard loop; status reports 'unguarded')")
+    ap.add_argument("--inject", default="",
+                    choices=("", "nan", "bitflip", "halo_drop",
+                             "halo_perturb", "delay"),
+                    help="inject a deterministic fault (repro.ft.inject) "
+                         "and recover via the chunked restart driver")
+    ap.add_argument("--inject-at", type=int, default=10,
+                    help="global solver iteration the fault fires at")
+    ap.add_argument("--inject-seed", type=int, default=0)
+    ap.add_argument("--ft-chunk", type=int, default=25,
+                    help="restart-driver chunk size (iterations between "
+                         "verify/checkpoint points)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="persist solver state every chunk; reruns resume")
     args = ap.parse_args(argv)
+
+    # the engine below is built at dtype=float64: enable x64 so standalone
+    # CLI runs actually compute at the declared precision (without this,
+    # jax silently downcasts and a --tol 1e-8 solve floors out at the f32
+    # rounding level, reporting maxiter/stagnated instead of converged)
+    import jax
+    jax.config.update("jax_enable_x64", True)
 
     from ..core.engine import AzulEngine
     from ..core.plan import SolveSpec
@@ -76,10 +111,42 @@ def main(argv=None):
     import scipy.sparse as sp
     a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
     b = a @ x_true
+
+    spec = SolveSpec(method=args.method, iters=args.iters,
+                     tol=args.tol, max_iters=args.max_iters,
+                     fused=fused, layout=args.layout,
+                     guard=not args.no_guard)
+
+    if args.inject:
+        # fault-injected solve through the chunked restart driver: detect,
+        # roll back to the last verified state, reconverge
+        from ..ft import FaultInjector, FaultSpec, SolveRestartManager
+        from ..ft.straggler import StepTimer
+        mgr = SolveRestartManager(
+            eng, spec, chunk=args.ft_chunk,
+            checkpoint_dir=args.checkpoint_dir or None, timer=StepTimer())
+        inj = FaultInjector(eng, FaultSpec(
+            kind=args.inject, iteration=args.inject_at,
+            seed=args.inject_seed, delay_s=0.5))
+        rep = mgr.solve(b, injector=inj)
+        x = rep.x
+        rel = float(np.linalg.norm(x - x_true) / np.linalg.norm(x_true))
+        out = {
+            "matrix": args.matrix, "n": m.shape[0], "nnz": m.nnz,
+            "method": args.method, "precond": args.precond,
+            "mode": eng.mode, "injected": args.inject,
+            "injected_at": args.inject_at,
+            "status": rep.status, "iterations": rep.iterations,
+            "chunks": rep.chunks, "restarts": rep.restarts,
+            "faults": rep.faults, "resumed_from": rep.resumed_from,
+            "straggler_chunks": rep.straggler_chunks,
+            "rel_residual": rep.rel_residual, "rel_error": rel,
+        }
+        print(json.dumps(out, indent=1))
+        return 0 if rep.status == "converged" else 1
+
     # plan/execute: lower the spec once, run the compiled plan
-    plan = eng.plan(SolveSpec(method=args.method, iters=args.iters,
-                              tol=args.tol, max_iters=args.max_iters,
-                              fused=fused, layout=args.layout))
+    plan = eng.plan(spec)
     x, norms = plan(b)
     rel = float(np.linalg.norm(x - x_true) / np.linalg.norm(x_true))
     out = {
@@ -92,6 +159,8 @@ def main(argv=None):
         "reorder": plan.info["reorder"],
         "final_residual": float(norms[-1] if norms.ndim == 1 else norms[-1, 0]),
         "rel_error": rel,
+        "status": plan.last_status_names,
+        "bad_iter": int(np.asarray(plan.last_bad_iter)),
     }
     if "noc" in plan.info:
         out["noc"] = plan.info["noc"]

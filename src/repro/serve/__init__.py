@@ -1,4 +1,9 @@
 """Serving substrate: generate loop, slot-based continuous batching, and
 the request-coalescing batched sparse-solve server."""
 from .engine import generate, SlotServer  # noqa: F401
-from .solve_server import SolveServer, SolveOutcome, SolveRequest  # noqa: F401
+from .solve_server import (  # noqa: F401
+    SolveOutcome,
+    SolveRequest,
+    SolveRequestError,
+    SolveServer,
+)

@@ -34,7 +34,7 @@ CORE_EXPORTS = {
 }
 
 SERVE_EXPORTS = {"generate", "SlotServer", "SolveServer", "SolveOutcome",
-                 "SolveRequest"}
+                 "SolveRequest", "SolveRequestError"}
 
 # -- callable signatures (parameter name tuples) ------------------------------
 
@@ -55,9 +55,9 @@ SIGNATURES = {
     "core.AzulEngine.from_device_vec": ("self", "v"),
     "core.SolveSpec.__init__": (
         "self", "method", "precond", "iters", "tol", "max_iters", "batch",
-        "fused", "layout", "reorder",
+        "fused", "layout", "reorder", "guard", "injectable",
     ),
-    "core.SolvePlan.__call__": ("self", "b", "x0"),
+    "core.SolvePlan.__call__": ("self", "b", "x0", "vals"),
     "core.PlanCache.get": ("self", "spec", "build", "env"),
     "core.register_solver": ("sdef",),
     "core.register_precond": ("pdef",),
@@ -65,9 +65,9 @@ SIGNATURES = {
     "core.get_precond": ("name",),
     "serve.SolveServer.__init__": (
         "self", "engine", "max_batch", "method", "iters", "tol",
-        "max_iters", "spec",
+        "max_iters", "spec", "deadline_chunk", "timer",
     ),
-    "serve.SolveServer.submit": ("self", "b"),
+    "serve.SolveServer.submit": ("self", "b", "deadline"),
     "serve.SolveServer.step": ("self",),
     "serve.SolveServer.drain": ("self",),
     "serve.SolveServer.plan_for": ("self", "k_pad"),

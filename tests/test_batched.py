@@ -201,13 +201,10 @@ class _PlanSpy:
         self._staged.append(np.asarray(b).dtype)
         return self._plan(b) if x0 is None else self._plan(b, x0=x0)
 
-    @property
-    def traces(self):
-        return self._plan.traces
-
-    @property
-    def last_iters(self):
-        return self._plan.last_iters
+    def __getattr__(self, name):
+        # delegate the rest of the plan surface (traces, info, last_iters,
+        # last_status_names, ...) to the wrapped plan
+        return getattr(self._plan, name)
 
 
 def test_solve_server_stages_engine_dtype_preserves_request_dtype():

@@ -22,7 +22,7 @@ CURRENT = os.path.join(REPO, "BENCH_pcg.json")
 
 def _payload():
     return {
-        "schema": "bench_pcg/v4",
+        "schema": "bench_pcg/v5",
         "fused_vs_unfused": [{
             "matrix": "m", "us_per_iter_fused": 100.0,
             "us_per_iter_unfused": 120.0, "trace_rel_maxdiff": 0.0,
@@ -55,6 +55,16 @@ def _payload():
             "reductions_per_iter_pipelined": 1,
             "reductions_per_iter_pcg": 2,
             "us_per_iter_pipelined": 150.0, "us_per_iter_pcg": 180.0,
+        }],
+        "guarded": [{
+            "matrix": "m", "method": "pcg_tol", "precond": "jacobi",
+            "tol": 1e-8, "iters_guarded": 30, "iters_unguarded": 30,
+            "iters_match": True, "x_bitwise_identical": True,
+            "status_clean": "converged",
+            "collectives_guarded": 0, "collectives_unguarded": 0,
+            "collectives_match": True,
+            "detects_indefinite": True, "bad_x_finite": True,
+            "us_per_iter_guarded": 205.0, "us_per_iter_unguarded": 200.0,
         }],
     }
 
@@ -161,6 +171,45 @@ def test_pipelined_r0_divergence_fails():
     assert any("r0_reldiff" in f for f in g.failures)
 
 
+def test_guard_bitwise_identity_break_fails():
+    """A guarded clean solve that stops being bit-identical to the lean
+    loop means the freeze-select plumbing leaked into clean lanes."""
+    cur = _payload()
+    cur["guarded"][0]["x_bitwise_identical"] = False
+    g = check(cur, _payload())
+    assert any("x_bitwise_identical" in f for f in g.failures)
+
+
+def test_guard_added_collective_fails():
+    """Guards read already-reduced slots: ANY new collective in the lowered
+    guarded program is a regression of the zero-extra-collectives
+    invariant."""
+    cur = _payload()
+    cur["guarded"][0]["collectives_guarded"] = 1
+    cur["guarded"][0]["collectives_match"] = False
+    g = check(cur, _payload())
+    assert any("collectives_match" in f for f in g.failures)
+    assert any("collectives_guarded" in f for f in g.failures)
+
+
+def test_guard_detection_loss_fails():
+    cur = _payload()
+    cur["guarded"][0]["detects_indefinite"] = False
+    g = check(cur, _payload())
+    assert any("detects_indefinite" in f for f in g.failures)
+
+
+def test_guard_overhead_beyond_ratio_fails():
+    """Guarded timing is bounded against the SAME RUN's lean loop --
+    cross-machine noise cancels, so the ratio can be tight."""
+    cur = _payload()
+    cur["guarded"][0]["us_per_iter_guarded"] = 500.0
+    g = check(cur, _payload(), guard_overhead=2.0)
+    assert any("guard overhead" in f for f in g.failures)
+    cur["guarded"][0]["us_per_iter_guarded"] = 300.0
+    assert not check(cur, _payload(), guard_overhead=2.0).failures
+
+
 def test_overlap_model_drift_fails():
     """The comm-overlap fields are host-deterministic model outputs: any
     drift is a real interior/frontier-split behaviour change."""
@@ -235,10 +284,16 @@ def test_committed_bench_passes_gate():
 
 def test_committed_baseline_is_selfconsistent():
     base = json.load(open(BASELINE))
-    assert base["schema"] == "bench_pcg/v4"
+    assert base["schema"] == "bench_pcg/v5"
     assert base["tol_solves"], "baseline must pin tolerance iteration counts"
     assert base["noc_plans"], "baseline must pin the comm-plan traffic records"
     assert base["pipelined"], "baseline must pin the pipelined-PCG record"
+    assert base["guarded"], "baseline must pin the guarded-solve record"
+    for e in base["guarded"]:
+        assert e["iters_match"] is True
+        assert e["x_bitwise_identical"] is True
+        assert e["collectives_match"] is True
+        assert e["detects_indefinite"] is True
     for e in base["pipelined"]:
         assert e["reductions_per_iter_pipelined"] == 1
         assert e["reductions_per_iter_pcg"] == 2

@@ -1,0 +1,253 @@
+"""Breakdown guards: structured statuses on pathological inputs for every
+registry method, bitwise guarded-vs-unguarded identity on clean solves,
+pre-loop fault capture, and the status surface (status_name/ensure_status,
+plan.last_status, engine.last_solve_info)."""
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+import jax.numpy as jnp
+
+from repro.core import AzulEngine, SolveSpec
+from repro.core import solvers
+from repro.core.solvers import (
+    STATUS_BREAKDOWN,
+    STATUS_CONVERGED,
+    STATUS_DIVERGED,
+    STATUS_MAXITER,
+    STATUS_STAGNATED,
+    STATUS_UNGUARDED,
+    ensure_status,
+    status_name,
+)
+from repro.data.matrices import laplacian_2d
+
+ALL_METHODS = ("cg", "pcg", "pcg_tol", "pcg_pipelined", "pcg_pipelined_tol",
+               "jacobi")
+GUARDED_METHODS = ALL_METHODS[:-1]
+PCG_VARIANTS = ("pcg", "pcg_tol", "pcg_pipelined", "pcg_pipelined_tol")
+
+
+def _spec_kw(method, budget=40):
+    """iters/tol kwargs appropriate to fixed-iteration vs tolerance methods."""
+    if method.endswith("_tol"):
+        return dict(tol=1e-8, max_iters=budget)
+    return dict(iters=budget)
+
+
+def _solver_kw(method, budget=40):
+    if method.endswith("_tol"):
+        return dict(tol=1e-10, max_iters=budget)
+    return dict(iters=budget)
+
+
+def _setup(n=10):
+    m = laplacian_2d(n)
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    eng = AzulEngine(m, precond="jacobi", dtype=np.float64)
+    b = a @ np.random.default_rng(0).standard_normal(m.shape[0])
+    return m, a, eng, b
+
+
+def _dense_lap(n=32):
+    lap = (np.diag(2.0 * np.ones(n)) - np.diag(np.ones(n - 1), 1)
+           - np.diag(np.ones(n - 1), -1))
+    mv = lambda x: jnp.asarray(lap) @ x
+    b = np.random.default_rng(3).standard_normal(n)
+    return mv, jnp.asarray(b)
+
+
+# -- status surface units ----------------------------------------------------
+
+
+def test_status_names_cover_all_codes():
+    assert status_name(STATUS_CONVERGED) == "converged"
+    assert status_name(STATUS_MAXITER) == "maxiter"
+    assert status_name(STATUS_BREAKDOWN) == "breakdown"
+    assert status_name(STATUS_DIVERGED) == "diverged"
+    assert status_name(STATUS_STAGNATED) == "stagnated"
+    assert status_name(STATUS_UNGUARDED) == "unguarded"
+
+
+def test_ensure_status_normalizes_preguard_results():
+    mv, b = _dense_lap(8)
+    res = solvers.pcg(mv, b, lambda r: r, iters=5, guard=False)
+    norm = ensure_status(res, b)
+    assert int(norm.status) == STATUS_UNGUARDED
+    assert int(norm.bad_iter) == -1
+
+
+# -- solver-level breakdown inputs, every guarded method ---------------------
+
+
+@pytest.mark.parametrize("method", PCG_VARIANTS)
+def test_indefinite_preconditioner_is_breakdown(method):
+    """psolve = -I makes rho = <r, Mr> < 0 on the first update: the guard
+    must flag breakdown at iteration 1 and freeze a finite iterate."""
+    mv, b = _dense_lap()
+    f = getattr(solvers, method)
+    res = f(mv, b, lambda r: -r, **_solver_kw(method, 50))
+    assert status_name(int(res.status)) == "breakdown"
+    assert int(res.bad_iter) == 1
+    assert bool(np.isfinite(np.asarray(res.x)).all())
+
+
+@pytest.mark.parametrize("method", GUARDED_METHODS)
+def test_nan_rhs_is_preloop_breakdown(method):
+    """NaN in b poisons r0 before the loop -- without init-time guards the
+    tolerance methods would skip the loop (NaN > tol is False) and falsely
+    report converged.  Must be breakdown with bad_iter 0."""
+    mv, b = _dense_lap()
+    bnan = b.at[0].set(np.nan)
+    f = getattr(solvers, method)
+    args = (mv, bnan) if method == "cg" else (mv, bnan, lambda r: r)
+    res = f(*args, **_solver_kw(method, 50))
+    assert status_name(int(res.status)) == "breakdown"
+    assert int(res.bad_iter) == 0
+
+
+def test_singular_operator_tol_flags_fault():
+    """A singular diagonal A with b having a nullspace component cannot
+    converge: pcg_tol sees the residual floor and flags rather than
+    spinning to max_iters claiming progress."""
+    n = 32
+    d = np.ones(n)
+    d[0] = 0.0
+    mv = lambda x: jnp.asarray(d) * x
+    b = jnp.asarray(np.ones(n))
+    res = solvers.pcg_tol(mv, b, lambda r: r, tol=1e-12, max_iters=300)
+    assert status_name(int(res.status)) in ("diverged", "stagnated",
+                                            "breakdown")
+    assert int(res.bad_iter) >= 0
+    res = solvers.pcg_pipelined_tol(mv, b, lambda r: r, tol=1e-12,
+                                    max_iters=400)
+    assert status_name(int(res.status)) in ("diverged", "stagnated",
+                                            "breakdown")
+
+
+def test_nonsymmetric_operator_tol_stagnates():
+    """CG on a skew-dominated (non-SPD) operator makes no progress; the
+    stall detector fires after STALL_WINDOW iterations without a new best
+    residual instead of burning the whole budget."""
+    n = 32
+    S = np.zeros((n, n))
+    for i in range(n - 1):
+        S[i, i + 1] = 10.0
+        S[i + 1, i] = -10.0
+    J = np.eye(n) + S
+    mv = lambda x: jnp.asarray(J) @ x
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    res = solvers.pcg_tol(mv, b, lambda r: r, tol=1e-10, max_iters=300)
+    assert status_name(int(res.status)) in ("stagnated", "diverged",
+                                            "breakdown")
+    assert int(res.iters) < 300  # flagged before exhausting the budget
+
+
+# -- engine-level: zero RHS, clean statuses, bitwise identity ----------------
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_zero_rhs_is_clean(method):
+    """b = 0 must not trip any guard: x stays finite (zero), tolerance
+    methods report converged, fixed-iteration methods maxiter, jacobi
+    unguarded."""
+    m, _, eng, _ = _setup()
+    p = eng.plan(SolveSpec(method=method, **_spec_kw(method)))
+    x, _ = p(np.zeros(m.shape[0]))
+    expect = ("converged" if method.endswith("_tol")
+              else "unguarded" if method == "jacobi" else "maxiter")
+    assert p.last_status_names == expect
+    assert int(np.asarray(p.last_bad_iter)) == -1
+    assert bool(np.isfinite(np.asarray(x)).all())
+
+
+@pytest.mark.parametrize("method", GUARDED_METHODS)
+def test_clean_solve_guarded_bitwise_identical_to_unguarded(method):
+    """The freeze-on-fault guards are jnp.where selects on an all-true mask
+    for healthy solves: the guarded iterate must be BITWISE identical to
+    the lean pre-guard loop, not merely close."""
+    _, _, eng, b = _setup()
+    kw = _spec_kw(method)
+    xg, ng = eng.plan(SolveSpec(method=method, guard=True, **kw))(b)
+    xu, nu = eng.plan(SolveSpec(method=method, guard=False, **kw))(b)
+    assert np.asarray(xg).tobytes() == np.asarray(xu).tobytes()
+    assert np.asarray(ng).tobytes() == np.asarray(nu).tobytes()
+
+
+def test_clean_batched_solve_bitwise_identical_and_statused():
+    _, a, eng, b = _setup()
+    B = np.stack([b, 2.0 * b, a @ np.ones(a.shape[0])])
+    kw = dict(method="pcg_tol", tol=1e-8, max_iters=200, batch=3)
+    pg = eng.plan(SolveSpec(guard=True, **kw))
+    pu = eng.plan(SolveSpec(guard=False, **kw))
+    xg, _ = pg(B)
+    xu, _ = pu(B)
+    assert np.asarray(xg).tobytes() == np.asarray(xu).tobytes()
+    assert list(pg.last_status_names) == ["converged"] * 3
+    assert [int(v) for v in np.asarray(pg.last_bad_iter)] == [-1] * 3
+    assert pu.last_status_names == ["unguarded"] * 3
+
+
+def test_guarded_clean_statuses_and_info_surface():
+    """Healthy engine solves: correct terminal status per method family and
+    a populated engine.last_solve_info mirror."""
+    _, _, eng, b = _setup()
+    p = eng.plan(SolveSpec(method="pcg_tol", tol=1e-8, max_iters=200))
+    x, norms = p(b)
+    assert p.last_status_names == "converged"
+    info = eng.last_solve_info
+    assert info["status_names"] == "converged"
+    assert int(np.asarray(info["bad_iter"])) == -1
+    assert int(np.asarray(info["status"])) == STATUS_CONVERGED
+    assert info["iters"] >= 1
+    # fixed-iteration budget exhausted is maxiter, not a fault
+    p2 = eng.plan(SolveSpec(method="pcg", iters=3))
+    p2(b)
+    assert p2.last_status_names == "maxiter"
+    assert int(np.asarray(p2.last_bad_iter)) == -1
+
+
+def test_guard_false_reports_unguarded():
+    _, _, eng, b = _setup()
+    p = eng.plan(SolveSpec(method="pcg_tol", tol=1e-8, max_iters=200,
+                           guard=False))
+    p(b)
+    assert p.last_status_names == "unguarded"
+    assert int(np.asarray(p.last_bad_iter)) == -1
+
+
+# -- injectable plans: corrupted operands hit the guards ---------------------
+
+
+def test_injectable_nan_vals_is_preloop_breakdown():
+    """NaN injected into the value operand poisons the initial residual:
+    the init-time guard must catch it (bad_iter 0), not report converged."""
+    _, _, eng, b = _setup()
+    p = eng.plan(SolveSpec(method="pcg_tol", tol=1e-8, max_iters=200,
+                           injectable=True))
+    vbad = eng.vals_template()
+    vbad.reshape(-1)[np.flatnonzero(vbad.reshape(-1) != 0)[0]] = np.nan
+    x, _ = p(b, vals=vbad)
+    assert p.last_status_names == "breakdown"
+    assert int(np.asarray(p.last_bad_iter)) == 0
+    # clean operand through the SAME program stays healthy
+    p(b, vals=eng.vals_template())
+    assert p.last_status_names == "converged"
+
+
+@pytest.mark.parametrize("method", ("pcg_tol", "pcg_pipelined_tol"))
+def test_injectable_indefinite_operator_is_breakdown(method):
+    """Negating one diagonal entry makes A indefinite: pAp goes negative
+    within a few iterations and the guard freezes a finite iterate."""
+    _, _, eng, b = _setup()
+    p = eng.plan(SolveSpec(method=method, tol=1e-8, max_iters=200,
+                           injectable=True))
+    vbad = eng.vals_template()
+    cols = eng.cols_template()
+    slot = np.flatnonzero(cols[1] == 1)[0]
+    vbad[1, slot] *= -1000.0
+    x, _ = p(b, vals=vbad)
+    assert p.last_status_names == "breakdown"
+    assert int(np.asarray(p.last_bad_iter)) >= 0
+    assert bool(np.isfinite(np.asarray(x)).all())
