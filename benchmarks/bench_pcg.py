@@ -490,7 +490,7 @@ def run_guarded_solves(
 
 def collect_json(fused_payload, batch_payload, tol_payload=None,
                  noc_payload=None, pipelined_payload=None,
-                 guarded_payload=None) -> dict:
+                 guarded_payload=None, serving_payload=None) -> dict:
     """Assemble the machine-readable perf-trajectory record (BENCH_pcg.json
     schema: see README "Performance").  v2 added the tolerance-solve section
     (fused-vs-reference iteration counts, the regression gate's exact-match
@@ -500,13 +500,16 @@ def collect_json(fused_payload, batch_payload, tol_payload=None,
     iteration counts, reduction structure, the r0 trace-head regression)
     and the comm-overlap fields on the noc_plans entries; v5 adds the
     guarded section (guard-vs-lean timings, bitwise-identity and
-    zero-extra-collectives assertions, the indefinite-detection probe)."""
+    zero-extra-collectives assertions, the indefinite-detection probe);
+    v6 adds the serving section (SolveService load-generator runs:
+    open/closed-loop p50/p99 latency, throughput vs offered load,
+    zero-retrace steady state -- see ``benchmarks/bench_serve.py``)."""
     import jax
 
     from repro.kernels import ops
 
     return {
-        "schema": "bench_pcg/v5",
+        "schema": "bench_pcg/v6",
         "backend": jax.default_backend(),
         "kernel_mode": ops.backend_mode(),
         "x64": bool(jax.config.jax_enable_x64),
@@ -516,6 +519,7 @@ def collect_json(fused_payload, batch_payload, tol_payload=None,
         "noc_plans": noc_payload or [],
         "pipelined": pipelined_payload or [],
         "guarded": guarded_payload or [],
+        "serving": serving_payload or [],
     }
 
 

@@ -1,0 +1,117 @@
+"""Serving benchmark: drive :class:`repro.serve.SolveService` with the
+load generator and record latency/throughput curves.
+
+Produces the ``serving`` section of ``BENCH_pcg.json`` (schema v6), gated
+by ``benchmarks/check_regression.py``:
+
+* **closed-loop** entries (fixed client population): latency here is
+  batched service time with no queueing inflation, so p50/p99 are stable
+  across runs and sit under the timing-ratio gate.  ``completed``,
+  ``rejected``, ``errors`` (non-converged statuses) and ``retraces``
+  (must be 0 -- the compile-free steady-state contract) are gated
+  exactly.
+* **open-loop** entries (Poisson arrivals at fixed offered load):
+  throughput-vs-offered-load plus the latency tail under queueing.
+  Counts gate exactly; latencies ride the generous timing gate.
+
+The workload: one small Laplacian operator solved to tolerance with
+seeded RHS -- small enough that the CI smoke run (interpret-mode kernels)
+finishes in seconds, real enough that every solve converges and the
+latency distribution reflects actual chunked solve work.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def _make_service(chunk: int, max_batch: int):
+    from repro.data.matrices import laplacian_2d
+    from repro.serve import SolveService
+
+    svc = SolveService(max_batch=max_batch, chunk=chunk, queue_max=None)
+    svc.register_operator("lap2d_12", laplacian_2d(12), method="pcg_tol",
+                          tol=1e-8, iters=400, precond="jacobi",
+                          dtype=np.float64)
+    return svc
+
+
+def run_serving(smoke: bool = False, seed: int = 0):
+    """Run the serving load points; returns (csv_rows, payload)."""
+    from repro.data.matrices import laplacian_2d
+    from repro.serve import run_load
+
+    chunk = 20
+    max_batch = 4
+    n = laplacian_2d(12).shape[0]
+    requests = 24 if smoke else 96
+    rng = np.random.default_rng(seed)
+    rhs = rng.standard_normal((16, n))
+
+    def make_rhs(i):
+        return rhs[i % rhs.shape[0]]
+
+    points = [("closed", {"concurrency": 2}),
+              ("closed", {"concurrency": 4})]
+    # offered loads chosen well under a CPU interpret-mode service's
+    # capacity so completed==requests holds on any CI machine; the latency
+    # tail still shows queueing when chunks collide with arrivals
+    points += [("open", {"rate": 10.0}), ("open", {"rate": 25.0})]
+
+    rows, payload = [], []
+    for mode, kw in points:
+        svc = _make_service(chunk, max_batch)
+        res = run_load(svc, make_rhs, operator="lap2d_12", mode=mode,
+                       requests=requests, seed=seed, **kw)
+        errors = sum(v for s, v in res["statuses"].items()
+                     if s != "converged")
+        entry = {
+            "matrix": "lap2d_12", "n": n, "method": "pcg_tol",
+            "mode": mode, "requests": res["requests"],
+            "chunk": chunk, "max_batch": max_batch,
+            "offered_rps": res.get("offered_rps", -1.0),
+            "concurrency": res.get("concurrency", -1),
+            "completed": res["completed"], "rejected": res["rejected"],
+            "errors": errors, "retraces": res["retraces"],
+            "p50_ms": round(res["p50_ms"], 3),
+            "p99_ms": round(res["p99_ms"], 3),
+            "mean_ms": round(res["mean_ms"], 3),
+            "throughput_rps": round(res["throughput_rps"], 3),
+            "chunks": svc.stats["chunks"],
+            "rebuckets": svc.stats["rebuckets"],
+            "plans": svc.stats["plans"],
+        }
+        payload.append(entry)
+        label = (f"serve_{mode}_c{kw.get('concurrency', '')}"
+                 if mode == "closed" else f"serve_{mode}_r{kw['rate']:g}")
+        rows.append((label, res["p50_ms"] * 1e3,
+                     f"p99={res['p99_ms']:.1f}ms "
+                     f"thru={res['throughput_rps']:.1f}rps "
+                     f"retraces={res['retraces']}"))
+    return rows, payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="write a serving-only payload here (check it with "
+                         "check_regression --sections serving)")
+    args = ap.parse_args(argv)
+    rows, payload = run_serving(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": "bench_pcg/v6", "serving": payload}, f,
+                      indent=1)
+        print(f"# wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

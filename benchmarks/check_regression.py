@@ -40,6 +40,13 @@ machines:
   bounded BOTH against its baseline and against the SAME RUN's lean loop
   (``--guard-overhead``, default 2x) -- the overhead of the in-loop health
   checks is gated where it is actually measurable.
+* **Serving** (``serving``): the always-on ``SolveService`` contract per
+  load point (matrix, mode, offered load / concurrency).  ``completed``,
+  ``rejected`` and ``errors`` (non-converged statuses) match exactly, and
+  ``retraces`` must stay 0 -- the compile-free steady-state guarantee of
+  the continuous-batching loop.  Latency quantiles (``p50_ms``/``p99_ms``/
+  ``mean_ms``) ride the generous timing-ratio gate, like every other
+  wall-clock field.
 * **Timings** (``us_per_iter*``): within ``--timing-ratio`` (default 10x)
   of baseline.  Interpret-mode CPU timings are noisy and machine-dependent;
   the generous ratio still catches order-of-magnitude regressions (an
@@ -109,8 +116,9 @@ class Gate:
             self.fail(f"{where}: {field} missing ({base!r} -> {cur!r})")
             return
         if base > 0 and cur > base * self.ratio:
-            self.fail(f"{where}: {field} regressed {base:.1f} -> {cur:.1f} us "
-                      f"(> {self.ratio:.0f}x baseline)")
+            unit = "ms" if field.endswith("_ms") else "us"
+            self.fail(f"{where}: {field} regressed {base:.1f} -> {cur:.1f} "
+                      f"{unit} (> {self.ratio:.0f}x baseline)")
 
     def section(self, name: str, keys: tuple[str, ...], cur: list, base: list):
         """Pair up entries; every baseline entry must exist in current."""
@@ -123,12 +131,23 @@ class Gate:
             yield f"{name}{list(k)}", ce, be
 
 
+#: every gate-checked payload section, in check order
+SECTIONS = ("tol_solves", "fused_vs_unfused", "batch_sweep", "noc_plans",
+            "guarded", "pipelined", "serving")
+
+
 def check(cur: dict, base: dict, timing_ratio: float = 10.0,
-          guard_overhead: float = 2.0) -> Gate:
+          guard_overhead: float = 2.0,
+          sections: tuple[str, ...] | None = None) -> Gate:
     g = Gate(timing_ratio, guard_overhead)
     g.exact("payload", "schema", cur.get("schema"), base.get("schema"))
+    want = set(SECTIONS if sections is None else sections)
 
-    for where, ce, be in g.section("tol_solves", ("matrix", "precond"),
+    def _skip(name: str) -> bool:
+        return name not in want
+
+    for where, ce, be in () if _skip("tol_solves") else g.section(
+                                   "tol_solves", ("matrix", "precond"),
                                    cur.get("tol_solves", []),
                                    base.get("tol_solves", [])):
         g.exact(where, "iters_fused", ce.get("iters_fused"), be.get("iters_fused"))
@@ -144,7 +163,8 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0,
         g.timing(where, "us_per_iter_fused", ce.get("us_per_iter_fused"),
                  be.get("us_per_iter_fused"))
 
-    for where, ce, be in g.section("fused_vs_unfused", ("matrix",),
+    for where, ce, be in () if _skip("fused_vs_unfused") else g.section(
+                                   "fused_vs_unfused", ("matrix",),
                                    cur.get("fused_vs_unfused", []),
                                    base.get("fused_vs_unfused", [])):
         g.leq(where, "trace_rel_maxdiff", ce.get("trace_rel_maxdiff"), EQUIV_TOL)
@@ -156,7 +176,8 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0,
         g.timing(where, "us_per_iter_unfused", ce.get("us_per_iter_unfused"),
                  be.get("us_per_iter_unfused"))
 
-    for where, ce, be in g.section("batch_sweep", ("matrix", "k"),
+    for where, ce, be in () if _skip("batch_sweep") else g.section(
+                                   "batch_sweep", ("matrix", "k"),
                                    cur.get("batch_sweep", []),
                                    base.get("batch_sweep", [])):
         g.leq(where, "batch_vs_seq_maxerr", ce.get("batch_vs_seq_maxerr"),
@@ -164,7 +185,8 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0,
         g.timing(where, "us_per_iter_per_rhs", ce.get("us_per_iter_per_rhs"),
                  be.get("us_per_iter_per_rhs"))
 
-    for where, ce, be in g.section("noc_plans",
+    for where, ce, be in () if _skip("noc_plans") else g.section(
+                                   "noc_plans",
                                    ("matrix", "reorder", "mode", "grid"),
                                    cur.get("noc_plans", []),
                                    base.get("noc_plans", [])):
@@ -182,7 +204,8 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0,
                       "overlap_efficiency"):
             g.exact(where, field, ce.get(field), be.get(field))
 
-    for where, ce, be in g.section("guarded", ("matrix", "method"),
+    for where, ce, be in () if _skip("guarded") else g.section(
+                                   "guarded", ("matrix", "method"),
                                    cur.get("guarded", []),
                                    base.get("guarded", [])):
         g.exact(where, "iters_guarded", ce.get("iters_guarded"),
@@ -217,7 +240,8 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0,
             g.fail(f"{where}: guard overhead {ug:.1f} us vs lean {uu:.1f} us "
                    f"(> {g.guard_overhead:.1f}x)")
 
-    for where, ce, be in g.section("pipelined", ("matrix", "precond"),
+    for where, ce, be in () if _skip("pipelined") else g.section(
+                                   "pipelined", ("matrix", "precond"),
                                    cur.get("pipelined", []),
                                    base.get("pipelined", [])):
         g.exact(where, "iters_pipelined", ce.get("iters_pipelined"),
@@ -233,6 +257,21 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0,
         g.timing(where, "us_per_iter_pipelined",
                  ce.get("us_per_iter_pipelined"),
                  be.get("us_per_iter_pipelined"))
+
+    for where, ce, be in () if _skip("serving") else g.section(
+                                   "serving",
+                                   ("matrix", "mode", "offered_rps",
+                                    "concurrency"),
+                                   cur.get("serving", []),
+                                   base.get("serving", [])):
+        for field in ("method", "requests", "chunk", "max_batch",
+                      "completed", "rejected", "errors"):
+            g.exact(where, field, ce.get(field), be.get(field))
+        # the compile-free steady-state contract: warm-pool plans trace
+        # once; any retrace means the service re-entered the compiler
+        g.exact(where, "retraces", ce.get("retraces"), 0)
+        for field in ("p50_ms", "p99_ms", "mean_ms"):
+            g.timing(where, field, ce.get(field), be.get(field))
     return g
 
 
@@ -248,6 +287,11 @@ def main(argv=None) -> int:
     ap.add_argument("--guard-overhead", type=float, default=2.0,
                     help="allowed guarded/lean per-iteration timing ratio "
                          "within ONE payload (same machine, same run)")
+    ap.add_argument("--sections", default="",
+                    help="comma-separated subset of payload sections to "
+                         "gate (default: all); e.g. the serve-smoke CI job "
+                         "produces a serving-only payload and passes "
+                         "--sections serving")
     ap.add_argument("--update-baseline", action="store_true",
                     help="overwrite the baseline with the current payload "
                          "(the documented escape hatch for intentional "
@@ -261,10 +305,10 @@ def main(argv=None) -> int:
         with open(args.current) as f:
             cur = json.load(f)
         problems = []
-        if cur.get("schema") != "bench_pcg/v5":
+        if cur.get("schema") != "bench_pcg/v6":
             problems.append(f"unexpected schema {cur.get('schema')!r}")
         for section in ("fused_vs_unfused", "tol_solves", "noc_plans",
-                        "pipelined", "guarded"):
+                        "pipelined", "guarded", "serving"):
             if not cur.get(section):
                 problems.append(f"section {section!r} is empty/missing")
         if problems:
@@ -280,8 +324,15 @@ def main(argv=None) -> int:
         cur = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
+    sections = None
+    if args.sections:
+        sections = tuple(s for s in args.sections.split(",") if s)
+        unknown = [s for s in sections if s not in SECTIONS]
+        if unknown:
+            print(f"unknown --sections {unknown}; known: {list(SECTIONS)}")
+            return 2
     g = check(cur, base, timing_ratio=args.timing_ratio,
-              guard_overhead=args.guard_overhead)
+              guard_overhead=args.guard_overhead, sections=sections)
     if g.failures:
         print(f"PERF REGRESSION: {len(g.failures)} failure(s) "
               f"({g.checks} checks):")

@@ -86,8 +86,11 @@ def main(argv=None) -> None:
             # comm-plan traffic records are host-side NumPy (no devices,
             # milliseconds) -- full coverage even in the smoke run
             nrows, noc_payload = bench_pcg.run_noc_plans()
+            from . import bench_serve
+            srows, serving_payload = bench_serve.run_serving(
+                smoke=args.smoke)
             for name, us, derived in (frows + brows + trows + prows +
-                                      grows + nrows):
+                                      grows + nrows + srows):
                 print(f"{name},{us:.1f},{derived}")
             for e in tol_payload:
                 # tolerance-mode convergence from the bounded trace ring
@@ -97,7 +100,8 @@ def main(argv=None) -> None:
                 json.dump(
                     bench_pcg.collect_json(fused_payload, batch_payload,
                                            tol_payload, noc_payload,
-                                           pipe_payload, guarded_payload),
+                                           pipe_payload, guarded_payload,
+                                           serving_payload),
                     f, indent=1)
             print(f"# wrote {args.json}")
         except Exception:

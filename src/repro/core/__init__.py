@@ -18,7 +18,7 @@ as traffic demands.  New methods/preconditioners register through
 
 from .commplan import CommPlan
 from .formats import CSR, ELL, BCSR
-from .plan import PlanCache, SolvePlan, SolveSpec
+from .plan import PlanCache, SolvePlan, SolveSpec, chunk_spec
 from .registry import (
     PrecondDef,
     SolverDef,
@@ -40,6 +40,7 @@ __all__ = [
     "SolveSpec",
     "SolvePlan",
     "PlanCache",
+    "chunk_spec",
     "SolverDef",
     "PrecondDef",
     "register_solver",

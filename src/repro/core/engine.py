@@ -1062,12 +1062,36 @@ class AzulEngine:
             "API').",
         )
         b = np.asarray(b)
+        # no knob resolution here: canonicalize() owns the engine-knob
+        # deference ('auto'/None -> engine.fused), the shim just spells
+        # the kwargs as a spec
         spec = SolveSpec(
             method=method, iters=iters, tol=tol, max_iters=max_iters,
             batch=b.shape[0] if b.ndim == 2 else None,
-            fused=self.fused if fused is None else fused,
+            fused="auto" if fused is None else fused,
         )
         return self.plan(spec)(b, x0=x0)
+
+    def device_bytes(self) -> int:
+        """Device-resident footprint of this engine's operator state in
+        bytes: matrix blocks (packed ELL cols/vals), preconditioner
+        buffers (inverse diagonal, IC(0) factor planes).  The serving
+        layer's operator registry charges this against its memory budget
+        for admission/eviction decisions.  Plan programs/executables are
+        not counted (they are XLA-owned and tiny next to the operands)."""
+        total = 0
+        seen: set[int] = set()
+        for attr in ("ell", "cols", "vals", "_dinv_pad", "_ic0"):
+            obj = getattr(self, attr, None)
+            if obj is None:
+                continue
+            for leaf in jax.tree_util.tree_leaves(obj):
+                nb = getattr(leaf, "nbytes", None)
+                if nb is None or id(leaf) in seen:
+                    continue
+                seen.add(id(leaf))
+                total += int(nb)
+        return total
 
     # -- distributed SpTRSV (2D block-stage forward substitution) -----------
 

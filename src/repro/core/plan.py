@@ -39,7 +39,7 @@ import numpy as np
 
 from . import registry
 
-__all__ = ["SolveSpec", "SolvePlan", "PlanCache"]
+__all__ = ["SolveSpec", "SolvePlan", "PlanCache", "chunk_spec"]
 
 
 @dataclass(frozen=True)
@@ -61,7 +61,8 @@ class SolveSpec:
     batch      None for a single (n,) RHS, k for a stacked (k, n) batch --
                plans are shape-specialized, the serving path builds one
                plan per batch bucket
-    fused      'auto' | True | False; canonicalized to the resolved bool
+    fused      None/'auto' (engine knob decides) | True | False;
+               canonicalized to the resolved bool
     layout     distributed communication layout: None/'auto' (engine knob,
                then the compiled comm plan decides), 'halo' (force the
                structure-compiled pull schedule) or 'dense' (blanket
@@ -123,7 +124,13 @@ def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
     if spec.batch is not None and not sdef.batched:
         raise ValueError(f"solver {sdef.name!r} does not support batched RHS")
     local = engine.mode == "local"
-    fused = registry.resolve_fused(sdef, pdef, local, spec.fused)
+    # None and 'auto' defer to the engine-level knob (mirrors ``layout``
+    # below); this is the ONE place the legacy kwargs surface's knob
+    # resolution lives now -- ``engine.solve`` builds a spec and trusts it
+    fused_knob = spec.fused
+    if fused_knob in (None, "auto"):
+        fused_knob = engine.fused
+    fused = registry.resolve_fused(sdef, pdef, local, fused_knob)
     if spec.reorder is not None and spec.reorder != engine.reorder:
         raise ValueError(
             f"spec reorder {spec.reorder!r} != engine reorder "
@@ -158,6 +165,38 @@ def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
                    tol=tol, max_iters=max_iters, fused=fused, layout=layout,
                    reorder=engine.reorder, guard=guard,
                    injectable=bool(spec.injectable))
+
+
+def chunk_spec(spec: SolveSpec, chunk: int, batch: int | None = None,
+               fixed_length: bool = True) -> SolveSpec:
+    """Derive the chunk spec continuous serving ticks between re-buckets.
+
+    A chunk is ``spec`` cut down to ``chunk`` iterations so the serving
+    loop can warm-start it repeatedly (``plan(b, x0=x)``) and re-bucket
+    the cohort at every boundary.  Two flavors:
+
+    * ``fixed_length=True`` (continuous batching): tolerance methods run
+      with ``tol=0.0`` so EVERY lane executes exactly ``chunk`` iterations
+      per call regardless of who shares the batch -- that is what makes a
+      lane's trajectory bitwise independent of its cohort (convergence is
+      detected host-side at chunk boundaries from the residual trace).
+    * ``fixed_length=False`` (the legacy deadline path): the chunk keeps
+      the real tolerance, so a chunk stops early once every lane converges.
+
+    Fixed-iteration methods just get ``iters=chunk``.  Keep ``chunk``
+    under the solver stall window (100): a converged lane riding a
+    fixed-length chunk replays a flat residual, and a longer chunk would
+    trip the stagnation guard on it.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    sdef = registry.get_solver(spec.method)
+    if sdef.tolerance:
+        return replace(spec, batch=batch, iters=int(chunk),
+                       max_iters=int(chunk),
+                       tol=0.0 if fixed_length else spec.tol)
+    return replace(spec, batch=batch, iters=int(chunk), max_iters=None,
+                   tol=None)
 
 
 class SolvePlan:
@@ -216,6 +255,20 @@ class SolvePlan:
     @property
     def traces(self) -> int:
         return self._trace_cell[0]
+
+    def assert_steady(self) -> None:
+        """Raise RuntimeError if this plan ever retraced.
+
+        The compile-free steady-state contract: a built plan traces exactly
+        once, however many times serving re-enters it (warm starts, cohort
+        changes, value substitution).  A violation is a real serving bug
+        (per-step recompiles), so fail loudly -- RuntimeError survives
+        ``python -O``, unlike ``assert``."""
+        if self.traces > 1:
+            raise RuntimeError(
+                f"plan for spec {self.spec} retraced ({self.traces} traces):"
+                " the compile-free steady-state contract broke"
+            )
 
     def _check(self, b: np.ndarray) -> None:
         n = self.engine.n

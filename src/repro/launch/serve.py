@@ -1,12 +1,21 @@
 """Serving driver: batched generation / continuous batching demo, plus the
-request-coalescing sparse-solver serving path.
+always-on sparse-solve service.
 
     PYTHONPATH=src python -m repro.launch.serve --arch paligemma-3b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
-    # solver serving: coalesce pending RHS into batched AzulEngine solves
+    # solve service: submit RHS against registered operators, drain the
+    # continuous-batching tick loop
     PYTHONPATH=src python -m repro.launch.serve --solver --matrix lap2d_32 \
-        --requests 12 --coalesce 8 --iters 150
+        --requests 12 --coalesce 8 --method pcg_tol --tol 1e-8
+
+    # several resident operators in one process, round-robin traffic
+    PYTHONPATH=src python -m repro.launch.serve --solver \
+        --operators lap2d_32,banded_1k --requests 12
+
+    # load generator: open-loop Poisson arrivals at 50 req/s
+    PYTHONPATH=src python -m repro.launch.serve --solver --matrix lap2d_32 \
+        --load-gen open --rate 50 --requests 40
 """
 
 from __future__ import annotations
@@ -21,23 +30,26 @@ import numpy as np
 
 
 def _solver_main(args) -> int:
-    """Serve sparse solves: submit ``--requests`` RHS, drain them through
-    ``SolveServer`` (up to ``--coalesce`` RHS per batched solve)."""
+    """Serve sparse solves through :class:`repro.serve.SolveService`:
+    register one operator per ``--operators`` name (or ``--matrix``),
+    submit ``--requests`` RHS round-robin, and drain the continuous-
+    batching tick loop -- or hand the service to the load generator
+    (``--load-gen open|closed``)."""
     jax.config.update("jax_enable_x64", True)  # f64 engine, like the benches
 
-    from ..core.engine import AzulEngine
     from ..core.plan import SolveSpec
     from ..data.matrices import suite
-    from ..serve import SolveServer
+    from ..serve import SolveService, run_load
 
     mats = suite("small")
-    if args.matrix not in mats:
-        mats.update(suite("large"))
-    if args.matrix not in mats:
-        raise SystemExit(
-            f"unknown --matrix {args.matrix!r}; available: {', '.join(sorted(mats))}"
-        )
-    m = mats[args.matrix]
+    mats.update(suite("large"))
+    names = [s for s in (args.operators.split(",") if args.operators
+                         else [args.matrix]) if s]
+    for name in names:
+        if name not in mats:
+            raise SystemExit(
+                f"unknown matrix {name!r}; available: {', '.join(sorted(mats))}"
+            )
 
     mesh = None
     if args.mesh_shape:
@@ -47,38 +59,58 @@ def _solver_main(args) -> int:
             raise SystemExit("--mesh-shape must be RxC, e.g. 2x2")
         mesh = make_mesh(shape, ("data", "model"))
 
-    eng = AzulEngine(m, mesh=mesh, precond=args.precond, dtype=np.float64,
-                     layout=args.layout, reorder=args.reorder)
-    # per-bucket plans are built from this spec (batch filled per bucket);
-    # dispatch resolves once at plan construction, not per step
+    # one frozen spec drives every operator's warm pool; the service builds
+    # per-(operator, bucket) plans from it -- dispatch resolves at plan
+    # construction, never per tick
     spec = SolveSpec(method=args.method, iters=args.iters, tol=args.tol,
                      layout=args.layout)
-    srv = SolveServer(eng, max_batch=args.coalesce, spec=spec)
+    svc = SolveService(max_batch=args.coalesce, chunk=args.chunk)
+    for name in names:
+        svc.register_operator(name, mats[name], spec=spec,
+                              precond=args.precond, dtype=np.float64,
+                              layout=args.layout, reorder=args.reorder,
+                              mesh=mesh)
 
     import scipy.sparse as sp
-    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
     rng = np.random.default_rng(0)
-    x_true = rng.standard_normal((args.requests, m.shape[0]))
-    ids = [srv.submit(a @ x_true[i]) for i in range(args.requests)]
+
+    if args.load_gen:
+        n0 = mats[names[0]].shape[0]
+        rhs = rng.standard_normal((min(args.requests, 32), n0))
+        res = run_load(svc, lambda i: rhs[i % rhs.shape[0]],
+                       operator=names[0], mode=args.load_gen,
+                       requests=args.requests, rate=args.rate,
+                       concurrency=args.concurrency)
+        res.update({"matrix": names[0], "n": n0, "method": args.method})
+        print(json.dumps(res, indent=1))
+        return 0
+
+    x_true, ids = {}, []
+    for i in range(args.requests):
+        name = names[i % len(names)]
+        m = mats[name]
+        a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+        xt = rng.standard_normal(m.shape[0])
+        rid = svc.submit(a @ xt, name)
+        x_true[rid] = xt
+        ids.append(rid)
 
     t0 = time.perf_counter()
-    done = srv.drain()
+    done = svc.drain()
     dt = time.perf_counter() - t0
-    err = max(
-        float(np.abs(done[rid].x - x_true[i]).max()) for i, rid in enumerate(ids)
-    )
+    err = max(float(np.abs(done[rid].x - x_true[rid]).max()) for rid in ids)
     out = {
-        "matrix": args.matrix, "n": m.shape[0],
-        "requests": args.requests, "coalesce": args.coalesce,
-        "batches": srv.stats["batches"], "padded_rhs": srv.stats["padded_rhs"],
-        "bucket_plans": srv.stats["plans"],
+        "operators": names, "requests": args.requests,
+        "coalesce": args.coalesce, "chunk": args.chunk,
+        "ticks": svc.stats["ticks"], "chunks": svc.stats["chunks"],
+        "rebuckets": svc.stats["rebuckets"],
+        "bucket_plans": svc.stats["plans"],
+        "resident_bytes": svc.resident_bytes(),
         "wall_s": round(dt, 3),
         "solves_per_s": round(args.requests / dt, 2),
         "verify_maxerr": err,
-        "substrate": eng.last_solve_info.get("substrate", "reference"),
-        "layout": eng.last_solve_info.get("layout", "dense"),
     }
-    if args.method == "pcg_tol":
+    if args.method.endswith("tol"):
         its = [done[rid].iters for rid in ids]
         out["tol"] = args.tol
         out["iters_mean"] = round(float(np.mean(its)), 2)
@@ -100,11 +132,22 @@ def main(argv=None):
     ap.add_argument("--solver", action="store_true",
                     help="serve sparse solves (request-coalescing batched path)")
     ap.add_argument("--matrix", default="lap2d_32")
+    ap.add_argument("--operators", default="",
+                    help="comma-separated suite matrices to register as "
+                         "resident operators (overrides --matrix)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--coalesce", type=int, default=8,
                     help="max RHS coalesced into one batched solve")
-    ap.add_argument("--method", default="pcg",
-                    help="pcg | pcg_tol (tolerance-stopped) | cg | ...")
+    ap.add_argument("--chunk", type=int, default=25,
+                    help="iterations per continuous-batching chunk")
+    ap.add_argument("--load-gen", default="", choices=("", "open", "closed"),
+                    help="run the load generator instead of a fixed drain")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="open-loop offered load, requests/second")
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="closed-loop client population")
+    ap.add_argument("--method", default="pcg_tol",
+                    help="pcg_tol (tolerance-stopped) | pcg | cg | ...")
     ap.add_argument("--precond", default="jacobi")
     ap.add_argument("--iters", type=int, default=200)
     ap.add_argument("--tol", type=float, default=1e-8,

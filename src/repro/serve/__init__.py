@@ -1,9 +1,37 @@
-"""Serving substrate: generate loop, slot-based continuous batching, and
-the request-coalescing batched sparse-solve server."""
-from .engine import generate, SlotServer  # noqa: F401
-from .solve_server import (  # noqa: F401
+"""Serving: the management plane over the compiled solve plans.
+
+Public surface (pinned by ``tests/test_api_surface.py``):
+
+* :class:`SolveService` -- the always-on, multi-tenant solve service
+  (operator registry, admission control, continuous batching).
+* :func:`run_load` -- open/closed-loop load generator for the service.
+* :class:`SolveServer` -- DEPRECATED synchronous coalescer, now a thin
+  shim over ``SolveService``.
+* ``SolveOutcome`` / ``SolveRequest`` / ``SolveRequestError`` /
+  ``OperatorInfo`` -- the request/response records.
+* :func:`generate` / :class:`SlotServer` -- the LM generation loop and
+  its slot-based continuous batching demo.
+"""
+
+from .engine import SlotServer, generate
+from .loadgen import run_load
+from .service import (
+    OperatorInfo,
     SolveOutcome,
     SolveRequest,
     SolveRequestError,
-    SolveServer,
+    SolveService,
 )
+from .solve_server import SolveServer
+
+__all__ = [
+    "OperatorInfo",
+    "SlotServer",
+    "SolveOutcome",
+    "SolveRequest",
+    "SolveRequestError",
+    "SolveServer",
+    "SolveService",
+    "generate",
+    "run_load",
+]

@@ -1,113 +1,52 @@
-"""Request-coalescing front end for the batched sparse-solve path.
+"""DEPRECATED request-coalescing server -- a thin shim over
+:class:`repro.serve.SolveService`.
 
-Real solver traffic (circuit simulation steps, traffic assignment, any
-implicit time-stepper) repeatedly solves the *same* operator against many
-right-hand sides.  ``SolveServer`` is the serving-side half of that
-bargain: clients ``submit`` individual (n,) RHS; each ``step`` coalesces up
-to ``max_batch`` pending requests into one stacked (k, n) batched solve --
-one matrix stream, one distributed program, k answers -- and returns
-per-request results.
+``SolveServer`` was the synchronous single-matrix coalescer: clients
+``submit`` individual (n,) RHS, ``step`` coalesces up to ``max_batch`` of
+them into one full-budget batched plan execution.  The serving layer has
+since been redesigned around the always-on, multi-tenant
+:class:`~repro.serve.service.SolveService` (continuous batching at chunk
+boundaries, operator registry, admission control -- see
+``serve/service.py`` and the README "Serving" section's migration table).
 
-Batch shapes are bucketed to powers of two (capped at ``max_batch``) so the
-plan cache stays small: a burst of 5 requests runs as a k=8 batch with
-three zero RHS riding along (a zero RHS converges instantly and costs only
-the already-amortized vector math).
+This class keeps the old surface alive, bit-identically, by delegating to
+a private single-operator service:
 
-Plan/execute serving: the server holds ONE compiled
-:class:`repro.core.plan.SolvePlan` per batch bucket -- method/precond/fused
-dispatch resolves once, at plan construction, never per ``step``.  The
-steady state is compile-free by contract: executing a bucket's plan again
-must not retrace, and ``step`` asserts it (``plan.traces == 1``).
+* ``submit``/validation, the stats dict, the per-bucket plan pools
+  (``_plans``/``_ref_plans``/``_chunk_plans``) and the degradation/
+  deadline machinery are all the service's -- the shim binds them.
+* ``step``/``drain`` run the service's legacy execution path: FIFO
+  dequeue, one full-budget plan call per coalesced batch (or real-
+  tolerance ``deadline_chunk`` chunks when a deadline rides along),
+  exactly the pre-service semantics.
 
-Tolerance mode (a spec with a tolerance method, e.g. ``method="pcg_tol"``):
-the batched solve runs the fused while_loop solver to a relative-residual
-target instead of a fixed iteration count -- the paper's actual serving
-contract ("solve to 1e-8"), where a zero pad RHS is *free* (its active mask
-drops immediately) and each outcome reports the per-request iteration count
-plus the bounded per-request convergence trace the solver carried.
-
-Robust serving (this is a fleet-facing front end, so inputs and the compute
-path are both untrusted):
-
-* ``submit`` validates shape/dtype/finiteness against the engine operator
-  and raises a structured :class:`SolveRequestError` -- one bad client
-  request can never crash a coalesced batch mid-``step``.
-* every outcome carries the solver's structured per-request ``status``
-  (``converged | maxiter | breakdown | diverged | ...``) from the in-loop
-  guards, so a poisoned operator or indefinite system is reported, not
-  silently returned as garbage.
-* requests may carry a ``deadline`` (seconds of solve time).  Deadline
-  batches run CHUNKED -- ``deadline_chunk`` iterations per compiled chunk,
-  wall-clock checked at every chunk boundary -- and an expired request
-  returns its best-effort iterate with the achieved residual and status
-  ``deadline_exceeded`` while unexpired requests in the same batch keep
-  iterating.  Per-chunk durations feed a :class:`repro.ft.straggler
-  .StepTimer`; flagged chunks land in ``stats["straggler_chunks"]``.
-* a fused-path failure (the compiled plan raises, or the guards report
-  breakdown) degrades to the REFERENCE substrate with one retry before
-  the error surfaces -- ``stats["degraded_batches"]`` counts how often.
+New code should use ``SolveService`` directly.  Constructing a
+``SolveServer`` emits one DeprecationWarning per process.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import replace
-from typing import NamedTuple
-
 import numpy as np
 
-from ..core.plan import SolveSpec
-from ..core.registry import get_solver
+from ..core.plan import SolveSpec, warn_deprecated
 from ..ft.straggler import StepTimer
+from .service import (  # noqa: F401  (re-exported legacy surface)
+    SolveOutcome,
+    SolveRequest,
+    SolveRequestError,
+    SolveService,
+)
 
 __all__ = ["SolveRequest", "SolveOutcome", "SolveServer",
            "SolveRequestError"]
 
 
-class SolveRequestError(ValueError):
-    """A submitted RHS failed validation against the engine operator.
-
-    Structured so the serving layer can map it to a client error response:
-    ``reason`` is a stable machine-readable tag, ``expected``/``got``
-    describe the mismatch.
-    """
-
-    def __init__(self, reason: str, expected, got):
-        self.reason = reason
-        self.expected = expected
-        self.got = got
-        super().__init__(f"{reason}: expected {expected}, got {got}")
-
-
-class SolveRequest(NamedTuple):
-    req_id: int
-    b: np.ndarray                 # (n,) right-hand side
-    deadline: float | None = None  # seconds of solve time; None = no limit
-
-
-class SolveOutcome(NamedTuple):
-    req_id: int
-    x: np.ndarray                 # (n,) solution, in the request's dtype
-    res_norms: np.ndarray         # this request's residual trace (bounded
-                                  # max_iters ring for tolerance mode)
-    batch_size: int               # how many RHS shared the solve: the
-                                  # bucketed batch width k_pad, zero pad
-                                  # RHS included (batch_size - requests
-                                  # is this solve's padding overhead)
-    iters: int = -1               # iterations spent on THIS request
-                                  # (tolerance mode; -1 = fixed-iter solve)
-    requests: int = -1            # real (un-padded) requests coalesced
-                                  # into the solve this outcome rode
-    status: str = ""              # structured per-request solve status:
-                                  # converged | maxiter | breakdown |
-                                  # diverged | stagnated | unguarded |
-                                  # deadline_exceeded
-    rel_residual: float = -1.0    # achieved ||b - A x|| / ||b|| claim from
-                                  # the recurrence trace (-1 = unavailable)
-
-
 class SolveServer:
     """Coalesce single-RHS solve requests into batched plan executions.
+
+    DEPRECATED: use :class:`repro.serve.SolveService` (this class is a
+    compatibility shim over it -- same validation, same plan pools, same
+    outcomes, bit for bit).
 
     Parameters
     ----------
@@ -131,32 +70,36 @@ class SolveServer:
                  spec: SolveSpec | None = None,
                  deadline_chunk: int = 25,
                  timer: StepTimer | None = None):
+        warn_deprecated(
+            "serve.SolveServer",
+            "SolveServer is deprecated: use repro.serve.SolveService "
+            "(register_operator + submit + tick; see README 'Serving').",
+        )
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if deadline_chunk < 1:
             raise ValueError("deadline_chunk must be >= 1")
-        self.engine = engine
-        self.max_batch = max_batch
         if spec is None:
             spec = SolveSpec(method=method, iters=iters, tol=tol,
                              max_iters=max_iters)
+        svc = self._service = SolveService(
+            max_batch=max_batch, queue_max=None,
+            deadline_chunk=deadline_chunk, timer=timer)
+        svc.register_operator("default", engine=engine, spec=spec)
+        op = self._op = svc._operators["default"]
+        self.engine = engine
+        self.max_batch = int(max_batch)
         self.spec = spec
         self.method = spec.method                    # legacy attribute
-        self._tolerance = get_solver(spec.method).tolerance
+        self._tolerance = op.tolerance
         self.deadline_chunk = int(deadline_chunk)
-        self.timer = timer if timer is not None else StepTimer()
-        self._plans: dict[int, object] = {}          # bucket k -> SolvePlan
-        self._ref_plans: dict[int, object] = {}      # degraded (unfused)
-        self._chunk_plans: dict[int, object] = {}    # deadline path
-        self._queue: list[SolveRequest] = []
-        self._next_id = 0
-        self._chunk_seq = 0                          # StepTimer step index
-        # serving-side counters (fill ratio tells you if max_batch is sized
-        # to the actual arrival rate; plans counts the bucket plans built)
-        self.stats = {"requests": 0, "batches": 0, "padded_rhs": 0,
-                      "plans": 0, "rejected": 0, "degraded_batches": 0,
-                      "deadline_batches": 0, "deadline_exceeded": 0,
-                      "straggler_chunks": []}
+        self.timer = svc.timer
+        # the legacy pool attributes ARE the service's pools (mutations --
+        # test doubles, cache pokes -- land in the real lookup path)
+        self._plans = op.pools["full"]               # bucket k -> SolvePlan
+        self._ref_plans = op.pools["ref"]            # degraded (unfused)
+        self._chunk_plans = op.pools["chunk"]        # deadline path
+        self.stats = svc.stats
 
     # -- client side --------------------------------------------------------
 
@@ -164,264 +107,37 @@ class SolveServer:
         """Queue one (n,) RHS; returns a request id resolved by ``step``.
 
         ``deadline``: optional solve-time budget in seconds for this
-        request, measured from the start of the batched solve it rides;
-        when it expires the request resolves with its best-effort iterate
-        and status ``deadline_exceeded`` (chunk-boundary granularity).
-
+        request, measured from the start of the batched solve it rides.
         Raises :class:`SolveRequestError` (shape / dtype / non-finite /
-        bad deadline) WITHOUT enqueueing -- a rejected request can never
-        poison a later coalesced batch.
+        bad deadline) WITHOUT enqueueing.
         """
-        try:
-            b = np.asarray(b)
-        except Exception:
-            b = None
-        if b is None or b.dtype == object:   # numpy wraps arbitrary objects
-            self.stats["rejected"] += 1      # into 0-d object arrays rather
-            raise SolveRequestError(         # than raising
-                "rhs_not_array", "numeric array-like", "non-numeric object")
-        n = self.engine.n
-        if b.shape != (n,):
-            self.stats["rejected"] += 1
-            raise SolveRequestError("rhs_shape", (n,), b.shape)
-        if not (np.issubdtype(b.dtype, np.floating)
-                or np.issubdtype(b.dtype, np.integer)):
-            self.stats["rejected"] += 1
-            raise SolveRequestError(
-                "rhs_dtype", "real floating/integer", str(b.dtype))
-        if not np.all(np.isfinite(b)):
-            self.stats["rejected"] += 1
-            raise SolveRequestError(
-                "rhs_nonfinite", "finite entries",
-                f"{int(np.sum(~np.isfinite(b)))} non-finite")
-        if deadline is not None and not (float(deadline) >= 0):
-            self.stats["rejected"] += 1
-            raise SolveRequestError("deadline", ">= 0 seconds", deadline)
-        rid = self._next_id
-        self._next_id += 1
-        self._queue.append(SolveRequest(
-            rid, b, None if deadline is None else float(deadline)))
-        self.stats["requests"] += 1
-        return rid
+        return self._service.submit(b, "default", deadline=deadline)
 
     def pending(self) -> int:
-        return len(self._queue)
+        return self._service.pending()
 
     # -- serving side -------------------------------------------------------
-
-    def _bucket(self, k: int) -> int:
-        p = 1
-        while p < k:
-            p *= 2
-        return min(p, self.max_batch)
 
     def plan_for(self, k_pad: int):
         """The compiled per-bucket plan (built on first use, reused for
         every later batch of the same bucket -- this is where dispatch
         resolves, NOT per step)."""
-        plan = self._plans.get(k_pad)
-        if plan is None:
-            plan = self.engine.plan(replace(self.spec, batch=k_pad))
-            self._plans[k_pad] = plan
-            self.stats["plans"] += 1
-        return plan
-
-    def _ref_plan_for(self, k_pad: int):
-        """The degradation target: same spec on the reference substrate."""
-        plan = self._ref_plans.get(k_pad)
-        if plan is None:
-            plan = self.engine.plan(replace(self.spec, batch=k_pad,
-                                            fused=False))
-            self._ref_plans[k_pad] = plan
-            self.stats["plans"] += 1
-        return plan
-
-    def _chunk_plan_for(self, k_pad: int):
-        """Deadline-path plan: ``deadline_chunk`` iterations per call (a
-        tolerance chunk stops early once every lane converges)."""
-        plan = self._chunk_plans.get(k_pad)
-        if plan is None:
-            c = self.deadline_chunk
-            spec = replace(self.spec, batch=k_pad, iters=c,
-                           max_iters=c if self._tolerance else None)
-            plan = self.engine.plan(spec)
-            self._chunk_plans[k_pad] = plan
-            self.stats["plans"] += 1
-        return plan
-
-    @staticmethod
-    def _assert_steady(plan, k_pad: int) -> None:
-        # steady-state contract: an already-built bucket plan never
-        # retraces -- one trace per (spec, bucket), however many steps run.
-        # A violation is a real serving bug (per-step recompiles), so fail
-        # loudly (RuntimeError: survives python -O, unlike assert).
-        if plan.traces > 1:
-            raise RuntimeError(
-                f"bucket k={k_pad} plan retraced ({plan.traces} traces): "
-                "the compile-free steady-state contract broke"
-            )
-
-    def _statuses(self, plan, k_pad: int) -> list[str]:
-        names = plan.last_status_names
-        return [names] * k_pad if isinstance(names, str) else list(names)
-
-    def _run_degradable(self, plan, k_pad: int, batch):
-        """Execute ``plan``; on a fused-path failure (raise, or guards
-        reporting breakdown on any lane) retry ONCE on the reference
-        substrate.  Returns (x, norms, plan_used)."""
-        fused = bool(plan.info.get("fused"))
-        try:
-            x, norms = plan(batch)
-            bad = any(s in ("breakdown", "diverged")
-                      for s in self._statuses(plan, k_pad))
-            if not (fused and bad):
-                return x, norms, plan
-        except Exception:
-            if not fused:
-                raise
-        # one retry on the reference substrate: if the failure was the
-        # fused kernels' (a compile/runtime bug, a kernel-only numerical
-        # breakdown), the reference path answers; if the INPUT is bad the
-        # reference guards re-report it and that status stands
-        self.stats["degraded_batches"] += 1
-        ref = self._ref_plan_for(k_pad)
-        x, norms = ref(batch)
-        self._assert_steady(ref, k_pad)
-        return x, norms, ref
+        return self._service.plan_for("default", k_pad)
 
     def step(self) -> dict[int, SolveOutcome]:
         """Run ONE coalesced batched solve over up to max_batch pending
         requests; returns {req_id: outcome}.  No-op ({}) when idle."""
-        if not self._queue:
-            return {}
-        take, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch:]
-        k = len(take)
-        k_pad = self._bucket(k)
-        # stage in the ENGINE dtype (np.zeros defaults to float64): the
-        # operand then enters the program exactly as traced -- no silent
-        # downcast-on-device, no per-dtype retrace risk
-        batch = np.zeros((k_pad, self.engine.n), dtype=self.engine.dtype)
-        for i, req in enumerate(take):
-            batch[i] = req.b
-        if any(req.deadline is not None for req in take):
-            return self._step_deadline(take, batch, k, k_pad)
-        plan = self.plan_for(k_pad)
-        x, norms, plan = self._run_degradable(plan, k_pad, batch)
-        self._assert_steady(self.plan_for(k_pad), k_pad)
-        self.stats["batches"] += 1
-        self.stats["padded_rhs"] += k_pad - k
-        its = np.full(k_pad, -1, np.int64)
-        if self._tolerance:
-            its = np.atleast_1d(np.asarray(plan.last_iters)).astype(np.int64)
-        statuses = self._statuses(plan, k_pad)
-        # norms: (iters + 1, k_pad) -- hand each request its own column;
-        # solutions go back in the request's (floating) dtype, so a
-        # float64 client of a float32 engine round-trips its own type
-        def _x_out(i, req):
-            xi = np.asarray(x[i])
-            if np.issubdtype(req.b.dtype, np.floating):
-                return xi.astype(req.b.dtype, copy=False)
-            return xi
-
-        norms = np.asarray(norms)
-        return {
-            req.req_id: SolveOutcome(
-                req.req_id, _x_out(i, req), norms[:, i],
-                batch_size=k_pad, iters=int(its[i]), requests=k,
-                status=statuses[i],
-                rel_residual=self._rel(norms[:, i], its[i], req.b))
-            for i, req in enumerate(take)
-        }
-
-    @staticmethod
-    def _rel(trace: np.ndarray, it: int, b: np.ndarray) -> float:
-        bn = float(np.linalg.norm(b))
-        last = float(trace[it] if 0 <= it < trace.shape[0] else trace[-1])
-        return last / bn if bn > 0 else last
-
-    def _step_deadline(self, take, batch, k: int, k_pad: int
-                       ) -> dict[int, SolveOutcome]:
-        """Chunked execution with per-request wall-clock deadlines.
-
-        Each chunk is one compiled ``deadline_chunk``-iteration plan call
-        warm-started from the running iterate.  After every chunk the
-        clock is checked against each request's deadline: expired requests
-        snapshot their current iterate/status and stop counting (their
-        lanes keep riding the batch -- extra iterations are harmless and
-        the batch keeps its one-program shape), unexpired requests keep
-        iterating until convergence, the iteration budget, or their own
-        deadline.  The chunk timings feed the StepTimer.
-        """
-        plan = self._chunk_plan_for(k_pad)
-        self.stats["batches"] += 1
-        self.stats["deadline_batches"] += 1
-        self.stats["padded_rhs"] += k_pad - k
-        budget = int(self.spec.max_iters if (self._tolerance and
-                                             self.spec.max_iters is not None)
-                     else self.spec.iters)
-        x = np.zeros_like(batch)
-        done = np.zeros(k_pad, bool)
-        done[k:] = True                       # pad lanes: nothing to report
-        snap_x = [None] * k_pad
-        snap = [("maxiter", -1.0, 0)] * k_pad   # (status, rel, iters)
-        total_iters = np.zeros(k_pad, np.int64)
-        traces = [[] for _ in range(k_pad)]
-        t0 = time.perf_counter()
-        it_done = 0
-        while it_done < budget and not done.all():
-            tc = time.perf_counter()
-            x2, norms = plan(batch, x0=x)
-            dt = time.perf_counter() - tc
-            self._assert_steady(plan, k_pad)
-            self._chunk_seq += 1
-            rep = self.timer.observe(self._chunk_seq, dt)
-            if rep.is_straggler:
-                self.stats["straggler_chunks"].append(self._chunk_seq)
-            norms = np.asarray(norms)
-            its = (np.atleast_1d(np.asarray(plan.last_iters))
-                   .astype(np.int64) if self._tolerance
-                   else np.full(k_pad, self.deadline_chunk, np.int64))
-            statuses = self._statuses(plan, k_pad)
-            x = np.asarray(x2)
-            it_done += self.deadline_chunk
-            elapsed = time.perf_counter() - t0
-            for i, req in enumerate(take):
-                if done[i]:
-                    continue
-                total_iters[i] += int(its[i])
-                traces[i].append(norms[: int(its[i]) + 1, i])
-                rel = self._rel(norms[:, i], int(its[i]), req.b)
-                s = statuses[i]
-                finished = (s not in ("maxiter", "unguarded")
-                            or it_done >= budget)
-                expired = (req.deadline is not None
-                           and elapsed > req.deadline)
-                if finished or expired:
-                    done[i] = True
-                    snap_x[i] = x[i].copy()
-                    if not finished and expired:
-                        s = "deadline_exceeded"
-                        self.stats["deadline_exceeded"] += 1
-                    snap[i] = (s, rel, int(total_iters[i]))
-        out = {}
-        for i, req in enumerate(take):
-            if snap_x[i] is None:             # budget ran out mid-flight
-                snap_x[i] = x[i].copy()
-            xi = snap_x[i]
-            if np.issubdtype(req.b.dtype, np.floating):
-                xi = xi.astype(req.b.dtype, copy=False)
-            s, rel, iters = snap[i]
-            trace = (np.concatenate(traces[i]) if traces[i]
-                     else np.zeros(1, batch.dtype))
-            out[req.req_id] = SolveOutcome(
-                req.req_id, xi, trace, batch_size=k_pad,
-                iters=iters if self._tolerance else -1, requests=k,
-                status=s, rel_residual=rel)
-        return out
+        return self._service._legacy_step(self._op, self.max_batch,
+                                          self.plan_for)
 
     def drain(self) -> dict[int, SolveOutcome]:
         """Step until the queue is empty; returns all outcomes."""
         out: dict[int, SolveOutcome] = {}
-        while self._queue:
+        while self._service.pending():
             out.update(self.step())
         return out
+
+    # kept for any external callers of the old helper surface
+    @staticmethod
+    def _rel(trace: np.ndarray, it: int, b: np.ndarray) -> float:
+        return SolveService._rel(trace, it, b)

@@ -25,7 +25,7 @@ CORE_EXPORTS = {
     # communication plans (structure-compiled halo schedules)
     "CommPlan",
     # engine + plan/execute API
-    "AzulEngine", "SolveSpec", "SolvePlan", "PlanCache",
+    "AzulEngine", "SolveSpec", "SolvePlan", "PlanCache", "chunk_spec",
     # registry
     "SolverDef", "PrecondDef",
     "register_solver", "register_precond",
@@ -33,8 +33,16 @@ CORE_EXPORTS = {
     "solver_names", "precond_names",
 }
 
-SERVE_EXPORTS = {"generate", "SlotServer", "SolveServer", "SolveOutcome",
-                 "SolveRequest", "SolveRequestError"}
+SERVE_EXPORTS = {
+    # the always-on service (management plane) and its load generator
+    "SolveService", "OperatorInfo", "run_load",
+    # request/response records
+    "SolveOutcome", "SolveRequest", "SolveRequestError",
+    # deprecated coalescer (thin shim over SolveService)
+    "SolveServer",
+    # LM generation demo
+    "generate", "SlotServer",
+}
 
 # -- callable signatures (parameter name tuples) ------------------------------
 
@@ -63,6 +71,29 @@ SIGNATURES = {
     "core.register_precond": ("pdef",),
     "core.get_solver": ("name",),
     "core.get_precond": ("name",),
+    "core.chunk_spec": ("spec", "chunk", "batch", "fixed_length"),
+    "core.AzulEngine.device_bytes": ("self",),
+    "serve.SolveService.__init__": (
+        "self", "max_batch", "chunk", "queue_max", "memory_limit",
+        "aging", "deadline_chunk", "timer",
+    ),
+    "serve.SolveService.register_operator": (
+        "self", "name", "a", "engine", "spec", "method", "iters", "tol",
+        "max_iters", "precond", "dtype", "layout", "reorder", "mesh",
+        "max_batch", "chunk",
+    ),
+    "serve.SolveService.submit": (
+        "self", "b", "operator", "tol", "max_iters", "deadline", "priority",
+    ),
+    "serve.SolveService.tick": ("self",),
+    "serve.SolveService.drain": ("self",),
+    "serve.SolveService.plan_for": ("self", "operator", "k_pad", "flavor"),
+    "serve.SolveService.unregister_operator": ("self", "name"),
+    "serve.SolveService.operators": ("self",),
+    "serve.run_load": (
+        "service", "make_rhs", "operator", "mode", "requests", "rate",
+        "concurrency", "seed", "tol", "max_iters",
+    ),
     "serve.SolveServer.__init__": (
         "self", "engine", "max_batch", "method", "iters", "tol",
         "max_iters", "spec", "deadline_chunk", "timer",
@@ -90,7 +121,8 @@ def test_core_exports_exact():
         assert hasattr(core, name), f"repro.core.{name} missing"
 
 
-def test_serve_exports_present():
+def test_serve_exports_exact():
+    assert set(serve.__all__) == SERVE_EXPORTS
     for name in SERVE_EXPORTS:
         assert hasattr(serve, name), f"repro.serve.{name} missing"
 

@@ -22,7 +22,7 @@ CURRENT = os.path.join(REPO, "BENCH_pcg.json")
 
 def _payload():
     return {
-        "schema": "bench_pcg/v5",
+        "schema": "bench_pcg/v6",
         "fused_vs_unfused": [{
             "matrix": "m", "us_per_iter_fused": 100.0,
             "us_per_iter_unfused": 120.0, "trace_rel_maxdiff": 0.0,
@@ -65,6 +65,15 @@ def _payload():
             "collectives_match": True,
             "detects_indefinite": True, "bad_x_finite": True,
             "us_per_iter_guarded": 205.0, "us_per_iter_unguarded": 200.0,
+        }],
+        "serving": [{
+            "matrix": "m", "n": 64, "method": "pcg_tol", "mode": "open",
+            "requests": 24, "chunk": 20, "max_batch": 4,
+            "offered_rps": 10.0, "concurrency": -1,
+            "completed": 24, "rejected": 0, "errors": 0, "retraces": 0,
+            "p50_ms": 40.0, "p99_ms": 90.0, "mean_ms": 45.0,
+            "throughput_rps": 9.5, "chunks": 30, "rebuckets": 8,
+            "plans": 3,
         }],
     }
 
@@ -221,6 +230,47 @@ def test_overlap_model_drift_fails():
     assert any("overlap_exposed_words" in f for f in g.failures)
 
 
+def test_serving_retrace_fails():
+    """ANY retrace in a serving run breaks the compile-free steady-state
+    contract, whatever the baseline recorded."""
+    cur = _payload()
+    cur["serving"][0]["retraces"] = 1
+    g = check(cur, _payload())
+    assert any("retraces" in f for f in g.failures)
+
+
+def test_serving_count_drift_and_latency_blowup_fail():
+    cur = _payload()
+    cur["serving"][0]["completed"] = 20
+    cur["serving"][0]["rejected"] = 4
+    g = check(cur, _payload())
+    assert any("completed" in f for f in g.failures)
+    assert any("rejected" in f for f in g.failures)
+    cur = _payload()
+    cur["serving"][0]["p99_ms"] = 90.0 * 11
+    g = check(cur, _payload(), timing_ratio=10.0)
+    assert any("p99_ms" in f for f in g.failures)
+    # within the generous ratio: latency noise is not a regression
+    cur["serving"][0]["p99_ms"] = 90.0 * 9
+    assert not check(cur, _payload(), timing_ratio=10.0).failures
+
+
+def test_sections_subset_gates_only_named_sections():
+    """--sections serving: a serving-only payload (the serve-smoke job)
+    checks against the full baseline without tripping coverage failures
+    for the sections it does not carry."""
+    cur = {"schema": "bench_pcg/v6", "serving": _payload()["serving"]}
+    g = check(cur, _payload(), sections=("serving",))
+    assert not g.failures and g.checks > 5
+    cur["serving"][0]["retraces"] = 2
+    g = check(cur, _payload(), sections=("serving",))
+    assert any("retraces" in f for f in g.failures)
+    # the subset gate still notices a dropped load point
+    g = check({"schema": "bench_pcg/v6", "serving": []}, _payload(),
+              sections=("serving",))
+    assert any("missing" in f for f in g.failures)
+
+
 def test_dense_to_halo_improvement_passes_plan_check():
     """The reverse direction (dense baseline -> halo current) is an
     improvement, not a regression -- but the byte fields still compare
@@ -284,7 +334,7 @@ def test_committed_bench_passes_gate():
 
 def test_committed_baseline_is_selfconsistent():
     base = json.load(open(BASELINE))
-    assert base["schema"] == "bench_pcg/v5"
+    assert base["schema"] == "bench_pcg/v6"
     assert base["tol_solves"], "baseline must pin tolerance iteration counts"
     assert base["noc_plans"], "baseline must pin the comm-plan traffic records"
     assert base["pipelined"], "baseline must pin the pipelined-PCG record"
@@ -312,6 +362,12 @@ def test_committed_baseline_is_selfconsistent():
     for e in base["tol_solves"]:
         assert e["iters_match"] is True
         assert e["iters_fused"] == e["iters_reference"]
+    assert base["serving"], "baseline must pin the serving load points"
+    for e in base["serving"]:
+        assert e["retraces"] == 0          # compile-free steady state
+        assert e["rejected"] == 0 and e["errors"] == 0
+        assert e["completed"] == e["requests"]
+        assert e["p50_ms"] <= e["p99_ms"]
     g = check(base, base)
     assert not g.failures
 
