@@ -435,13 +435,11 @@ def run_guarded_solves(
                 t0 = time.perf_counter()
                 x, _ = plan(b)
                 dt = time.perf_counter() - t0
-                hlo = plan.fn.lower(eng.to_device_vec(b),
-                                    eng.to_device_vec(np.zeros_like(b))
-                                    ).as_text()
+                ops = plan.hlo_summary()["count_by_op"]
                 return dt, x, int(np.asarray(plan.last_iters)), \
                     plan.last_status_names, \
-                    hlo.count("stablehlo.all_reduce") + \
-                    hlo.count("stablehlo.collective_permute")
+                    int(ops.get("all-reduce", 0)
+                        + ops.get("collective-permute", 0))
 
             dt_g, x_g, it_g, status_g, coll_g = timed(True)
             dt_u, x_u, it_u, _, coll_u = timed(False)
@@ -488,9 +486,91 @@ def run_guarded_solves(
     return rows, payload
 
 
+def run_observability(
+    iters: int = 60, repeats: int = 5, matrix: str = "lap2d_32",
+) -> tuple[list[tuple[str, float, str]], list[dict]]:
+    """Instrumented-vs-bare overhead of the ``repro.obs`` subsystem.
+
+    The obs contract has two halves, both measured here on the same warm
+    plan:
+
+    * **bitwise identity** -- recording is host-side only, so an
+      instrumented solve returns the exact bits of a bare
+      (``obs.disabled()``) one;
+    * **bounded overhead** -- per-execution cost of the always-on metrics
+      (one span, a histogram observe, a couple of counter bumps) must stay
+      a rounding error next to the solve itself.  Both arms take the min
+      of ``repeats`` interleaved runs so scheduler noise cannot fake (or
+      mask) a regression; the gate bounds ``overhead_ratio``
+      (``check_regression --obs-overhead``, default 1.05).
+
+    Also records the exposition surface: required metric families present
+    in a live Prometheus render, and the span kinds sitting in the ring.
+    """
+    from repro import obs
+
+    rng = np.random.default_rng(0)
+    m = suite("small")[matrix]
+    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+    b = a @ rng.standard_normal(m.shape[0])
+    eng = AzulEngine(m, mesh=None, precond="jacobi", dtype=np.float64)
+    plan = eng.plan(SolveSpec(method="pcg", iters=iters))
+    plan(b)                                                 # warm jit
+
+    def one(instrumented: bool):
+        if instrumented:
+            t0 = time.perf_counter()
+            x, _ = plan(b)
+            return time.perf_counter() - t0, x
+        with obs.disabled():
+            t0 = time.perf_counter()
+            x, _ = plan(b)
+            return time.perf_counter() - t0, x
+
+    dts_on, dts_off = [], []
+    x_on = x_off = None
+    for _ in range(repeats):
+        dt, x_on = one(True)
+        dts_on.append(dt)
+        dt, x_off = one(False)
+        dts_off.append(dt)
+    dt_on, dt_off = min(dts_on), min(dts_off)
+
+    text = obs.render_prometheus()
+    required = ("repro_solve_executions_total", "repro_solve_seconds",
+                "repro_plan_cache_misses_total", "repro_plan_build_seconds")
+    span_counts = obs.TRACER.counts()
+    entry = {
+        "matrix": matrix,
+        "method": "pcg",
+        "n": int(m.shape[0]),
+        "iters": int(iters),
+        "repeats": int(repeats),
+        "us_per_iter_instrumented": round(dt_on / iters * 1e6, 3),
+        "us_per_iter_bare": round(dt_off / iters * 1e6, 3),
+        "overhead_ratio": round(dt_on / dt_off, 4),
+        "bitwise_identical": bool(np.array_equal(x_on, x_off)),
+        "required_families_present": all(f"\n{f}" in "\n" + text
+                                         for f in required),
+        "span_kinds_present": sorted(
+            k for k in ("solve", "plan_build") if span_counts.get(k)),
+        "span_counts": {k: int(v) for k, v in span_counts.items()},
+        "metric_families": int(len(obs.REGISTRY.families())),
+    }
+    rows = [(
+        f"obs_overhead_{matrix}", dt_on / iters * 1e6,
+        f"bare_us={dt_off / iters * 1e6:.1f} "
+        f"overhead={entry['overhead_ratio']:.3f}x "
+        f"bitwise={entry['bitwise_identical']} "
+        f"families={entry['metric_families']}",
+    )]
+    return rows, [entry]
+
+
 def collect_json(fused_payload, batch_payload, tol_payload=None,
                  noc_payload=None, pipelined_payload=None,
-                 guarded_payload=None, serving_payload=None) -> dict:
+                 guarded_payload=None, serving_payload=None,
+                 observability_payload=None) -> dict:
     """Assemble the machine-readable perf-trajectory record (BENCH_pcg.json
     schema: see README "Performance").  v2 added the tolerance-solve section
     (fused-vs-reference iteration counts, the regression gate's exact-match
@@ -503,13 +583,16 @@ def collect_json(fused_payload, batch_payload, tol_payload=None,
     zero-extra-collectives assertions, the indefinite-detection probe);
     v6 adds the serving section (SolveService load-generator runs:
     open/closed-loop p50/p99 latency, throughput vs offered load,
-    zero-retrace steady state -- see ``benchmarks/bench_serve.py``)."""
+    zero-retrace steady state -- see ``benchmarks/bench_serve.py``); v7
+    adds the observability section (``repro.obs`` instrumented-vs-bare
+    overhead ratio, bitwise-identity flag, exposition-surface presence --
+    see ``run_observability``)."""
     import jax
 
     from repro.kernels import ops
 
     return {
-        "schema": "bench_pcg/v6",
+        "schema": "bench_pcg/v7",
         "backend": jax.default_backend(),
         "kernel_mode": ops.backend_mode(),
         "x64": bool(jax.config.jax_enable_x64),
@@ -520,6 +603,7 @@ def collect_json(fused_payload, batch_payload, tol_payload=None,
         "pipelined": pipelined_payload or [],
         "guarded": guarded_payload or [],
         "serving": serving_payload or [],
+        "observability": observability_payload or [],
     }
 
 
@@ -544,6 +628,7 @@ def main(argv=None) -> int:
     rows = [] if args.skip_convergence else run()
     fused_payload, batch_payload, tol_payload = [], [], []
     noc_payload, pipe_payload, guarded_payload = [], [], []
+    obs_payload = []
     if args.fused_compare or args.json:
         mats = tuple(s for s in args.matrices.split(",") if s)
         frows, fused_payload = run_fused_compare(iters=args.iters, matrices=mats)
@@ -564,6 +649,11 @@ def main(argv=None) -> int:
             matrices=tuple(m for m in mats if m in suite("small"))
         )
         rows += nrows
+        orows, obs_payload = run_observability(
+            iters=args.iters,
+            matrix=next(m for m in mats if m in suite("small")),
+        )
+        rows += orows
     if args.batch_sizes:
         ks = [int(x) for x in args.batch_sizes.split(",")]
         brows, batch_payload = run_batch_sweep(ks, iters=args.iters)
@@ -578,7 +668,8 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(collect_json(fused_payload, batch_payload, tol_payload,
                                    noc_payload, pipe_payload,
-                                   guarded_payload),
+                                   guarded_payload,
+                                   observability_payload=obs_payload),
                       f, indent=1)
         print(f"# wrote {args.json}")
     return 0

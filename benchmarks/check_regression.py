@@ -47,6 +47,15 @@ machines:
   the continuous-batching loop.  Latency quantiles (``p50_ms``/``p99_ms``/
   ``mean_ms``) ride the generous timing-ratio gate, like every other
   wall-clock field.
+* **Observability** (``observability``): the ``repro.obs`` subsystem's
+  contract.  ``bitwise_identical`` must stay True (metrics recording is
+  host-side only -- an instrumented solve returns the exact bits of a bare
+  one), ``required_families_present`` must stay True (the Prometheus
+  exposition keeps its core metric families), and the instrumented/bare
+  per-iteration timing ratio from the SAME RUN is bounded by
+  ``--obs-overhead`` (default 1.05 -- the always-on instrumentation may
+  cost at most 5%).  The instrumented timing also rides the generous
+  cross-run timing gate.
 * **Timings** (``us_per_iter*``): within ``--timing-ratio`` (default 10x)
   of baseline.  Interpret-mode CPU timings are noisy and machine-dependent;
   the generous ratio still catches order-of-magnitude regressions (an
@@ -90,9 +99,11 @@ def _index(entries: list[dict], keys: tuple[str, ...]) -> dict:
 
 
 class Gate:
-    def __init__(self, timing_ratio: float, guard_overhead: float = 2.0):
+    def __init__(self, timing_ratio: float, guard_overhead: float = 2.0,
+                 obs_overhead: float = 1.05):
         self.ratio = timing_ratio
         self.guard_overhead = guard_overhead
+        self.obs_overhead = obs_overhead
         self.failures: list[str] = []
         self.checks = 0
 
@@ -133,13 +144,13 @@ class Gate:
 
 #: every gate-checked payload section, in check order
 SECTIONS = ("tol_solves", "fused_vs_unfused", "batch_sweep", "noc_plans",
-            "guarded", "pipelined", "serving")
+            "guarded", "pipelined", "serving", "observability")
 
 
 def check(cur: dict, base: dict, timing_ratio: float = 10.0,
-          guard_overhead: float = 2.0,
+          guard_overhead: float = 2.0, obs_overhead: float = 1.05,
           sections: tuple[str, ...] | None = None) -> Gate:
-    g = Gate(timing_ratio, guard_overhead)
+    g = Gate(timing_ratio, guard_overhead, obs_overhead)
     g.exact("payload", "schema", cur.get("schema"), base.get("schema"))
     want = set(SECTIONS if sections is None else sections)
 
@@ -272,6 +283,23 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0,
         g.exact(where, "retraces", ce.get("retraces"), 0)
         for field in ("p50_ms", "p99_ms", "mean_ms"):
             g.timing(where, field, ce.get(field), be.get(field))
+
+    for where, ce, be in () if _skip("observability") else g.section(
+                                   "observability", ("matrix",),
+                                   cur.get("observability", []),
+                                   base.get("observability", [])):
+        # host-side-only recording: instrumented bits == bare bits, always
+        g.exact(where, "bitwise_identical", ce.get("bitwise_identical"),
+                True)
+        g.exact(where, "required_families_present",
+                ce.get("required_families_present"), True)
+        g.exact(where, "method", ce.get("method"), be.get("method"))
+        # overhead vs the bare arm, same machine/run (like guard_overhead)
+        g.leq(where, "overhead_ratio", ce.get("overhead_ratio"),
+              g.obs_overhead)
+        g.timing(where, "us_per_iter_instrumented",
+                 ce.get("us_per_iter_instrumented"),
+                 be.get("us_per_iter_instrumented"))
     return g
 
 
@@ -287,6 +315,10 @@ def main(argv=None) -> int:
     ap.add_argument("--guard-overhead", type=float, default=2.0,
                     help="allowed guarded/lean per-iteration timing ratio "
                          "within ONE payload (same machine, same run)")
+    ap.add_argument("--obs-overhead", type=float, default=1.05,
+                    help="allowed instrumented/bare per-iteration timing "
+                         "ratio within ONE payload (the repro.obs always-on "
+                         "instrumentation budget)")
     ap.add_argument("--sections", default="",
                     help="comma-separated subset of payload sections to "
                          "gate (default: all); e.g. the serve-smoke CI job "
@@ -305,10 +337,10 @@ def main(argv=None) -> int:
         with open(args.current) as f:
             cur = json.load(f)
         problems = []
-        if cur.get("schema") != "bench_pcg/v6":
+        if cur.get("schema") != "bench_pcg/v7":
             problems.append(f"unexpected schema {cur.get('schema')!r}")
         for section in ("fused_vs_unfused", "tol_solves", "noc_plans",
-                        "pipelined", "guarded", "serving"):
+                        "pipelined", "guarded", "serving", "observability"):
             if not cur.get(section):
                 problems.append(f"section {section!r} is empty/missing")
         if problems:
@@ -332,7 +364,8 @@ def main(argv=None) -> int:
             print(f"unknown --sections {unknown}; known: {list(SECTIONS)}")
             return 2
     g = check(cur, base, timing_ratio=args.timing_ratio,
-              guard_overhead=args.guard_overhead, sections=sections)
+              guard_overhead=args.guard_overhead,
+              obs_overhead=args.obs_overhead, sections=sections)
     if g.failures:
         print(f"PERF REGRESSION: {len(g.failures)} failure(s) "
               f"({g.checks} checks):")

@@ -89,8 +89,12 @@ def main(argv=None) -> None:
             from . import bench_serve
             srows, serving_payload = bench_serve.run_serving(
                 smoke=args.smoke)
+            orows, obs_payload = bench_pcg.run_observability(
+                iters=30 if args.smoke else 60,
+                repeats=3 if args.smoke else 5,
+                matrix=matrices[0])
             for name, us, derived in (frows + brows + trows + prows +
-                                      grows + nrows + srows):
+                                      grows + nrows + srows + orows):
                 print(f"{name},{us:.1f},{derived}")
             for e in tol_payload:
                 # tolerance-mode convergence from the bounded trace ring
@@ -101,7 +105,7 @@ def main(argv=None) -> None:
                     bench_pcg.collect_json(fused_payload, batch_payload,
                                            tol_payload, noc_payload,
                                            pipe_payload, guarded_payload,
-                                           serving_payload),
+                                           serving_payload, obs_payload),
                     f, indent=1)
             print(f"# wrote {args.json}")
         except Exception:

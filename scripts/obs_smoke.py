@@ -1,0 +1,123 @@
+"""CI obs smoke: scrape a LIVE ``/metrics`` endpoint mid-load.
+
+Starts the stdlib metrics server on an ephemeral port, drives one
+``bench_serve``-style load point against :class:`repro.serve.SolveService`
+in a background thread, and scrapes ``/metrics`` over HTTP while chunks
+are in flight -- the end-to-end path a Prometheus poller would exercise
+against ``launch/serve.py --metrics-port``.  Fails (exit 1) if any
+required metric family is missing from the scraped exposition, if the
+JSON endpoints break, or if the load point itself errors.
+
+    PYTHONPATH=src REPRO_KERNEL_MODE=interpret python scripts/obs_smoke.py
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import urllib.request
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+#: families the serving plane + plan layer must expose under load
+REQUIRED_FAMILIES = (
+    "repro_serve_queue_depth",
+    "repro_serve_events_total",
+    "repro_serve_tick_seconds",
+    "repro_serve_chunk_seconds",
+    "repro_serve_request_seconds",
+    "repro_serve_resident_bytes",
+    "repro_serve_operators_resident",
+    "repro_plan_cache_hits_total",
+    "repro_plan_cache_misses_total",
+    "repro_plan_build_seconds",
+    "repro_solve_executions_total",
+    "repro_solve_seconds",
+    "repro_engine_device_bytes",
+)
+
+
+def main() -> int:
+    from repro.data.matrices import laplacian_2d
+    from repro.obs import start_metrics_server
+    from repro.serve import SolveService, run_load
+
+    m = laplacian_2d(12)
+    svc = SolveService(max_batch=4, chunk=20)
+    svc.register_operator("lap2d_12", m, method="pcg_tol", tol=1e-8,
+                          iters=400, precond="jacobi", dtype=np.float64)
+    rng = np.random.default_rng(0)
+    rhs = rng.standard_normal((16, m.shape[0]))
+
+    srv = start_metrics_server(port=0)
+    base = f"http://{srv.host}:{srv.port}"
+    print(f"metrics: {base}/metrics")
+
+    result: dict = {}
+
+    def drive():
+        try:
+            result["res"] = run_load(
+                svc, lambda i: rhs[i % rhs.shape[0]], operator="lap2d_12",
+                mode="closed", requests=24, concurrency=4, seed=0)
+        except Exception as e:               # surfaced after join
+            result["error"] = e
+
+    t = threading.Thread(target=drive)
+    t.start()
+    # scrape WHILE the load runs: union the exposition across polls so the
+    # assertion reflects a live endpoint, not a post-mortem dump
+    seen = ""
+    scrapes = 0
+    while t.is_alive():
+        with urllib.request.urlopen(f"{base}/metrics", timeout=10) as r:
+            seen += r.read().decode()
+        scrapes += 1
+        t.join(timeout=0.05)
+    t.join()
+    with urllib.request.urlopen(f"{base}/metrics", timeout=10) as r:
+        final = r.read().decode()
+    seen += final
+    with urllib.request.urlopen(f"{base}/metrics.json", timeout=10) as r:
+        snap = json.load(r)
+    with urllib.request.urlopen(f"{base}/trace.json", timeout=10) as r:
+        events = json.load(r)["traceEvents"]
+    srv.close()
+
+    if "error" in result:
+        print(f"FAIL: load point raised: {result['error']!r}")
+        return 1
+    res = result["res"]
+    print(f"load point: completed={res['completed']} "
+          f"p50={res['p50_ms']:.1f}ms retraces={res['retraces']} "
+          f"scrapes={scrapes}")
+
+    missing = [f for f in REQUIRED_FAMILIES
+               if f"\n# TYPE {f} " not in "\n" + seen]
+    if missing:
+        print(f"FAIL: missing metric families: {missing}")
+        return 1
+    if res["completed"] != res["requests"]:
+        print(f"FAIL: {res['requests'] - res['completed']} requests "
+              "did not complete")
+        return 1
+    json_missing = [f for f in REQUIRED_FAMILIES if f not in snap]
+    if json_missing:
+        print(f"FAIL: /metrics.json missing families: {json_missing}")
+        return 1
+    kinds = {e["cat"] for e in events}
+    if not {"tick", "chunk", "solve"} <= kinds:
+        print(f"FAIL: /trace.json span kinds {sorted(kinds)} lack "
+              "tick/chunk/solve")
+        return 1
+    print(f"OBS_SMOKE_OK: {len(REQUIRED_FAMILIES)} families live, "
+          f"{len(events)} spans exported")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

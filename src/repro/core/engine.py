@@ -86,6 +86,7 @@ from .formats import CSR, pad_to
 from .levels import build_schedule
 from .partition import (padded_layout_1d, permute_csr, plan_1d, plan_2d,
                         rcm_permutation, tile_csr)
+from ..obs import REGISTRY as _OBS
 from .plan import PlanCache, SolvePlan, SolveSpec, canonicalize, warn_deprecated
 from .precond import ic0 as host_ic0
 from .solvers import ensure_status
@@ -842,6 +843,18 @@ class AzulEngine:
             noc_model["plan"] = spec.layout
             noc_model["comm_overlap"] = self._overlaps(sdef, spec, kind)
             info["noc"] = noc_model
+            g = _OBS.gauge(
+                "repro_plan_noc_bytes_per_iter",
+                "modeled NoC bytes per solver iteration by comm layout",
+                ("layout",))
+            for lay in ("halo", "dense"):
+                v = noc_model.get(f"bytes_per_iter_{lay}")
+                if v is not None:
+                    g.set(float(v), layout=lay)
+        _OBS.gauge(
+            "repro_engine_device_bytes",
+            "device-resident operator footprint of the last-planned engine",
+        ).set(float(self.device_bytes()))
         return SolvePlan(self, spec, fn, info, cell)
 
     @staticmethod

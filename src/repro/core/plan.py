@@ -38,8 +38,32 @@ from typing import Any, Callable
 import numpy as np
 
 from . import registry
+from ..obs import REGISTRY as _OBS
+from ..obs import clock as _clock
+from ..obs import span as _span
+from ..obs.metrics import enabled as _obs_enabled
 
 __all__ = ["SolveSpec", "SolvePlan", "PlanCache", "chunk_spec"]
+
+# -- observability (host-side only: never enters a traced program) ----------
+_M_CACHE_HITS = _OBS.counter(
+    "repro_plan_cache_hits_total", "PlanCache lookups served by a warm plan")
+_M_CACHE_MISSES = _OBS.counter(
+    "repro_plan_cache_misses_total", "PlanCache lookups that lowered a plan")
+_M_RETRACES = _OBS.counter(
+    "repro_plan_retraces_total",
+    "jit retraces beyond a plan's first trace (steady-state violations)")
+_M_BUILD_S = _OBS.histogram(
+    "repro_plan_build_seconds", "plan lowering wall time on a cache miss")
+_M_EXECUTIONS = _OBS.counter(
+    "repro_solve_executions_total", "SolvePlan executions", ("method",))
+_M_COMPILE_S = _OBS.histogram(
+    "repro_plan_compile_seconds",
+    "wall time of executions that (re)traced: trace + compile + run",
+    ("method",))
+_M_SOLVE_S = _OBS.histogram(
+    "repro_solve_seconds",
+    "steady-state execution wall time (block_until_ready)", ("method",))
 
 
 @dataclass(frozen=True)
@@ -307,7 +331,31 @@ class SolvePlan:
             raise ValueError(
                 "this plan closes over the matrix values as constants; "
                 "build the spec with injectable=True to pass vals per call")
-        x, norms, its, status, bad = self._fn(*args)
+        if _obs_enabled():
+            # host-side timing only: block_until_ready on the outputs we
+            # were about to convert to numpy anyway -- the traced program
+            # is untouched, so instrumented solves stay bitwise identical
+            # to bare ones (asserted in tests/test_obs.py)
+            import jax
+
+            tr0 = self._trace_cell[0]
+            t0 = _clock.now()
+            with _span("solve", kind="solve", method=self.spec.method):
+                out = self._fn(*args)
+                jax.block_until_ready(out)
+            dt = _clock.now() - t0
+            traced = self._trace_cell[0] - tr0
+            _M_EXECUTIONS.inc(method=self.spec.method)
+            if traced:
+                _M_COMPILE_S.observe(dt, method=self.spec.method)
+                retraces = traced - (1 if tr0 == 0 else 0)
+                if retraces > 0:
+                    _M_RETRACES.inc(retraces)
+            else:
+                _M_SOLVE_S.observe(dt, method=self.spec.method)
+        else:
+            out = self._fn(*args)
+        x, norms, its, status, bad = out
         self.executions += 1
         self.last_iters = np.asarray(its)
         self.last_status = np.asarray(status)
@@ -319,6 +367,37 @@ class SolvePlan:
         info["bad_iter"] = self.last_bad_iter
         eng.last_solve_info = info
         return eng.from_device_vec(np.asarray(x)), np.asarray(norms)
+
+    def hlo_summary(self, refresh: bool = False) -> dict:
+        """Collective-instruction summary of this plan's lowered program
+        (``roofline.collect.analyze_stablehlo_text`` over
+        ``fn.lower(...).as_text()``), cached into ``info["hlo"]``:
+        ``count_by_op`` keyed by HLO collective names (``all-reduce``,
+        ``collective-permute``, ...) plus ``total_count``.  Tests that
+        used to hand-count ``stablehlo.all_reduce`` substrings read this
+        instead.
+
+        The introspection lowering re-traces the program outside the jit
+        execution cache, so its trace is excluded from ``plan.traces`` --
+        inspecting a plan does not break the steady-state contract."""
+        if not refresh and "hlo" in self.info:
+            return self.info["hlo"]
+        from ..roofline.collect import analyze_stablehlo_text
+
+        eng = self.engine
+        shape = ((eng.n,) if self.spec.batch is None
+                 else (self.spec.batch, eng.n))
+        b = np.zeros(shape)
+        args = (eng.to_device_vec(b), eng.to_device_vec(b))
+        if self.spec.injectable:
+            args += (eng.vals_operand(None),)
+        before = self._trace_cell[0]
+        try:
+            txt = self._fn.lower(*args).as_text()
+        finally:
+            self._trace_cell[0] = before
+        self.info["hlo"] = analyze_stablehlo_text(txt)
+        return self.info["hlo"]
 
     def __repr__(self) -> str:
         s = self.spec
@@ -345,10 +424,15 @@ class PlanCache:
         plan = self._plans.get(key)
         if plan is None:
             self.misses += 1
-            plan = build(spec)
+            _M_CACHE_MISSES.inc()
+            t0 = _clock.now()
+            with _span("plan_build", kind="plan_build", method=spec.method):
+                plan = build(spec)
+            _M_BUILD_S.observe(_clock.now() - t0)
             self._plans[key] = plan
         else:
             self.hits += 1
+            _M_CACHE_HITS.inc()
         return plan
 
     def __len__(self) -> int:

@@ -16,15 +16,29 @@ this file is identical for 1 chip or 4096.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
+from ..obs import REGISTRY as _OBS
+from ..obs import clock as _clock
+from ..obs import span as _span
 
 __all__ = ["RestartManager", "TrainLoopResult",
            "SolveRestartManager", "FTSolveReport"]
+
+# -- observability (host-side; see repro.obs) --------------------------------
+_M_FT_FAULTS = _OBS.counter(
+    "repro_ft_faults_total",
+    "faults detected by the chunked solve audit, by structured label",
+    ("label",))
+_M_FT_RESTARTS = _OBS.counter(
+    "repro_ft_restarts_total",
+    "rollback-and-retry recoveries taken by SolveRestartManager")
+_M_FT_ROLLBACKS = _OBS.counter(
+    "repro_ft_rollbacks_total",
+    "NaN-guard rollbacks taken by the training RestartManager")
 
 
 @dataclass
@@ -66,13 +80,14 @@ class RestartManager:
                 self.mgr.wait()
                 raise RuntimeError(f"injected failure at step {step}")
             batch = pipeline.batch_at(step)
-            t0 = time.perf_counter()
+            t0 = _clock.now()
             new_state, metrics = train_step(state, batch)
             loss = float(np.asarray(metrics["loss"]))
-            times.append(time.perf_counter() - t0)
+            times.append(_clock.now() - t0)
 
             if self.guard_nan and not np.isfinite(loss):
                 rollbacks += 1
+                _M_FT_ROLLBACKS.inc()
                 prev = self.mgr.latest_step()
                 if prev is not None:
                     state, _ = self.mgr.restore(state)
@@ -250,12 +265,14 @@ class SolveRestartManager:
             lo, hi = k, k + self.chunk
             # the chunk wall-time window includes injector side effects, so
             # a ``delay`` fault's sleep lands in the StepTimer observation
-            t0 = time.perf_counter()
-            if injector is not None:
-                injector.on_chunk(lo, hi)
-            vals = injector.vals_for(lo, hi) if injector is not None else None
-            x2, norms = self._plan(b, x0=x, vals=vals)
-            dt = time.perf_counter() - t0
+            t0 = _clock.now()
+            with _span("ft_chunk", kind="ft_chunk", global_iter=lo):
+                if injector is not None:
+                    injector.on_chunk(lo, hi)
+                vals = (injector.vals_for(lo, hi) if injector is not None
+                        else None)
+                x2, norms = self._plan(b, x0=x, vals=vals)
+            dt = _clock.now() - t0
             chunks += 1
             if self.timer is not None:
                 rep = self.timer.observe(chunks, dt)
@@ -273,7 +290,9 @@ class SolveRestartManager:
                                "label": label,
                                "bad_iter": bad_it if bad_it >= 0 else None,
                                "rel_true": rel_true})
+                _M_FT_FAULTS.inc(label=label)
                 restarts += 1
+                _M_FT_RESTARTS.inc()
                 if restarts > self.max_restarts:
                     status = label
                     break

@@ -19,11 +19,19 @@ drags the fleet.  The framework's mitigations:
 
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs import REGISTRY as _OBS
+from ..obs import clock as _clock
+
 __all__ = ["StepTimer", "StragglerReport"]
+
+_M_FLAGS = _OBS.counter(
+    "repro_ft_straggler_flags_total",
+    "steps/chunks the StepTimer watchdog flagged as stragglers")
 
 
 @dataclass
@@ -41,6 +49,7 @@ class StepTimer:
     deadline_factor: float = 2.0
     max_shed: int = 1
     _times: list = field(default_factory=list)
+    last_report: StragglerReport | None = None
 
     def observe(self, step: int, duration: float) -> StragglerReport:
         self._times.append(duration)
@@ -48,5 +57,21 @@ class StepTimer:
         med = float(np.median(hist))
         mad = float(np.median(np.abs(hist - med))) + 1e-9
         slow = duration > max(self.deadline_factor * med, med + 6 * mad)
-        shed = self.max_shed if slow and len(hist) >= 5 else 0
-        return StragglerReport(step, duration, med, bool(slow and len(hist) >= 5), shed)
+        flagged = bool(slow and len(hist) >= 5)
+        shed = self.max_shed if flagged else 0
+        if flagged:
+            _M_FLAGS.inc()
+        self.last_report = StragglerReport(step, duration, med, flagged, shed)
+        return self.last_report
+
+    @contextmanager
+    def timing(self, step: int):
+        """Time the with-block on the obs clock and feed it to
+        ``observe`` -- the report lands in ``self.last_report``.  Under a
+        :class:`repro.obs.clock.FakeClock` this makes straggler detection
+        fully deterministic in tests."""
+        t0 = _clock.now()
+        try:
+            yield self
+        finally:
+            self.observe(step, _clock.now() - t0)

@@ -21,7 +21,6 @@ Per cell this produces <out>/<arch>__<shape>__<mesh>.json with:
 import argparse
 import json
 import sys
-import time
 
 
 def _parse_variant(variant: str) -> dict:
@@ -212,14 +211,15 @@ def build_cell(arch: str, shape: str, mesh_kind: str, probe_layers: int | None =
 
 def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
              probe_layers: int | None = None, variant: str = "") -> dict:
+    from ..obs import clock as _clock
     from ..roofline.collect import analyze_compiled
 
-    t0 = time.time()
+    t0 = _clock.now()
     lower_fn, meta = build_cell(arch, shape, mesh_kind, probe_layers, variant)
     lowered = lower_fn()
-    t1 = time.time()
+    t1 = _clock.now()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = _clock.now()
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -39,7 +39,16 @@ def _solver_main(args) -> int:
 
     from ..core.plan import SolveSpec
     from ..data.matrices import suite
+    from ..obs import start_metrics_server
     from ..serve import SolveService, run_load
+
+    metrics_srv = None
+    if args.metrics_port is not None:
+        # scrape target up BEFORE any work so a Prometheus poller pointed
+        # here sees the whole run (queue depth, chunk/tick histograms,
+        # plan-cache counters); /metrics.json and /trace.json ride along
+        metrics_srv = start_metrics_server(port=args.metrics_port)
+        print(f"metrics: {metrics_srv.url}")
 
     mats = suite("small")
     mats.update(suite("large"))
@@ -83,6 +92,8 @@ def _solver_main(args) -> int:
                        concurrency=args.concurrency)
         res.update({"matrix": names[0], "n": n0, "method": args.method})
         print(json.dumps(res, indent=1))
+        if metrics_srv is not None:
+            metrics_srv.close()
         return 0
 
     x_true, ids = {}, []
@@ -116,6 +127,8 @@ def _solver_main(args) -> int:
         out["iters_mean"] = round(float(np.mean(its)), 2)
         out["iters_max"] = int(np.max(its))
     print(json.dumps(out, indent=1))
+    if metrics_srv is not None:
+        metrics_srv.close()
     return 0
 
 
@@ -159,6 +172,10 @@ def main(argv=None):
                     help="distributed comm layout (see launch.solve)")
     ap.add_argument("--reorder", default="none", choices=("none", "rcm"),
                     help="bandwidth-reducing RCM reordering")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose Prometheus /metrics (+ /metrics.json, "
+                         "/trace.json) on this port for the run; 0 picks "
+                         "an ephemeral port (printed at startup)")
     args = ap.parse_args(argv)
 
     if args.solver:

@@ -21,7 +21,7 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-__all__ = ["analyze_compiled", "analyze_hlo_text"]
+__all__ = ["analyze_compiled", "analyze_hlo_text", "analyze_stablehlo_text"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -206,3 +206,37 @@ def analyze_hlo_text(text: str) -> dict:
 
 def analyze_compiled(compiled) -> dict:
     return analyze_hlo_text(compiled.as_text())
+
+
+# -- pre-compile (StableHLO) collective counting -----------------------------
+#
+# ``jit(f).lower(args).as_text()`` emits StableHLO MLIR, not the post-SPMD
+# HLO the byte accounting above parses.  At that stage the useful signal is
+# STRUCTURAL: how many collective instructions the program carries (a scan
+# body appears once, so counts are static per-program, not per-iteration).
+# ``SolvePlan.hlo_summary`` feeds ``plan.info["hlo"]`` through here, and the
+# dist tests that used to hand-count ``stablehlo.all_reduce`` substrings
+# assert against ``count_by_op`` instead -- one parser, one naming scheme
+# (the HLO collective names used by ``analyze_hlo_text``).
+
+_STABLEHLO_OPS = {
+    "stablehlo.all_reduce": "all-reduce",
+    "stablehlo.all_gather": "all-gather",
+    "stablehlo.reduce_scatter": "reduce-scatter",
+    "stablehlo.all_to_all": "all-to-all",
+    "stablehlo.collective_permute": "collective-permute",
+    "stablehlo.collective_broadcast": "collective-broadcast",
+}
+
+
+def analyze_stablehlo_text(text: str) -> dict:
+    """Collective-instruction counts from StableHLO MLIR text.  Returns
+    ``{"count_by_op": {hlo_name: n}, "total_count": n}`` with zero-count
+    ops omitted."""
+    counts: dict[str, float] = {}
+    for token, name in _STABLEHLO_OPS.items():
+        n = text.count(token)
+        if n:
+            counts[name] = float(n)
+    return {"count_by_op": counts,
+            "total_count": float(sum(counts.values()))}

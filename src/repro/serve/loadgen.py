@@ -27,11 +27,11 @@ the requests that suffered it.
 
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import numpy as np
 
+from ..obs import clock as _clock
 from .service import SolveRequestError, SolveService
 
 __all__ = ["run_load"]
@@ -85,46 +85,46 @@ def run_load(service: SolveService, make_rhs: Callable[[int], np.ndarray],
         submit_t[rid] = t_sched
         return rid
 
-    t0 = time.perf_counter()
+    t0 = _clock.now()
     if mode == "open":
         gaps = rng.exponential(1.0 / rate, size=requests)
         arrivals = np.cumsum(gaps)            # scheduled offsets from t0
         nxt = 0
         while nxt < requests or service.pending() or service.active():
-            now = time.perf_counter() - t0
+            now = _clock.now() - t0
             while nxt < requests and arrivals[nxt] <= now:
                 _submit(nxt, t0 + arrivals[nxt])
                 nxt += 1
             if nxt < requests and not service.pending() \
                     and not service.active():
                 # idle before the next scheduled arrival: sleep up to it
-                time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
+                _clock.sleep(max(0.0, arrivals[nxt] - (_clock.now() - t0)))
                 continue
             for rid, o in service.tick().items():
                 if rid in submit_t:
-                    lat.append(time.perf_counter() - submit_t.pop(rid))
+                    lat.append(_clock.now() - submit_t.pop(rid))
                     statuses[o.status] = statuses.get(o.status, 0) + 1
     else:
         inflight = 0
         issued = 0
         while issued < requests and inflight < concurrency:
-            if _submit(issued, time.perf_counter()) is not None:
+            if _submit(issued, _clock.now()) is not None:
                 inflight += 1
             issued += 1
         while inflight > 0:
             for rid, o in service.tick().items():
                 if rid not in submit_t:
                     continue
-                lat.append(time.perf_counter() - submit_t.pop(rid))
+                lat.append(_clock.now() - submit_t.pop(rid))
                 statuses[o.status] = statuses.get(o.status, 0) + 1
                 inflight -= 1
                 while issued < requests:
-                    ok = _submit(issued, time.perf_counter()) is not None
+                    ok = _submit(issued, _clock.now()) is not None
                     issued += 1
                     if ok:
                         inflight += 1
                         break
-    span = time.perf_counter() - t0
+    span = _clock.now() - t0
     retraces = sum(
         max(0, plan.traces - 1)
         for op in service._operators.values()

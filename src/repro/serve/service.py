@@ -56,7 +56,7 @@ stats dict, bit-identical outcomes.
 
 from __future__ import annotations
 
-import time
+import itertools
 from dataclasses import dataclass, field, replace
 from typing import NamedTuple
 
@@ -65,9 +65,98 @@ import numpy as np
 from ..core.plan import SolveSpec, canonicalize, chunk_spec
 from ..core.registry import get_solver
 from ..ft.straggler import StepTimer
+from ..obs import REGISTRY as _OBS
+from ..obs import clock as _clock
+from ..obs import span as _span
 
 __all__ = ["SolveService", "SolveRequest", "SolveOutcome",
            "SolveRequestError", "OperatorInfo"]
+
+# -- observability (host-side only; see repro.obs) ---------------------------
+#
+# Each SolveService instance reports under a unique service="s<N>" label so
+# multiple services in one process (tests build dozens) never alias counters.
+# The legacy ``stats`` dict mirrors every scalar bump into
+# ``repro_serve_events_total`` via :class:`_StatsView`; the first-class
+# metrics below carry what a dict of totals cannot (distributions, gauges).
+_SVC_SEQ = itertools.count(1)
+_M_EVENTS = _OBS.counter(
+    "repro_serve_events_total",
+    "legacy SolveService.stats counter bumps by event name",
+    ("service", "event"))
+_M_REJECTS = _OBS.counter(
+    "repro_serve_rejects_total", "admission rejections by structured reason",
+    ("service", "reason"))
+_M_OUTCOMES = _OBS.counter(
+    "repro_serve_outcomes_total", "completed requests by final status",
+    ("service", "status"))
+_M_STRAGGLERS = _OBS.counter(
+    "repro_serve_straggler_chunks_total",
+    "chunks the StepTimer watchdog flagged as stragglers", ("service",))
+_M_QUEUE_DEPTH = _OBS.gauge(
+    "repro_serve_queue_depth", "requests currently queued (pre-admission)",
+    ("service",))
+_M_QUEUE_PEAK = _OBS.gauge(
+    "repro_serve_queue_peak", "high-water mark of the admission queue",
+    ("service",))
+_M_RESIDENT_BYTES = _OBS.gauge(
+    "repro_serve_resident_bytes",
+    "device bytes of resident operators charged to the memory budget",
+    ("service",))
+_M_OPERATORS = _OBS.gauge(
+    "repro_serve_operators_resident", "registered operators currently "
+    "resident on device", ("service",))
+_M_TICK_S = _OBS.histogram(
+    "repro_serve_tick_seconds", "wall time of one serving-loop tick",
+    ("service",))
+_M_CHUNK_S = _OBS.histogram(
+    "repro_serve_chunk_seconds",
+    "wall time of one continuous-batching (or legacy deadline) chunk",
+    ("service",))
+_M_LATENCY_S = _OBS.histogram(
+    "repro_serve_request_seconds",
+    "submit-to-completion latency of continuous-batching requests",
+    ("service",))
+
+
+class _RejectsView(dict):
+    """``stats['rejects']``: a plain dict to readers, write-through to
+    ``repro_serve_rejects_total{service,reason}`` on every bump."""
+
+    def __init__(self, service: str, *a, **kw):
+        super().__init__(*a, **kw)
+        self._svc = service
+
+    def __setitem__(self, reason, value):
+        delta = value - self.get(reason, 0)
+        if isinstance(delta, (int, float)) and delta > 0:
+            _M_REJECTS.inc(delta, service=self._svc, reason=reason)
+        super().__setitem__(reason, value)
+
+
+class _StatsView(dict):
+    """The legacy ``SolveService.stats`` dict, kept bit-for-bit (same keys,
+    same values, same mutability -- the ``SolveServer`` shim binds this very
+    object) but write-through: every scalar counter bump also lands in the
+    obs registry as ``repro_serve_events_total{service,event}``.  The
+    non-scalar members keep their legacy types (``straggler_chunks`` a
+    list, ``rejects`` a dict) -- their registry mirrors are maintained at
+    the mutation sites / by :class:`_RejectsView`."""
+
+    def __init__(self, service: str, init: dict):
+        super().__init__(init)
+        self._svc = service
+
+    def __setitem__(self, key, value):
+        old = self.get(key)
+        if isinstance(value, (int, float)) and isinstance(old, (int, float)):
+            if key == "queue_peak":
+                _M_QUEUE_PEAK.set(value, service=self._svc)
+            else:
+                delta = value - old
+                if delta > 0:
+                    _M_EVENTS.inc(delta, service=self._svc, event=key)
+        super().__setitem__(key, value)
 
 # device statuses that mean "the recurrence is healthy" -- anything else
 # is a guard fault (breakdown / diverged / stagnated) and terminal
@@ -255,10 +344,13 @@ class SolveService:
         self._next_id = 0
         self._chunk_seq = 0             # StepTimer step index
         self._use_seq = 0               # LRU clock
+        self._obs_label = f"s{next(_SVC_SEQ)}"
         # one stats dict serves both surfaces: the legacy keys keep their
         # exact legacy meaning (the SolveServer shim binds this dict), the
-        # continuous loop adds its own counters alongside
-        self.stats = {
+        # continuous loop adds its own counters alongside.  It is a
+        # _StatsView: reads/equality are plain dict, writes mirror into the
+        # obs registry under this instance's service label.
+        self.stats = _StatsView(self._obs_label, {
             # legacy (SolveServer) counters
             "requests": 0, "batches": 0, "padded_rhs": 0, "plans": 0,
             "rejected": 0, "degraded_batches": 0, "deadline_batches": 0,
@@ -268,8 +360,9 @@ class SolveService:
             "rebuckets": 0, "padded_lanes": 0, "queue_peak": 0,
             # registry counters
             "evictions": 0, "reloads": 0,
-            "rejects": {},              # reason -> count
-        }
+        })
+        # reason -> count (write-through to repro_serve_rejects_total)
+        self.stats["rejects"] = _RejectsView(self._obs_label)
 
     # -- operator registry --------------------------------------------------
 
@@ -320,6 +413,7 @@ class SolveService:
         self._fit_memory(op.bytes)      # may evict; raises over_memory
         self._operators[name] = op
         self._touch(op)
+        self._obs_residency()
         return self._info(op)
 
     def unregister_operator(self, name: str) -> None:
@@ -330,6 +424,7 @@ class SolveService:
             raise ValueError(
                 f"operator {name!r} is busy ({len(op.lanes)} in flight)")
         del self._operators[name]
+        self._obs_residency()
 
     def operators(self) -> dict[str, OperatorInfo]:
         """Registry snapshot: {name: OperatorInfo}."""
@@ -338,6 +433,14 @@ class SolveService:
     def resident_bytes(self) -> int:
         return sum(op.bytes for op in self._operators.values()
                    if op.resident)
+
+    def _obs_residency(self) -> None:
+        """Refresh the registry-backed residency gauges (called on every
+        register/unregister/evict/reload)."""
+        _M_RESIDENT_BYTES.set(self.resident_bytes(), service=self._obs_label)
+        _M_OPERATORS.set(
+            sum(1 for op in self._operators.values() if op.resident),
+            service=self._obs_label)
 
     @staticmethod
     def _build_engine(a, build_kwargs):
@@ -392,6 +495,7 @@ class SolveService:
             pool.clear()
         op.last_cohort = ()
         self.stats["evictions"] += 1
+        self._obs_residency()
 
     def _ensure_resident(self, op: _Operator) -> None:
         """Re-materialize an evicted operator from its host matrix (plans
@@ -401,6 +505,7 @@ class SolveService:
         self._fit_memory(op.bytes, keep=op.name)
         op.engine = self._build_engine(op.matrix, op.build_kwargs)
         self.stats["reloads"] += 1
+        self._obs_residency()
 
     # -- client side --------------------------------------------------------
 
@@ -469,10 +574,11 @@ class SolveService:
             rid=rid, op=operator, b=b,
             tol=None if tol is None else float(tol), max_iters=max_iters,
             deadline=None if deadline is None else float(deadline),
-            priority=priority, t_submit=time.perf_counter()))
+            priority=priority, t_submit=_clock.now()))
         self.stats["requests"] += 1
         self.stats["queue_peak"] = max(self.stats["queue_peak"],
                                        len(self._queue))
+        _M_QUEUE_DEPTH.set(len(self._queue), service=self._obs_label)
         return rid
 
     def pending(self) -> int:
@@ -531,6 +637,7 @@ class SolveService:
         if admitted:
             taken = {id(p) for p in admitted}
             self._queue = [p for p in self._queue if id(p) not in taken]
+        _M_QUEUE_DEPTH.set(len(self._queue), service=self._obs_label)
 
     # -- plan warm pool -----------------------------------------------------
 
@@ -615,12 +722,14 @@ class SolveService:
         their iterate into the next chunk.
         """
         self.stats["ticks"] += 1
-        now = time.perf_counter()
-        self._admit(now)
-        out: dict[int, SolveOutcome] = {}
-        for op in list(self._operators.values()):
-            if op.lanes:
-                out.update(self._run_op_chunk(op))
+        now = _clock.now()
+        with _span("tick", kind="tick", service=self._obs_label):
+            self._admit(now)
+            out: dict[int, SolveOutcome] = {}
+            for op in list(self._operators.values()):
+                if op.lanes:
+                    out.update(self._run_op_chunk(op))
+        _M_TICK_S.observe(_clock.now() - now, service=self._obs_label)
         self.stats["completed"] += len(out)
         return out
 
@@ -650,15 +759,19 @@ class SolveService:
             if lane.x is not None:
                 x0[i] = lane.x
         plan = self.plan_for(op, k_pad, "cb")
-        t0 = time.perf_counter()
-        x, norms, used = self._run_degradable(op, plan, k_pad, batch, x0=x0,
-                                              ref_flavor="cb_ref")
-        dt = time.perf_counter() - t0
+        t0 = _clock.now()
+        with _span("chunk", kind="chunk", service=self._obs_label,
+                   operator=op.name, k_pad=k_pad):
+            x, norms, used = self._run_degradable(op, plan, k_pad, batch,
+                                                  x0=x0, ref_flavor="cb_ref")
+        dt = _clock.now() - t0
+        _M_CHUNK_S.observe(dt, service=self._obs_label)
         _assert_steady(self.plan_for(op, k_pad, "cb"))
         self._chunk_seq += 1
         rep = self.timer.observe(self._chunk_seq, dt)
         if rep.is_straggler:
             self.stats["straggler_chunks"].append(self._chunk_seq)
+            _M_STRAGGLERS.inc(service=self._obs_label)
         self.stats["chunks"] += 1
         self.stats["padded_lanes"] += k_pad - k
         x = np.asarray(x)
@@ -666,7 +779,7 @@ class SolveService:
         its = (np.atleast_1d(np.asarray(used.last_iters)).astype(np.int64)
                if op.tolerance else np.full(k_pad, op.chunk, np.int64))
         statuses = self._statuses(used, k_pad)
-        now = time.perf_counter()
+        now = _clock.now()
         survivors: list[_Lane] = []
         out: dict[int, SolveOutcome] = {}
         for i, lane in enumerate(op.lanes):
@@ -728,6 +841,9 @@ class SolveService:
             xi = xi.astype(lane.req.b.dtype, copy=False)
         bn = lane.bnorm if lane.bnorm > 0 else 1.0
         rel = float(trace[min(it_final, trace.shape[0] - 1)]) / bn
+        _M_OUTCOMES.inc(service=self._obs_label, status=status)
+        _M_LATENCY_S.observe(_clock.now() - lane.req.t_submit,
+                             service=self._obs_label)
         return SolveOutcome(
             lane.req.rid, xi, trace, batch_size=k_pad,
             iters=it_final if op.tolerance else -1, requests=k,
@@ -812,17 +928,21 @@ class SolveService:
         snap = [("maxiter", -1.0, 0)] * k_pad   # (status, rel, iters)
         total_iters = np.zeros(k_pad, np.int64)
         traces = [[] for _ in range(k_pad)]
-        t0 = time.perf_counter()
+        t0 = _clock.now()
         it_done = 0
         while it_done < budget and not done.all():
-            tc = time.perf_counter()
-            x2, norms = plan(batch, x0=x)
-            dt = time.perf_counter() - tc
+            tc = _clock.now()
+            with _span("chunk", kind="chunk", service=self._obs_label,
+                       operator=op.name, k_pad=k_pad, legacy=True):
+                x2, norms = plan(batch, x0=x)
+            dt = _clock.now() - tc
+            _M_CHUNK_S.observe(dt, service=self._obs_label)
             plan.assert_steady()
             self._chunk_seq += 1
             rep = self.timer.observe(self._chunk_seq, dt)
             if rep.is_straggler:
                 self.stats["straggler_chunks"].append(self._chunk_seq)
+                _M_STRAGGLERS.inc(service=self._obs_label)
             norms = np.asarray(norms)
             its = (np.atleast_1d(np.asarray(plan.last_iters))
                    .astype(np.int64) if op.tolerance
@@ -830,7 +950,7 @@ class SolveService:
             statuses = self._statuses(plan, k_pad)
             x = np.asarray(x2)
             it_done += self.deadline_chunk
-            elapsed = time.perf_counter() - t0
+            elapsed = _clock.now() - t0
             for i, p in enumerate(take):
                 if done[i]:
                     continue

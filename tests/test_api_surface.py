@@ -15,6 +15,7 @@ enforces it.
 import inspect
 
 import repro.core as core
+import repro.obs as obs
 import repro.serve as serve
 
 # -- exported names -----------------------------------------------------------
@@ -42,6 +43,19 @@ SERVE_EXPORTS = {
     "SolveServer",
     # LM generation demo
     "generate", "SlotServer",
+}
+
+OBS_EXPORTS = {
+    # the injectable process clock (FakeClock lives on obs.clock)
+    "clock",
+    # metrics: registry + primitives + the kill switch
+    "Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+    "log_buckets", "DEFAULT_LATENCY_BUCKETS",
+    "enabled", "set_enabled", "disabled",
+    # tracing: span ring buffer + Chrome export + jax.profiler bridge
+    "Span", "Tracer", "TRACER", "span", "set_jax_bridge",
+    # exposition: Prometheus text, JSON snapshot, /metrics HTTP server
+    "render_prometheus", "snapshot", "MetricsServer", "start_metrics_server",
 }
 
 # -- callable signatures (parameter name tuples) ------------------------------
@@ -102,9 +116,18 @@ SIGNATURES = {
     "serve.SolveServer.step": ("self",),
     "serve.SolveServer.drain": ("self",),
     "serve.SolveServer.plan_for": ("self", "k_pad"),
+    "obs.Registry.counter": ("self", "name", "help", "labelnames"),
+    "obs.Registry.gauge": ("self", "name", "help", "labelnames"),
+    "obs.Registry.histogram": ("self", "name", "help", "labelnames",
+                               "buckets"),
+    "obs.span": ("name", "kind", "attrs"),
+    "obs.render_prometheus": ("registry",),
+    "obs.snapshot": ("registry",),
+    "obs.start_metrics_server": ("port", "host", "registry", "tracer"),
+    "obs.clock.override": ("clock",),
 }
 
-_MODULES = {"core": core, "serve": serve}
+_MODULES = {"core": core, "serve": serve, "obs": obs}
 
 
 def _resolve(path: str):
@@ -125,6 +148,12 @@ def test_serve_exports_exact():
     assert set(serve.__all__) == SERVE_EXPORTS
     for name in SERVE_EXPORTS:
         assert hasattr(serve, name), f"repro.serve.{name} missing"
+
+
+def test_obs_exports_exact():
+    assert set(obs.__all__) == OBS_EXPORTS
+    for name in OBS_EXPORTS:
+        assert hasattr(obs, name), f"repro.obs.{name} missing"
 
 
 def test_public_signatures_frozen():

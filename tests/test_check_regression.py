@@ -22,7 +22,7 @@ CURRENT = os.path.join(REPO, "BENCH_pcg.json")
 
 def _payload():
     return {
-        "schema": "bench_pcg/v6",
+        "schema": "bench_pcg/v7",
         "fused_vs_unfused": [{
             "matrix": "m", "us_per_iter_fused": 100.0,
             "us_per_iter_unfused": 120.0, "trace_rel_maxdiff": 0.0,
@@ -74,6 +74,15 @@ def _payload():
             "p50_ms": 40.0, "p99_ms": 90.0, "mean_ms": 45.0,
             "throughput_rps": 9.5, "chunks": 30, "rebuckets": 8,
             "plans": 3,
+        }],
+        "observability": [{
+            "matrix": "m", "method": "pcg", "n": 64, "iters": 60,
+            "repeats": 5, "us_per_iter_instrumented": 104.0,
+            "us_per_iter_bare": 100.0, "overhead_ratio": 1.04,
+            "bitwise_identical": True, "required_families_present": True,
+            "span_kinds_present": True,
+            "span_counts": {"plan_build": 1, "solve": 12},
+            "metric_families": 20,
         }],
     }
 
@@ -255,18 +264,45 @@ def test_serving_count_drift_and_latency_blowup_fail():
     assert not check(cur, _payload(), timing_ratio=10.0).failures
 
 
+def test_obs_bitwise_break_fails():
+    """Instrumentation that changes a solve's bits breaks the host-side-
+    only contract, whatever the baseline recorded."""
+    cur = _payload()
+    cur["observability"][0]["bitwise_identical"] = False
+    g = check(cur, _payload())
+    assert any("bitwise_identical" in f for f in g.failures)
+
+
+def test_obs_overhead_beyond_ratio_fails():
+    """Instrumented timing is bounded against the SAME RUN's bare arm
+    (like guard overhead): the always-on budget is 5%."""
+    cur = _payload()
+    cur["observability"][0]["overhead_ratio"] = 1.2
+    g = check(cur, _payload(), obs_overhead=1.05)
+    assert any("overhead_ratio" in f for f in g.failures)
+    cur["observability"][0]["overhead_ratio"] = 1.02
+    assert not check(cur, _payload(), obs_overhead=1.05).failures
+
+
+def test_obs_missing_family_fails():
+    cur = _payload()
+    cur["observability"][0]["required_families_present"] = False
+    g = check(cur, _payload())
+    assert any("required_families_present" in f for f in g.failures)
+
+
 def test_sections_subset_gates_only_named_sections():
     """--sections serving: a serving-only payload (the serve-smoke job)
     checks against the full baseline without tripping coverage failures
     for the sections it does not carry."""
-    cur = {"schema": "bench_pcg/v6", "serving": _payload()["serving"]}
+    cur = {"schema": "bench_pcg/v7", "serving": _payload()["serving"]}
     g = check(cur, _payload(), sections=("serving",))
     assert not g.failures and g.checks > 5
     cur["serving"][0]["retraces"] = 2
     g = check(cur, _payload(), sections=("serving",))
     assert any("retraces" in f for f in g.failures)
     # the subset gate still notices a dropped load point
-    g = check({"schema": "bench_pcg/v6", "serving": []}, _payload(),
+    g = check({"schema": "bench_pcg/v7", "serving": []}, _payload(),
               sections=("serving",))
     assert any("missing" in f for f in g.failures)
 
@@ -334,7 +370,7 @@ def test_committed_bench_passes_gate():
 
 def test_committed_baseline_is_selfconsistent():
     base = json.load(open(BASELINE))
-    assert base["schema"] == "bench_pcg/v6"
+    assert base["schema"] == "bench_pcg/v7"
     assert base["tol_solves"], "baseline must pin tolerance iteration counts"
     assert base["noc_plans"], "baseline must pin the comm-plan traffic records"
     assert base["pipelined"], "baseline must pin the pipelined-PCG record"
@@ -368,6 +404,11 @@ def test_committed_baseline_is_selfconsistent():
         assert e["rejected"] == 0 and e["errors"] == 0
         assert e["completed"] == e["requests"]
         assert e["p50_ms"] <= e["p99_ms"]
+    assert base["observability"], "baseline must pin the obs overhead record"
+    for e in base["observability"]:
+        assert e["bitwise_identical"] is True
+        assert e["required_families_present"] is True
+        assert e["overhead_ratio"] <= 1.05   # the always-on budget
     g = check(base, base)
     assert not g.failures
 

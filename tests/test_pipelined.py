@@ -207,17 +207,16 @@ for mode in ("1d", "2d"):
 # split reductions per iteration (4 all-reduces).  The halo matvec itself
 # lowers to collective-permutes, never all-reduce/all-gather.
 eng = AzulEngine(m, mesh=mesh, mode="1d", precond="jacobi", dtype=np.float64)
-bdev = eng.to_device_vec(b)
-x0dev = eng.to_device_vec(np.zeros(n))
 def collectives(plan):
-    txt = plan.fn.lower(bdev, x0dev).as_text()
-    return (txt.count("stablehlo.all_reduce"),
-            txt.count("stablehlo.collective_permute"),
-            txt.count("stablehlo.all_gather"))
-ar, cp_, ag = collectives(eng.plan(SolveSpec(method="pcg_pipelined",
-                                             iters=60, layout="halo")))
+    ops = plan.hlo_summary()["count_by_op"]
+    return (int(ops.get("all-reduce", 0)),
+            int(ops.get("collective-permute", 0)),
+            int(ops.get("all-gather", 0)))
+pl = eng.plan(SolveSpec(method="pcg_pipelined", iters=60, layout="halo"))
+ar, cp_, ag = collectives(pl)
 assert ar == 2, f"pipelined halo all_reduce {ar} != 2"
 assert ag == 0 and cp_ > 0, (cp_, ag)
+assert pl.info["hlo"]["count_by_op"], "hlo_summary not cached into info"
 ar_pcg, _, _ = collectives(eng.plan(SolveSpec(method="pcg", iters=60,
                                               layout="halo")))
 assert ar_pcg == 4, f"pcg halo all_reduce {ar_pcg} != 4"

@@ -347,3 +347,52 @@ def test_solve_server_shim_warns_and_stays_on_the_plan_surface():
     x, norms = plan(b[None])
     assert np.array_equal(out.x, np.asarray(x)[0])
     assert out.status == "converged"
+
+
+# -- stats: the legacy dict shape, now a write-through registry view ---------
+
+
+def test_stats_is_the_exact_legacy_dict_shape():
+    """``SolveService.stats`` became a write-through view over the obs
+    registry; to every reader it must stay EXACTLY the legacy dict --
+    same keys, same initial values, plain-dict equality -- and every bump
+    must land in ``repro_serve_events_total`` under this service's
+    label."""
+    from repro import obs
+
+    svc, m = _service(8)
+    legacy = {
+        "requests": 0, "batches": 0, "padded_rhs": 0, "plans": 0,
+        "rejected": 0, "degraded_batches": 0, "deadline_batches": 0,
+        "deadline_exceeded": 0, "straggler_chunks": [],
+        "ticks": 0, "chunks": 0, "admitted": 0, "completed": 0,
+        "rebuckets": 0, "padded_lanes": 0, "queue_peak": 0,
+        "evictions": 0, "reloads": 0, "rejects": {},
+    }
+    assert dict(svc.stats) == legacy
+    assert isinstance(svc.stats, dict)            # readers see a dict
+    assert isinstance(svc.stats["rejects"], dict)
+
+    rid = svc.submit(_rhs(m.shape[0], 23))
+    out = svc.drain()[rid]
+    assert out.status == "converged"
+    assert svc.stats["requests"] == 1
+    assert svc.stats["completed"] == 1
+    assert svc.stats["ticks"] >= 1
+
+    ev = obs.REGISTRY.get("repro_serve_events_total")
+    svc_label = svc._obs_label
+    for key in ("requests", "completed", "ticks", "chunks"):
+        assert ev.value(service=svc_label, event=key) == svc.stats[key], key
+    # structured rejection mirrors into repro_serve_rejects_total
+    with pytest.raises(SolveRequestError):
+        svc.submit(np.ones(3))                    # wrong length
+    assert svc.stats["rejected"] == 1
+    reason = next(iter(svc.stats["rejects"]))
+    rj = obs.REGISTRY.get("repro_serve_rejects_total")
+    assert rj.value(service=svc_label, reason=reason) == 1
+    # gauges track residency and queue high-water
+    assert (obs.REGISTRY.get("repro_serve_resident_bytes")
+            .value(service=svc_label)) == svc.resident_bytes()
+    assert (obs.REGISTRY.get("repro_serve_queue_peak")
+            .value(service=svc_label)) == svc.stats["queue_peak"]
