@@ -1,7 +1,7 @@
 """Serving benchmark: drive :class:`repro.serve.SolveService` with the
 load generator and record latency/throughput curves.
 
-Produces the ``serving`` section of ``BENCH_pcg.json`` (schema v7), gated
+Produces the ``serving`` section of ``BENCH_pcg.json`` (schema v8), gated
 by ``benchmarks/check_regression.py``:
 
 * **closed-loop** entries (fixed client population): latency here is
@@ -107,7 +107,7 @@ def main(argv=None) -> int:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"schema": "bench_pcg/v7", "serving": payload}, f,
+            json.dump({"schema": "bench_pcg/v8", "serving": payload}, f,
                       indent=1)
         print(f"# wrote {args.json}")
     return 0

@@ -56,6 +56,17 @@ machines:
   ``--obs-overhead`` (default 1.05 -- the always-on instrumentation may
   cost at most 5%).  The instrumented timing also rides the generous
   cross-run timing gate.
+* **Formats** (``formats``): the storage-format portfolio's contract.
+  For ``format_autotune`` entries: the autotuner's ``chosen_format`` and
+  the modeled per-candidate stream words match exactly (the model is pure
+  host arithmetic over row statistics -- drift means the model or the
+  heuristic changed), ``beats_ell_modeled``, ``iters_match`` and
+  ``fused_matches_reference`` must stay True, and on ``wall_gated``
+  entries (the hub-row skewed matrix, where the win is ~2x and
+  machine-robust) ``beats_ell_wall`` must stay True.  For the
+  ``plan_scaling`` entry: ``scan_sublinear_vs_unrolled`` must stay True --
+  the ``lax.scan`` SpTRSV wavefront's plan (trace+lower) time at ~1000
+  levels stays far below the unrolled baseline's.
 * **Timings** (``us_per_iter*``): within ``--timing-ratio`` (default 10x)
   of baseline.  Interpret-mode CPU timings are noisy and machine-dependent;
   the generous ratio still catches order-of-magnitude regressions (an
@@ -144,7 +155,7 @@ class Gate:
 
 #: every gate-checked payload section, in check order
 SECTIONS = ("tol_solves", "fused_vs_unfused", "batch_sweep", "noc_plans",
-            "guarded", "pipelined", "serving", "observability")
+            "guarded", "pipelined", "serving", "observability", "formats")
 
 
 def check(cur: dict, base: dict, timing_ratio: float = 10.0,
@@ -300,6 +311,46 @@ def check(cur: dict, base: dict, timing_ratio: float = 10.0,
         g.timing(where, "us_per_iter_instrumented",
                  ce.get("us_per_iter_instrumented"),
                  be.get("us_per_iter_instrumented"))
+
+    for where, ce, be in () if _skip("formats") else g.section(
+                                   "formats", ("kind", "matrix"),
+                                   cur.get("formats", []),
+                                   base.get("formats", [])):
+        if be.get("kind") == "plan_scaling":
+            g.exact(where, "scan_sublinear_vs_unrolled",
+                    ce.get("scan_sublinear_vs_unrolled"), True)
+            # the scan's plan time is the thing item 4c bought; bound it by
+            # the cross-machine timing ratio like every wall-clock field
+            g.checks += 1
+            cs = (ce.get("points") or [{}])[-1].get("plan_s_scan")
+            bs = (be.get("points") or [{}])[-1].get("plan_s_scan")
+            if cs is None or bs is None:
+                g.fail(f"{where}: plan_s_scan missing ({bs!r} -> {cs!r})")
+            elif bs > 0 and cs > bs * g.ratio:
+                g.fail(f"{where}: plan_s_scan regressed {bs:.3f} -> {cs:.3f} "
+                       f"s (> {g.ratio:.0f}x baseline)")
+            continue
+        # format_autotune entries: the decision and its model, exactly
+        g.exact(where, "chosen_format", ce.get("chosen_format"),
+                be.get("chosen_format"))
+        g.exact(where, "modeled_words", ce.get("modeled_words"),
+                be.get("modeled_words"))
+        g.exact(where, "modeled_reduction_vs_ell",
+                ce.get("modeled_reduction_vs_ell"),
+                be.get("modeled_reduction_vs_ell"))
+        g.exact(where, "beats_ell_modeled", ce.get("beats_ell_modeled"), True)
+        g.exact(where, "iters_auto", ce.get("iters_auto"),
+                be.get("iters_auto"))
+        g.exact(where, "iters_ell", ce.get("iters_ell"), be.get("iters_ell"))
+        g.exact(where, "iters_match", ce.get("iters_match"), True)
+        g.exact(where, "fused_matches_reference",
+                ce.get("fused_matches_reference"), True)
+        if be.get("wall_gated"):
+            g.exact(where, "beats_ell_wall", ce.get("beats_ell_wall"), True)
+        g.leq(where, "x_vs_ell_maxdiff", ce.get("x_vs_ell_maxdiff"),
+              EQUIV_TOL)
+        g.timing(where, "us_per_iter_auto", ce.get("us_per_iter_auto"),
+                 be.get("us_per_iter_auto"))
     return g
 
 
@@ -337,10 +388,11 @@ def main(argv=None) -> int:
         with open(args.current) as f:
             cur = json.load(f)
         problems = []
-        if cur.get("schema") != "bench_pcg/v7":
+        if cur.get("schema") != "bench_pcg/v8":
             problems.append(f"unexpected schema {cur.get('schema')!r}")
         for section in ("fused_vs_unfused", "tol_solves", "noc_plans",
-                        "pipelined", "guarded", "serving", "observability"):
+                        "pipelined", "guarded", "serving", "observability",
+                        "formats"):
             if not cur.get(section):
                 problems.append(f"section {section!r} is empty/missing")
         if problems:

@@ -93,8 +93,16 @@ def main(argv=None) -> None:
                 iters=30 if args.smoke else 60,
                 repeats=3 if args.smoke else 5,
                 matrix=matrices[0])
+            # the format-portfolio A/B and the SpTRSV plan-scaling record
+            # keep full settings even in smoke: both are the regression
+            # gate's signal for ROADMAP item 4 (skewed solves are tiny, and
+            # the ~1000-level trace-cost contrast IS the measurement)
+            krows, formats_payload = bench_pcg.run_formats()
+            xrows, scaling_payload = bench_pcg.run_plan_scaling()
+            formats_payload += scaling_payload
             for name, us, derived in (frows + brows + trows + prows +
-                                      grows + nrows + srows + orows):
+                                      grows + nrows + srows + orows +
+                                      krows + xrows):
                 print(f"{name},{us:.1f},{derived}")
             for e in tol_payload:
                 # tolerance-mode convergence from the bounded trace ring
@@ -105,7 +113,8 @@ def main(argv=None) -> None:
                     bench_pcg.collect_json(fused_payload, batch_payload,
                                            tol_payload, noc_payload,
                                            pipe_payload, guarded_payload,
-                                           serving_payload, obs_payload),
+                                           serving_payload, obs_payload,
+                                           formats_payload),
                     f, indent=1)
             print(f"# wrote {args.json}")
         except Exception:

@@ -40,6 +40,20 @@ closures on this schedule when a plan's ``layout`` resolves to ``"halo"``
 (see ``registry.resolve_layout``); bandwidth-reducing reordering
 (``partition.rcm_permutation``) and nnz-balanced splits shrink the halo
 before the plan is cut.
+
+**Storage formats.** The per-matrix format portfolio (SELL/HYB/BCSR,
+``registry.resolve_format``) is a *local-mode* decision: distributed
+plans always stream padded ELL tiles, because the remap below rewrites
+*per-slot* column ids -- a property every padded (tiles, rows_p, w)
+layout shares but the compact slice-/tail-based formats do not (their
+column streams are rank-1 and interleave rows, so a halo slot id is not
+recoverable per stored entry without rebuilding the format per tile).
+``halo_remap_cols`` is therefore format-generic over padded ELL-like
+operands (any (tiles, rows, w) cols/vals pair, e.g. a future padded
+BCSR block-column stream remaps unchanged with ``u`` in block units),
+and the dense all-gather fallback is untouched: when ``use_halo`` is
+False the engine keeps blanket collectives exactly as before the
+format portfolio landed.
 """
 
 from __future__ import annotations

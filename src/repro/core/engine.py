@@ -91,8 +91,10 @@ from .plan import PlanCache, SolvePlan, SolveSpec, canonicalize, warn_deprecated
 from .precond import ic0 as host_ic0
 from .solvers import ensure_status
 from .spops import spmm_ell_padded, spmv_ell_padded
-from .substrate import (fused_ic0_local_substrate, fused_local_substrate,
-                        fused_shard_ic0_substrate, fused_shard_substrate)
+from .stencil import Stencil, stencil_diag, stencil_matvec
+from .substrate import (format_stream_ops, fused_ic0_local_substrate,
+                        fused_local_substrate, fused_shard_ic0_substrate,
+                        fused_shard_substrate)
 
 __all__ = ["AzulEngine", "local_sptrsv"]
 
@@ -216,11 +218,22 @@ class AzulEngine:
         Bandwidth-reducing row/column reordering composed into the
         partition (build-time: the matrix is repacked under the
         permutation; vector I/O round-trips it transparently).
+    format : "auto" | "ell" | "sell" | "hyb" | "bcsr" | "stencil"
+        Operator storage format (local engines).  "auto" runs the
+        per-matrix format autotuner (``kernels.autotune.choose_format``:
+        modeled matrix-stream words over the row-length distribution,
+        persisted in the autotune cache) -- uniform-row matrices stay on
+        padded ELL, skewed/power-law matrices pick sliced-ELL or HYB.
+        Explicit names pin the format; "bcsr" is explicit-only (block
+        structure is a caller assertion).  Distributed engines are "ell"
+        (sharding and halo remap are phrased over the padded ELL blocks);
+        matrix-free :class:`~repro.core.stencil.Stencil` operators are
+        "stencil".  Per-plan override via ``SolveSpec(format=...)``.
     """
 
     def __init__(
         self,
-        a: CSR,
+        a: CSR | Stencil,
         mesh: Mesh | None = None,
         mode: str = "2d",
         row_axes=("data",),
@@ -233,6 +246,7 @@ class AzulEngine:
         fused="auto",
         layout: str = "auto",
         reorder: str = "none",
+        format: str = "auto",
     ):
         if a.shape[0] != a.shape[1]:
             raise ValueError("engine expects a square matrix")
@@ -245,6 +259,34 @@ class AzulEngine:
             raise ValueError(f"reorder must be 'none' or 'rcm', got {reorder!r}")
         if layout == "halo" and mesh is None:
             raise ValueError("layout='halo' needs a mesh (no NoC locally)")
+        if format not in ("auto", "ell", "sell", "hyb", "bcsr", "stencil"):
+            raise ValueError(
+                "format must be 'auto', 'ell', 'sell', 'hyb', 'bcsr' or "
+                f"'stencil', got {format!r}")
+        is_stencil = isinstance(a, Stencil)
+        if is_stencil:
+            if mesh is not None:
+                raise ValueError(
+                    "matrix-free stencil operators are local-only (the "
+                    "distributed partition shards stored nonzeros)")
+            if reorder != "none":
+                raise ValueError(
+                    "reorder needs a stored matrix; stencil operators have "
+                    "a fixed grid ordering")
+            if registry.get_precond(precond).factorized:
+                raise ValueError(
+                    f"precond {precond!r} needs stored nonzeros to factor; "
+                    "stencil engines support 'jacobi' or 'identity'")
+            if format not in ("auto", "stencil"):
+                raise ValueError(
+                    f"format={format!r} conflicts with a matrix-free "
+                    "stencil operator")
+        elif format == "stencil":
+            raise ValueError("format='stencil' needs a Stencil operator")
+        if mesh is not None and format not in ("auto", "ell"):
+            raise ValueError(
+                f"format={format!r} is not supported in distributed mode "
+                "(sharding and halo remap are phrased over padded ELL)")
         self.fused = fused
         self.layout = layout
         self.reorder = reorder
@@ -272,6 +314,11 @@ class AzulEngine:
         self._imask_dev = None         # lazily device_put interior mask
         self._compiled: dict = {}      # spmv/spmm programs (vector ops)
         self._trsv_cache: dict = {}
+        self.stencil = a if is_stencil else None
+        self.format = format           # the knob; format_choice = resolved
+        self.format_choice = "ell"     # per-matrix decision (local builds)
+        self.format_words = None       # modeled words/matvec behind it
+        self._fmt_objs: dict = {}      # lazily built SELL/HYB/BCSR operands
         # spec-keyed compiled solve plans (see repro.core.plan): replaces
         # the former hand-rolled (method, iters, precond, ...) key tuples
         self.plans = PlanCache()
@@ -281,7 +328,10 @@ class AzulEngine:
         registry.get_precond(precond)  # fail fast on unknown preconditioner
 
         if self.mode == "local":
-            self._build_local()
+            if is_stencil:
+                self._build_local_stencil()
+            else:
+                self._build_local()
         else:
             self.pr = int(np.prod([mesh.shape[ax] for ax in self.row_axes]))
             self.pc = int(np.prod([mesh.shape[ax] for ax in self.col_axes]))
@@ -314,6 +364,55 @@ class AzulEngine:
         self._dinv_pad = jnp.asarray(di)
         if self.precond == "block_ic0":
             self._ic0 = host_ic0(self.a, dtype=self.dtype)
+        # per-matrix format decision (the task compiler's storage leg):
+        # "auto" consults the autotuner's modeled-words ranking (cached by
+        # row-stats fingerprint); explicit knobs pin.  The padded ELL above
+        # always builds -- it backs spmv(), injectable plans and IC(0).
+        from ..kernels import autotune
+        if self.format == "auto":
+            self.format_choice, self.format_words = autotune.choose_format(
+                self.a, dtype=self.dtype, slice_height=self._row_pad,
+                row_pad=self._row_pad)
+        else:
+            self.format_choice = self.format
+            self.format_words = autotune.modeled_format_words(
+                self.a, slice_height=self._row_pad, row_pad=self._row_pad)
+
+    def _build_local_stencil(self):
+        """Matrix-free local build: no stored nonzeros, no ELL pack -- the
+        operator is its coefficient-generating matvec.  Device state is
+        O(n): just the padded inverse diagonal (the stencil diagonal is a
+        known constant)."""
+        self.ell = None
+        self.n_pad = pad_to(max(self.n, 1), self._row_pad)
+        di = np.zeros(self.n_pad, self.dtype)
+        di[: self.n] = 1.0 / stencil_diag(self.stencil)
+        self._dinv_pad = jnp.asarray(di)
+        self.format_choice = "stencil"
+
+    def _format_obj(self, fmt: str):
+        """The device operand container for a non-ELL stored format, built
+        on FIRST use and cached: plans that stay on ELL never pay the
+        second packing."""
+        obj = self._fmt_objs.get(fmt)
+        if obj is not None:
+            return obj
+        from .formats import bcsr_from_csr, hyb_from_csr, sell_from_csr
+        if fmt == "sell":
+            obj = sell_from_csr(self.a, slice_height=self._row_pad,
+                                row_pad=self._row_pad, dtype=self.dtype)
+            assert obj.rows_padded == self.n_pad
+        elif fmt == "hyb":
+            obj = hyb_from_csr(self.a, row_pad=self._row_pad,
+                               dtype=self.dtype)
+            assert obj.rows_padded == self.n_pad
+        elif fmt == "bcsr":
+            obj = bcsr_from_csr(self.a, bm=self._row_pad, bn=self._row_pad,
+                                dtype=self.dtype)
+        else:
+            raise ValueError(f"no format container for {fmt!r}")
+        self._fmt_objs[fmt] = obj
+        return obj
 
     def _put(self, x, spec):
         return jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, spec))
@@ -664,6 +763,9 @@ class AzulEngine:
         rows_p, w) stacked dist blocks.  Corrupt a copy (see
         ``repro.ft.inject``) and hand it to an injectable plan:
         ``plan(b, vals=corrupted)``."""
+        if self.stencil is not None:
+            raise ValueError("matrix-free stencil engines store no values "
+                             "(coefficients are generated in-kernel)")
         if self.mode == "local":
             return np.array(self.ell.vals)
         return np.array(self.partition_plan.vals)
@@ -671,6 +773,9 @@ class AzulEngine:
     def cols_template(self) -> np.ndarray:
         """Host copy of the packed ELL column indices matching
         ``vals_template`` (padded-global ids locally and in 1d mode)."""
+        if self.stencil is not None:
+            raise ValueError("matrix-free stencil engines store no columns "
+                             "(structure is implicit in the grid)")
         if self.mode == "local":
             return np.array(self.ell.cols)
         if self.mode == "1d":
@@ -702,6 +807,9 @@ class AzulEngine:
         """Device operand for an injectable plan's ``vals`` argument: the
         engine's clean resident buffer when None, else a device_put of the
         caller's host buffer (shape-checked against the packed layout)."""
+        if self.stencil is not None:
+            raise ValueError("matrix-free stencil engines store no values "
+                             "(no injectable surface)")
         if vals is None:
             return (jnp.asarray(self.ell.vals) if self.mode == "local"
                     else self.vals)
@@ -726,6 +834,10 @@ class AzulEngine:
         """
         x = np.asarray(x)
         if self.mode == "local":
+            if self.stencil is not None:
+                xd = jnp.asarray(self.to_device_vec(x))
+                y = stencil_matvec(self.stencil, xd, self.n_pad)
+                return self.from_device_vec(np.asarray(y))
             if self._row_perm is None:
                 xd = jnp.asarray(x, self.dtype)
                 if x.ndim == 2:
@@ -833,7 +945,12 @@ class AzulEngine:
             "batch": spec.batch,
             "layout": spec.layout,
             "reorder": spec.reorder,
+            "format": spec.format,
         }
+        _OBS.counter(
+            "repro_plan_format_total",
+            "plans lowered by operator storage format", ("format",),
+        ).inc(format=spec.format)
         if self.comm_plan is not None:
             # the modeled NoC record: halo width + bytes/iteration of the
             # layout this plan actually lowered to (and the alternative),
@@ -882,20 +999,37 @@ class AzulEngine:
         eff = registry.effective_precond(sdef, self.precond, local=True)
         psolve = eff.local_apply(self)
 
+        # non-ELL formats stream the operator through their own
+        # (matvec, fold) pair -- ONE closure pair shared by the fused
+        # substrate and the reference matvec, so fused == reference stays
+        # bitwise per format.  Injectable plans are canonicalized to
+        # "ell" (the runtime vals operand is ELL-shaped), so the runtime
+        # rebuild below never meets a format stream.
+        stream = None
+        if spec.format != "ell":
+            fobj = (self.stencil if spec.format == "stencil"
+                    else self._format_obj(spec.format))
+            stream = format_stream_ops(fobj, spec.format, self.n_pad)
+
         def build_ctx(vals):
             sub = None
             if kind == "fused_ic0":
-                sub = fused_ic0_local_substrate(ell.cols, vals, self._ic0,
-                                                self.n, self.n_pad)
+                sub = fused_ic0_local_substrate(
+                    None if ell is None else ell.cols, vals, self._ic0,
+                    self.n, self.n_pad, stream_ops=stream)
             elif kind == "fused":
                 sub = fused_local_substrate(
-                    ell.cols, vals, dinv=dinv if eff.uses_dinv else None,
+                    None if ell is None else ell.cols, vals,
+                    dinv=dinv if eff.uses_dinv else None, stream_ops=stream,
                 )
 
-            def mv(x):
-                if x.ndim == 2:
-                    return spmm_ell_padded(ell.cols, vals, x)
-                return spmv_ell_padded(ell.cols, vals, x)
+            if stream is not None:
+                mv = stream[0]
+            else:
+                def mv(x):
+                    if x.ndim == 2:
+                        return spmm_ell_padded(ell.cols, vals, x)
+                    return spmv_ell_padded(ell.cols, vals, x)
 
             return registry.SolveContext(
                 matvec=mv, psolve=psolve, dinv=dinv, substrate=sub,
@@ -913,7 +1047,7 @@ class AzulEngine:
 
             return jax.jit(prog)
 
-        ctx = build_ctx(ell.vals)
+        ctx = build_ctx(None if ell is None else ell.vals)
 
         def prog(b_pad, x0_pad):
             cell[0] += 1
@@ -1094,7 +1228,7 @@ class AzulEngine:
         not counted (they are XLA-owned and tiny next to the operands)."""
         total = 0
         seen: set[int] = set()
-        for attr in ("ell", "cols", "vals", "_dinv_pad", "_ic0"):
+        for attr in ("ell", "cols", "vals", "_dinv_pad", "_ic0", "_fmt_objs"):
             obj = getattr(self, attr, None)
             if obj is None:
                 continue

@@ -11,6 +11,14 @@ MXU/VPU see aligned tiles.  We therefore support three formats:
                   SpMV hot loop is a gather + multiply-add over a dense
                   (rows, width) array; rows/width are padded to hardware
                   tiles (8 x 128 for f32).
+* ``SELL``     -- sliced ELLPACK: rows grouped into fixed-height slices,
+                  each slice padded only to ITS OWN max row width.  On
+                  power-law rows this kills the global-width padding that
+                  makes plain ELL stream (and multiply) mostly zeros.
+* ``HYB``      -- hybrid: an ELL core at a storage-optimal width plus a COO
+                  spill tail for the entries of rows wider than the core.
+                  The regular core keeps the streaming-friendly layout; the
+                  scatter-add tail absorbs the hubs.
 * ``BCSR``     -- block-compressed rows of dense (bm, bn) blocks; SpMV over
                   BCSR is a sequence of small dense matmuls -> MXU path.
 
@@ -28,12 +36,19 @@ import jax.numpy as jnp
 __all__ = [
     "CSR",
     "ELL",
+    "SELL",
+    "HYB",
     "BCSR",
     "csr_from_dense",
     "csr_to_dense",
     "csr_from_scipy",
     "ell_from_csr",
     "ell_to_dense",
+    "sell_from_csr",
+    "sell_to_dense",
+    "hyb_from_csr",
+    "hyb_to_dense",
+    "hyb_core_width",
     "bcsr_from_csr",
     "bcsr_to_dense",
     "pad_to",
@@ -93,6 +108,68 @@ class ELL(NamedTuple):
     @property
     def width(self) -> int:
         return self.cols.shape[1]
+
+
+class SELL(NamedTuple):
+    """Sliced ELLPACK, flat slice-major storage.
+
+    Rows are grouped into slices of ``slice_height`` consecutive rows; each
+    slice is padded only to its own max row nnz, so a handful of hub rows
+    no longer inflate every row to the global width.  Storage is the flat
+    concatenation of the (slice_height, w_s) row-major slice blocks:
+
+    ``cols``/``vals``: (n_stored,) flat entries (0 / 0.0 in padding slots)
+    ``rows``:          (n_stored,) the padded row id of each entry -- the
+                       segment ids the reference matvec reduces over (a
+                       real SELL kernel derives these from the slice
+                       structure instead of streaming them)
+    ``slice_widths``:  host (n_slices,) per-slice widths, static metadata
+    ``n_rows``/``n_cols``: true dims; ``rows_padded``/``slice_height`` static.
+    """
+
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+    rows: jnp.ndarray
+    slice_widths: np.ndarray
+    n_rows: int
+    n_cols: int
+    rows_padded: int
+    slice_height: int
+
+    @property
+    def n_stored(self) -> int:
+        return self.cols.shape[0]
+
+
+class HYB(NamedTuple):
+    """Hybrid ELL + COO: a regular core plus a spill tail for hub rows.
+
+    ``cols``/``vals``: (rows_padded, core_width) padded ELL core
+    ``tail_rows``/``tail_cols``/``tail_vals``: (n_tail,) COO entries of
+        everything past ``core_width`` in its row (padded with
+        row=0/col=0/val=0.0 -- a scatter-add of exact zeros)
+    ``n_rows``/``n_cols``: true dims, static.
+    """
+
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+    tail_rows: jnp.ndarray
+    tail_cols: jnp.ndarray
+    tail_vals: jnp.ndarray
+    n_rows: int
+    n_cols: int
+
+    @property
+    def rows_padded(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def core_width(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def n_tail(self) -> int:
+        return self.tail_rows.shape[0]
 
 
 class BCSR(NamedTuple):
@@ -203,6 +280,136 @@ def ell_to_dense(m: ELL) -> np.ndarray:
         for k in range(m.width):
             if vals[r, k] != 0.0:
                 out[r, cols[r, k]] += vals[r, k]
+    return out
+
+
+def sell_from_csr(
+    m: CSR,
+    slice_height: int = 8,
+    row_pad: int = 8,
+    dtype=np.float32,
+) -> SELL:
+    """Pack a CSR matrix into sliced ELLPACK.
+
+    Rows are padded to a multiple of lcm-ish ``max(row_pad, slice_height)``
+    (both default to the TPU sublane 8, so the padded row count matches the
+    engine's ELL padding and vectors are shared between formats).  Each
+    slice stores its rows at the slice's own max nnz width; padding entries
+    hold col 0 / val 0.0 and scatter into their own (padded) row.
+    """
+    n_rows, n_cols = m.shape
+    rp = pad_to(pad_to(max(n_rows, 1), row_pad), slice_height)
+    row_nnz = np.zeros(rp, dtype=np.int64)
+    row_nnz[:n_rows] = m.row_nnz()
+    n_slices = rp // slice_height
+    widths = np.maximum(
+        row_nnz.reshape(n_slices, slice_height).max(axis=1), 1
+    ).astype(np.int32)
+
+    total = int(slice_height * widths.sum())
+    cols = np.zeros(total, dtype=np.int32)
+    vals = np.zeros(total, dtype=dtype)
+    rows = np.zeros(total, dtype=np.int32)
+    off = 0
+    for s in range(n_slices):
+        w = int(widths[s])
+        for i in range(slice_height):
+            r = s * slice_height + i
+            rows[off:off + w] = r
+            if r < n_rows:
+                lo, hi = int(m.indptr[r]), int(m.indptr[r + 1])
+                k = hi - lo
+                cols[off:off + k] = m.indices[lo:hi]
+                vals[off:off + k] = m.data[lo:hi]
+            off += w
+    return SELL(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(rows),
+                widths, n_rows, n_cols, rp, slice_height)
+
+
+def sell_to_dense(m: SELL) -> np.ndarray:
+    cols = np.asarray(m.cols)
+    vals = np.asarray(m.vals)
+    rows = np.asarray(m.rows)
+    out = np.zeros((m.n_rows, m.n_cols), dtype=vals.dtype)
+    keep = (rows < m.n_rows) & (vals != 0.0)
+    np.add.at(out, (rows[keep], cols[keep]), vals[keep])
+    return out
+
+
+def hyb_core_width(row_nnz: np.ndarray, row_pad: int = 8,
+                   width_pad: int = 1) -> int:
+    """The storage-optimal ELL core width for a HYB split: minimize the
+    modeled matrix-stream words 2*rows_p*w (core cols+vals) +
+    3*spill(w) (tail row+col+val), over the distinct row widths.
+    Deterministic (ties break to the smaller width)."""
+    n_rows = row_nnz.shape[0]
+    rp = pad_to(max(n_rows, 1), row_pad)
+    best_w, best_cost = 1, None
+    for w in sorted({1, *(int(k) for k in np.unique(row_nnz) if k > 0)}):
+        spill = int(np.maximum(row_nnz - w, 0).sum())
+        cost = 2 * rp * w + 3 * spill
+        if best_cost is None or cost < best_cost:
+            best_w, best_cost = w, cost
+    return pad_to(best_w, width_pad)
+
+
+def hyb_from_csr(
+    m: CSR,
+    core_width: int | None = None,
+    row_pad: int = 8,
+    width_pad: int = 1,
+    tail_pad: int = 8,
+    dtype=np.float32,
+) -> HYB:
+    """Pack a CSR matrix into HYB: an ELL core of ``core_width`` (default:
+    the storage-optimal width, :func:`hyb_core_width`) plus a COO tail of
+    every entry past the core in its row.  The tail is padded to a multiple
+    of ``tail_pad`` with row=0/col=0/val=0.0 entries (scatter-adds of exact
+    zeros)."""
+    n_rows, n_cols = m.shape
+    row_nnz = m.row_nnz()
+    if core_width is None:
+        core_width = hyb_core_width(row_nnz, row_pad=row_pad,
+                                    width_pad=width_pad)
+    w = max(1, pad_to(int(core_width), width_pad))
+    rp = pad_to(max(n_rows, 1), row_pad)
+
+    cols = np.zeros((rp, w), dtype=np.int32)
+    vals = np.zeros((rp, w), dtype=dtype)
+    t_rows, t_cols, t_vals = [], [], []
+    for r in range(n_rows):
+        s, e = int(m.indptr[r]), int(m.indptr[r + 1])
+        k = min(e - s, w)
+        cols[r, :k] = m.indices[s:s + k]
+        vals[r, :k] = m.data[s:s + k]
+        for p in range(s + k, e):
+            t_rows.append(r)
+            t_cols.append(int(m.indices[p]))
+            t_vals.append(m.data[p])
+    nt = pad_to(max(len(t_rows), 1), tail_pad) if t_rows else 0
+    tr = np.zeros(nt, dtype=np.int32)
+    tc = np.zeros(nt, dtype=np.int32)
+    tv = np.zeros(nt, dtype=dtype)
+    tr[: len(t_rows)] = t_rows
+    tc[: len(t_cols)] = t_cols
+    tv[: len(t_vals)] = t_vals
+    return HYB(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(tr),
+               jnp.asarray(tc), jnp.asarray(tv), n_rows, n_cols)
+
+
+def hyb_to_dense(m: HYB) -> np.ndarray:
+    cols = np.asarray(m.cols)
+    vals = np.asarray(m.vals)
+    out = np.zeros((m.n_rows, m.n_cols), dtype=vals.dtype)
+    for r in range(m.n_rows):
+        for k in range(m.core_width):
+            if vals[r, k] != 0.0:
+                out[r, cols[r, k]] += vals[r, k]
+    tr = np.asarray(m.tail_rows)
+    tc = np.asarray(m.tail_cols)
+    tv = np.asarray(m.tail_vals)
+    keep = tv != 0.0
+    np.add.at(out, (tr[keep], tc[keep]), tv[keep])
     return out
 
 

@@ -107,6 +107,13 @@ class SolveSpec:
                a (corrupted) value buffer per call without retracing --
                the fault-injection surface (``repro.ft.inject``).  Default
                False (values stay baked in; marginally faster dispatch).
+    format     operator storage format the plan streams from: None/'auto'
+               (the engine's per-matrix autotuned decision -- see
+               ``kernels.autotune.choose_format``) or an explicit 'ell' /
+               'sell' / 'hyb' / 'bcsr' / 'stencil'; canonicalized to the
+               resolved name.  Pinned modes reject conflicting requests:
+               distributed and injectable plans are 'ell', stencil engines
+               are 'stencil'.
     """
 
     method: str = "pcg"
@@ -120,6 +127,7 @@ class SolveSpec:
     reorder: str | None = None
     guard: bool = True
     injectable: bool = False
+    format: str | None = None
 
 
 def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
@@ -185,10 +193,27 @@ def canonicalize(spec: SolveSpec, engine) -> SolveSpec:
         raise ValueError(
             f"injectable must be True or False, got {spec.injectable!r}")
     guard = bool(spec.guard) and sdef.guarded
+    # None and 'auto' defer to the engine-level format knob, which (when
+    # itself 'auto') resolved to the per-matrix autotuned decision at
+    # engine build; pinned modes (dist/injectable/stencil) force theirs
+    fmt_knob = spec.format
+    if fmt_knob in (None, "auto"):
+        fmt_knob = getattr(engine, "format", "auto")
+        # an engine-level format knob yields to modes that pin the format
+        # (injectable plans are ELL by construction); only a spec-level
+        # explicit request conflicts loudly
+        if fmt_knob == "auto" or spec.injectable:
+            fmt_knob = None
+    fmt = registry.resolve_format(
+        sdef, local, fmt_knob,
+        engine_choice=getattr(engine, "format_choice", "ell"),
+        stencil=getattr(engine, "stencil", None) is not None,
+        injectable=bool(spec.injectable),
+    )
     return replace(spec, method=sdef.name, precond=pdef.name, iters=iters,
                    tol=tol, max_iters=max_iters, fused=fused, layout=layout,
                    reorder=engine.reorder, guard=guard,
-                   injectable=bool(spec.injectable))
+                   injectable=bool(spec.injectable), format=fmt)
 
 
 def chunk_spec(spec: SolveSpec, chunk: int, batch: int | None = None,

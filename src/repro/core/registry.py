@@ -41,6 +41,7 @@ __all__ = [
     "precond_names",
     "resolve_fused",
     "resolve_layout",
+    "resolve_format",
     "substrate_kind",
     "effective_precond",
 ]
@@ -49,6 +50,12 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # definitions
 # ---------------------------------------------------------------------------
+
+# Storage formats a solver's substrate can stream the operator from.  The
+# substrate-phrased methods are format-oblivious (they consume matvec /
+# fold_matvec_dot closures), so every registered solver declares the full
+# set; a method hard-wired to one layout would restrict this.
+_ALL_FORMATS = frozenset({"ell", "sell", "hyb", "bcsr", "stencil"})
 
 
 @dataclass
@@ -119,6 +126,7 @@ class SolverDef:
     dist_precond_override: dict = field(default_factory=dict)
     comm_overlap: bool = False
     guarded: bool = False
+    formats: frozenset = _ALL_FORMATS
     aliases: tuple = ()
 
 
@@ -271,6 +279,55 @@ def resolve_layout(sdef: SolverDef, pdef: PrecondDef, local: bool, knob,
             f"solver {sdef.name!r} does not support halo communication "
             f"plans with preconditioner {pdef.name!r}")
     return knob
+
+
+def resolve_format(sdef: SolverDef, local: bool, knob,
+                   engine_choice: str = "ell", *,
+                   stencil: bool = False, injectable: bool = False) -> str:
+    """Resolve the storage-format knob (None/'auto' | concrete name) to the
+    format a plan streams the operator from.
+
+    'auto' takes the engine's autotuned per-matrix decision
+    (``engine_choice``, from ``kernels.autotune.choose_format``), except in
+    modes that pin the layout: a stencil engine has no stored nonzeros
+    ('stencil' is the only format), injectable plans carry the values as an
+    ELL-shaped runtime operand, and distributed lowering shards/remaps the
+    padded ELL arrays -- all three force their format and reject a
+    conflicting explicit request.
+    """
+    if knob not in (None, "auto") and knob not in _ALL_FORMATS:
+        raise ValueError(
+            f"format must be 'auto' or one of "
+            f"{', '.join(sorted(_ALL_FORMATS))}, got {knob!r}")
+    if stencil:
+        if knob not in (None, "auto", "stencil"):
+            raise ValueError(
+                f"format={knob!r} conflicts with a matrix-free stencil "
+                "engine (no stored nonzeros to re-lay-out)")
+        if injectable:
+            raise ValueError(
+                "injectable=True needs stored matrix values; a stencil "
+                "operator generates its coefficients in-kernel")
+        return "stencil"
+    if knob == "stencil":
+        raise ValueError("format='stencil' needs a stencil operator engine")
+    if injectable:
+        if knob not in (None, "auto", "ell"):
+            raise ValueError(
+                f"format={knob!r} conflicts with injectable=True "
+                "(injected values are an ELL-shaped runtime operand)")
+        return "ell"
+    if not local:
+        if knob not in (None, "auto", "ell"):
+            raise ValueError(
+                f"format={knob!r} is not supported in distributed mode "
+                "(sharding and halo remap are phrased over padded ELL)")
+        return "ell"
+    fmt = engine_choice if knob in (None, "auto") else knob
+    if fmt not in sdef.formats:
+        raise ValueError(
+            f"solver {sdef.name!r} does not support format {fmt!r}")
+    return fmt
 
 
 def substrate_kind(sdef: SolverDef, pdef: PrecondDef, local: bool,

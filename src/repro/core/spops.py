@@ -10,16 +10,24 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .formats import ELL, BCSR
+from .formats import ELL, BCSR, HYB, SELL
 from .levels import LevelSchedule
 
 __all__ = [
     "spmv_ell",
     "spmv_ell_padded",
     "spmm_ell_padded",
+    "spmv_sell_flat",
+    "spmm_sell_flat",
+    "spmv_hyb_padded",
+    "spmm_hyb_padded",
     "spmv_bcsr",
+    "spmv_bcsr_padded",
+    "spmm_bcsr_padded",
     "sptrsv_ell",
+    "sptrsv_ell_unrolled",
     "extract_diag_ell",
 ]
 
@@ -43,6 +51,38 @@ def spmm_ell_padded(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp
     return jnp.sum(vals * x[:, cols], axis=-1)
 
 
+def spmv_sell_flat(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
+    """Padded-row SpMV over sliced-ELL flat storage: one gather of x per
+    stored entry, then a segment-sum by row id.  Returns (rows_padded,)
+    (padded rows reduce only their own 0.0 padding entries)."""
+    return jax.ops.segment_sum(
+        m.vals * x[m.cols], m.rows, num_segments=m.rows_padded
+    )
+
+
+def spmm_sell_flat(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
+    """Multi-RHS sliced-ELL SpMV in the solvers' stacked layout: x is
+    (k, n_pad), returns (k, rows_padded).  One matrix stream serves all k
+    (the segment reduction runs over the leading entry axis)."""
+    contrib = m.vals * x[:, m.cols]             # (k, n_stored)
+    return jax.ops.segment_sum(
+        contrib.T, m.rows, num_segments=m.rows_padded
+    ).T
+
+
+def spmv_hyb_padded(m: HYB, x: jnp.ndarray) -> jnp.ndarray:
+    """HYB SpMV: the regular ELL-core gather + row-sum, then a COO
+    scatter-add of the spill tail.  Returns (rows_padded,)."""
+    y = jnp.sum(m.vals * x[m.cols], axis=1)
+    return y.at[m.tail_rows].add(m.tail_vals * x[m.tail_cols])
+
+
+def spmm_hyb_padded(m: HYB, x: jnp.ndarray) -> jnp.ndarray:
+    """Multi-RHS HYB SpMV: x is (k, n_pad), returns (k, rows_padded)."""
+    y = jnp.sum(m.vals * x[:, m.cols], axis=-1)
+    return y.at[:, m.tail_rows].add(m.tail_vals * x[:, m.tail_cols])
+
+
 def spmv_bcsr(m: BCSR, x: jnp.ndarray) -> jnp.ndarray:
     """y = A @ x for BCSR A (dense (bm, bn) blocks -> MXU-shaped einsum)."""
     nbc = (m.n_cols + m.bn - 1) // m.bn
@@ -51,6 +91,35 @@ def spmv_bcsr(m: BCSR, x: jnp.ndarray) -> jnp.ndarray:
     xg = xb[m.block_cols]                      # (nbr, width, bn)
     y = jnp.einsum("iwmn,iwn->im", m.blocks, xg)  # (nbr, bm)
     return y.reshape(-1)[: m.n_rows]
+
+
+def spmv_bcsr_padded(m: BCSR, x: jnp.ndarray, n_pad: int) -> jnp.ndarray:
+    """BCSR SpMV on padded engine vectors: x is (n_pad,), returns (n_pad,).
+    x re-embeds into the (nbc*bn,) block layout, blocks apply as dense
+    (bm, bn) fmas, and the (nbr*bm,) result re-embeds into n_pad."""
+    nbc = (m.n_cols + m.bn - 1) // m.bn
+    x_blk = jnp.zeros((nbc * m.bn,), x.dtype).at[: m.n_cols].set(x[: m.n_cols])
+    xg = x_blk.reshape(nbc, m.bn)[m.block_cols]      # (nbr, width, bn)
+    y = jnp.einsum("iwmn,iwn->im", m.blocks, xg).reshape(-1)
+    nbr_rows = y.shape[0]
+    if nbr_rows >= n_pad:
+        return y[:n_pad]
+    return jnp.zeros((n_pad,), y.dtype).at[:nbr_rows].set(y)
+
+
+def spmm_bcsr_padded(m: BCSR, x: jnp.ndarray, n_pad: int) -> jnp.ndarray:
+    """Multi-RHS BCSR SpMV: x is (k, n_pad), returns (k, n_pad) -- one
+    block stream for all k (the einsum carries the batch axis)."""
+    nbc = (m.n_cols + m.bn - 1) // m.bn
+    k = x.shape[0]
+    x_blk = jnp.zeros((k, nbc * m.bn), x.dtype).at[:, : m.n_cols].set(
+        x[:, : m.n_cols])
+    xg = x_blk.reshape(k, nbc, m.bn)[:, m.block_cols]   # (k, nbr, width, bn)
+    y = jnp.einsum("iwmn,kiwn->kim", m.blocks, xg).reshape(k, -1)
+    nbr_rows = y.shape[1]
+    if nbr_rows >= n_pad:
+        return y[:, :n_pad]
+    return jnp.zeros((k, n_pad), y.dtype).at[:, :nbr_rows].set(y)
 
 
 def extract_diag_ell(m: ELL) -> jnp.ndarray:
@@ -94,4 +163,38 @@ def sptrsv_ell(m: ELL, sched: LevelSchedule, b: jnp.ndarray) -> jnp.ndarray:
         return x, None
 
     x, _ = jax.lax.scan(level_step, x0, sched.rows)
+    return x[:n]
+
+
+def sptrsv_ell_unrolled(m: ELL, sched: LevelSchedule, b: jnp.ndarray) -> jnp.ndarray:
+    """The trace-time-unrolled wavefront baseline of :func:`sptrsv_ell`:
+    one Python-loop slice of the identical per-level arithmetic per level,
+    so the traced graph grows LINEARLY with the level count.
+
+    This exists only to benchmark what ``lax.scan`` over the padded level
+    structure buys: ``plan()``/trace wall time at thousands of levels
+    (``benchmarks/bench_sptrsv.py`` records scan-vs-unrolled growth under
+    the regression gate).  Under ``jax.jit`` results are bitwise identical
+    to the scan -- same level body, same order; eager execution can differ
+    by an ulp (op-by-op dispatch fuses the level body differently than the
+    compiled scan)."""
+    n = m.n_rows
+    if sched.n != n:
+        raise ValueError("schedule/matrix size mismatch")
+    diag = extract_diag_ell(m)
+    diag = jnp.where(diag == 0, 1.0, diag)
+    b_pad = jnp.zeros((m.rows_padded,), b.dtype).at[:n].set(b)
+    x = jnp.zeros((n + 1,), b.dtype)
+    cols, vals = m.cols, m.vals
+
+    for level_rows in np.asarray(sched.rows):
+        lrows = jnp.minimum(level_rows, m.rows_padded - 1)
+        c = cols[lrows]
+        v = vals[lrows]
+        off_mask = c != lrows[:, None]
+        contrib = jnp.sum(jnp.where(off_mask, v, 0.0) * x[jnp.minimum(c, n)],
+                          axis=1)
+        rhs = b_pad[lrows] - contrib
+        xr = rhs / diag[jnp.minimum(level_rows, n - 1)] if n else rhs
+        x = x.at[level_rows].set(xr, mode="drop")
     return x[:n]

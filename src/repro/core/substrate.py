@@ -96,6 +96,7 @@ __all__ = [
     "fused_ic0_local_substrate",
     "fused_shard_substrate",
     "fused_shard_ic0_substrate",
+    "format_stream_ops",
     "modeled_vector_traffic",
     "modeled_ic0_traffic",
 ]
@@ -221,16 +222,92 @@ def _ell_stream_ops(cols, vals):
     return matvec, fold_matvec_dot
 
 
-def fused_local_substrate(cols, vals, dinv=None) -> SolverSubstrate:
+def _fold_from_matvec(matvec):
+    """Fused jnp composition of the p-fold around an arbitrary matvec:
+    p' = z + beta*p at the top of the stream, then one matrix pass and the
+    in-stream denominator.  This is the format-generic fold -- gather-time
+    kernel folds for the compact formats are a TPU follow-up (ROADMAP)."""
+
+    def fold_matvec_dot(z, p, beta):
+        pn = z + beta * p
+        y = matvec(pn)
+        return pn, y, _dot(pn, y)
+
+    return fold_matvec_dot
+
+
+def format_stream_ops(fmt_obj, fmt: str, n_pad: int):
+    """The (matvec, fold_matvec_dot) pair for a non-ELL storage format.
+
+    ``fmt_obj`` is the built format container (SELL / HYB / BCSR from
+    ``core.formats``, or a matrix-free ``core.stencil.Stencil``); vectors
+    are padded solver-layout ((n_pad,) or (k, n_pad)).  Each format's fold
+    is the jnp composition around its own matvec, so fused and reference
+    substrates built from the same pair are bitwise identical per format.
+    BCSR routes through the Pallas MXU kernel (``ops.bcsr_spmm``) when
+    kernels are active.
+    """
+    if fmt == "stencil":
+        from .stencil import stencil_matvec
+
+        def matvec(v):
+            return stencil_matvec(fmt_obj, v, n_pad)
+
+    elif fmt == "sell":
+
+        def matvec(v):
+            if v.ndim == 2:
+                return spops.spmm_sell_flat(fmt_obj, v)
+            return spops.spmv_sell_flat(fmt_obj, v)
+
+    elif fmt == "hyb":
+
+        def matvec(v):
+            if v.ndim == 2:
+                return spops.spmm_hyb_padded(fmt_obj, v)
+            return spops.spmv_hyb_padded(fmt_obj, v)
+
+    elif fmt == "bcsr":
+        nbc = (fmt_obj.n_cols + fmt_obj.bn - 1) // fmt_obj.bn
+
+        def matvec(v):
+            if ops.kernels_active():
+                # kernel layout: x is (nbc*bn, k); embed the padded solver
+                # vector into the block row space and extract back to n_pad
+                vk = v.T if v.ndim == 2 else v[:, None]
+                x_blk = jnp.zeros((nbc * fmt_obj.bn, vk.shape[1]), vk.dtype)
+                x_blk = x_blk.at[: fmt_obj.n_cols].set(vk[: fmt_obj.n_cols])
+                y = ops.bcsr_spmm(fmt_obj.block_cols, fmt_obj.blocks, x_blk,
+                                  nbc=nbc)
+                nbr_rows = y.shape[0]
+                if nbr_rows >= n_pad:
+                    y = y[:n_pad]
+                else:
+                    y = jnp.zeros((n_pad, vk.shape[1]), y.dtype).at[:nbr_rows].set(y)
+                return y.T if v.ndim == 2 else y[:, 0]
+            if v.ndim == 2:
+                return spops.spmm_bcsr_padded(fmt_obj, v, n_pad)
+            return spops.spmv_bcsr_padded(fmt_obj, v, n_pad)
+
+    else:
+        raise ValueError(f"unknown stream format {fmt!r}")
+
+    return matvec, _fold_from_matvec(matvec)
+
+
+def fused_local_substrate(cols, vals, dinv=None, stream_ops=None) -> SolverSubstrate:
     """Fused kernels over a local (single-device) padded-ELL operator.
 
     ``cols``/``vals``: (rows_p, w) square padded ELL; ``dinv``: (rows_p,)
     Jacobi inverse diagonal, or None for an identity preconditioner.
     Vectors are (rows_p,) or batched (k, rows_p) in solver layout; the
     batched kernel calls transpose to the (n, k) kernel layout only when
-    the Pallas path is active.
+    the Pallas path is active.  ``stream_ops`` overrides the matrix-stream
+    pair with a non-ELL format's (see :func:`format_stream_ops`); the
+    vector-side fusions (``cg_update``) are format-independent.
     """
-    matvec, fold_matvec_dot = _ell_stream_ops(cols, vals)
+    matvec, fold_matvec_dot = (stream_ops if stream_ops is not None
+                               else _ell_stream_ops(cols, vals))
 
     def psolve(r):
         return r * dinv if dinv is not None else r
@@ -245,7 +322,7 @@ def fused_local_substrate(cols, vals, dinv=None) -> SolverSubstrate:
 
 
 def fused_ic0_local_substrate(cols, vals, factors, n: int,
-                              n_pad: int) -> SolverSubstrate:
+                              n_pad: int, stream_ops=None) -> SolverSubstrate:
     """Local fused substrate for ``precond="block_ic0"``.
 
     ``cols``/``vals``: the engine's (n_pad, w) padded ELL of A; ``factors``:
@@ -260,7 +337,8 @@ def fused_ic0_local_substrate(cols, vals, factors, n: int,
     """
     from .precond import make_fused_ic0_apply
 
-    matvec, fold_matvec_dot = _ell_stream_ops(cols, vals)
+    matvec, fold_matvec_dot = (stream_ops if stream_ops is not None
+                               else _ell_stream_ops(cols, vals))
     # (n_pad,) residual -> (z (n_pad,), rz scalar), fully fused
     _apply_dot = make_fused_ic0_apply(factors, n, n_pad, vals.dtype)
 

@@ -36,6 +36,8 @@ import numpy as np
 __all__ = [
     "cache_path", "clear_memo", "make_key", "lookup", "record",
     "tile_candidates", "autotune",
+    "row_stats", "modeled_format_words", "choose_format",
+    "record_format", "lookup_format",
 ]
 
 _ENV = "REPRO_AUTOTUNE_CACHE"
@@ -106,7 +108,11 @@ def make_key(op: str, shape: Iterable[int], dtype, backend: str | None = None) -
 def lookup(op: str, shape: Iterable[int], dtype, backend: str | None = None) -> dict | None:
     """Cached tile dict for this op/shape/dtype/backend, or None."""
     ent = _load().get(make_key(op, shape, dtype, backend))
-    return dict(ent["tiles"]) if ent else None
+    if not isinstance(ent, dict) or "tiles" not in ent:
+        # Format-decision entries (and hand-edited junk) share the file but
+        # carry no tile dict; tile readers must skip them, not KeyError.
+        return None
+    return dict(ent["tiles"])
 
 
 class _cache_lock:
@@ -198,3 +204,146 @@ def autotune(
     if best_tiles is not None:
         record(op, shape, dtype, best_tiles, best_us, backend=backend)
     return best_tiles
+
+
+# ---------------------------------------------------------------------------
+# Per-matrix storage-format autotuner.
+#
+# The engine stores operators in one of a small portfolio of formats (padded
+# ELL, sliced-ELL, HYB; BCSR on explicit request).  The right choice is a
+# property of the *row-length distribution*: uniform rows pad away nothing in
+# ELL, while one power-law hub row inflates every other row to its width.
+# ``choose_format`` ranks the portfolio by a modeled per-matvec matrix-stream
+# word count -- cheap, deterministic, and host-side -- and the decision is
+# persisted in the same JSON cache as the tile winners (op="format", shape
+# keyed by the row-stats fingerprint) so repeated plans skip the scan.
+# ---------------------------------------------------------------------------
+
+# Prefer ELL unless a compact format saves at least this fraction of modeled
+# matrix words.  Narrow row sums are re-associated differently by XLA, so a
+# format switch perturbs iterate rounding; the hysteresis keeps uniform-row
+# matrices (where the saving is ~0) on the bitwise-stable default.
+FORMAT_HYSTERESIS = 0.8
+
+_AUTO_FORMATS = ("ell", "sell", "hyb")
+
+
+def _pad_up(x: int, q: int) -> int:
+    return -(-max(int(x), 1) // q) * q
+
+
+def row_stats(csr) -> dict:
+    """Host-side row-length fingerprint of a CSR-like matrix (anything with
+    ``shape``, ``nnz`` and ``row_nnz()``)."""
+    rn = np.asarray(csr.row_nnz(), dtype=np.int64)
+    n_rows, n_cols = (int(s) for s in csr.shape)
+    w_max = int(rn.max()) if rn.size else 0
+    w_mean = float(rn.mean()) if rn.size else 0.0
+    std = float(rn.std()) if rn.size else 0.0
+    return {
+        "n_rows": n_rows,
+        "n_cols": n_cols,
+        "nnz": int(csr.nnz),
+        "w_max": w_max,
+        "w_mean": round(w_mean, 3),
+        "row_cv": round(std / w_mean, 4) if w_mean else 0.0,
+    }
+
+
+def modeled_format_words(csr, slice_height: int = 8, row_pad: int = 8) -> dict:
+    """Modeled matrix-stream words per matvec for each auto-eligible format.
+
+    Counts (col, val) pairs actually streamed from memory:
+
+    - ``ell``:  2 * rows_padded * w_max          (every row padded to w_max)
+    - ``sell``: 2 * sum_slices(slice_h * w_slice)  (per-slice widths; the
+      reference implementation also materializes a row-id per entry, but a
+      real SELL kernel derives row ids from the slice structure, so the
+      model charges the entries only)
+    - ``hyb``:  2 * rows_padded * w_core + 3 * tail  (regular core plus a
+      (row, col, val) triple per spilled entry)
+
+    BCSR is excluded from auto selection (block structure is an explicit
+    caller assertion), so it is not modeled here.
+    """
+    rn = np.asarray(csr.row_nnz(), dtype=np.int64)
+    n_rows = int(csr.shape[0])
+    rp = _pad_up(_pad_up(n_rows, row_pad), slice_height)
+    w_max = int(rn.max()) if rn.size else 0
+
+    # sliced-ELL: per-slice max width over the padded row range
+    rn_pad = np.zeros((rp,), dtype=np.int64)
+    rn_pad[:n_rows] = rn
+    widths = rn_pad.reshape(-1, slice_height).max(axis=1)
+    e_sell = int(np.maximum(widths, 1).sum()) * slice_height
+
+    # HYB: storage-optimal core width (same objective as formats.hyb_core_width)
+    best_w, best_words = max(w_max, 1), None
+    for w in sorted(set(int(v) for v in rn) | {1}):
+        spill = int(np.maximum(rn - w, 0).sum())
+        words = 2 * rp * w + 3 * spill
+        if best_words is None or words < best_words:
+            best_w, best_words = w, words
+
+    return {
+        "ell": 2 * rp * max(w_max, 1),
+        "sell": 2 * e_sell,
+        "hyb": int(best_words if best_words is not None else 2 * rp),
+        "hyb_core_width": best_w,
+    }
+
+
+def _format_key(stats: dict, dtype) -> str:
+    shape = (stats["n_rows"], stats["n_cols"], stats["nnz"], stats["w_max"])
+    return make_key("format", shape, dtype, backend="host")
+
+
+def lookup_format(csr, dtype=np.float32) -> str | None:
+    """Cached format decision for this matrix fingerprint, or None."""
+    ent = _load().get(_format_key(row_stats(csr), dtype))
+    fmt = ent.get("format") if isinstance(ent, dict) else None
+    return fmt if fmt in _AUTO_FORMATS else None
+
+
+def record_format(csr, fmt: str, words: dict, dtype=np.float32) -> None:
+    """Persist one format decision (same locked read-merge-replace as tile
+    records; format entries carry no ``tiles`` key and tile readers skip
+    them)."""
+    global _memo, _memo_path
+    path = cache_path()
+    stats = row_stats(csr)
+    with _cache_lock(path):
+        cache = dict(_load())
+        cache.update(_read_disk(path))
+        cache[_format_key(stats, dtype)] = {
+            "format": fmt,
+            "words": {k: int(v) for k, v in words.items()},
+            "stats": stats,
+        }
+        _memo, _memo_path = cache, path
+        _save(cache)
+
+
+def choose_format(csr, dtype=np.float32, slice_height: int = 8,
+                  row_pad: int = 8, use_cache: bool = True) -> tuple[str, dict]:
+    """Pick the storage format for a matrix by modeled matrix-stream words.
+
+    Returns ``(format, words)`` where ``words`` is the full model dict.
+    Deterministic: same matrix fingerprint -> same decision.  A compact
+    format wins only when it saves at least ``1 - FORMAT_HYSTERESIS`` of
+    the ELL words; ties prefer sell (regular access) over hyb.
+    """
+    words = modeled_format_words(csr, slice_height=slice_height, row_pad=row_pad)
+    if use_cache:
+        cached = lookup_format(csr, dtype)
+        if cached is not None:
+            return cached, words
+    fmt = "ell"
+    cutoff = FORMAT_HYSTERESIS * words["ell"]
+    best = min(("sell", "hyb"), key=lambda f: (words[f], f != "sell"))
+    if words[best] < cutoff:
+        fmt = best
+    if use_cache:
+        record_format(csr, fmt, {k: v for k, v in words.items()
+                                 if k in _AUTO_FORMATS}, dtype)
+    return fmt, words

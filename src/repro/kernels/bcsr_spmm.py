@@ -41,17 +41,28 @@ def _kernel(block_cols_ref, blocks_ref, x_ref, y_ref):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "nbc"))
 def bcsr_spmm(
     block_cols: jnp.ndarray,
     blocks: jnp.ndarray,
     x: jnp.ndarray,
     interpret: bool = False,
+    nbc: int | None = None,
 ) -> jnp.ndarray:
-    """y = A @ x.  blocks: (nbr, w, bm, bn); x: (nbc*bn, R) -> y: (nbr*bm, R)."""
+    """y = A @ x.  blocks: (nbr, w, bm, bn); x: (nbc*bn, R) -> y: (nbr*bm, R).
+
+    ``nbc`` (optional, static) asserts the block-column count: x must be
+    exactly (nbc*bn, R), not merely a multiple of bn.  Without it an
+    undersized x whose length happens to divide bn would let a prefetch
+    index map read out of bounds; ``block_cols`` itself is traced, so this
+    static operand is the only checkable channel under jit."""
     nbr, w, bm, bn = blocks.shape
     if x.ndim != 2 or x.shape[0] % bn:
         raise ValueError(f"x shape {x.shape} incompatible with bn={bn}")
+    if nbc is not None and x.shape[0] != nbc * bn:
+        raise ValueError(
+            f"x shape {x.shape} incompatible with nbc={nbc}, bn={bn}: "
+            f"expected ({nbc * bn}, R)")
     r = x.shape[1]
     grid = (nbr, w)
     y = pl.pallas_call(

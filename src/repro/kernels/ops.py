@@ -164,10 +164,17 @@ def ell_spmm_pfold_dot(cols, vals, z, p, beta,
     return ref.ell_spmm_pfold_dot_ref(cols, vals, z, p, beta)
 
 
-def bcsr_spmm(block_cols, blocks, x):
+def bcsr_spmm(block_cols, blocks, x, nbc: int | None = None):
+    """Block-sparse x dense multi-RHS (the MXU path); ``nbc`` (static)
+    asserts x is exactly (nbc*bn, R) -- see ``bcsr_spmm.bcsr_spmm``."""
     use, interp = _dispatch()
     if use:
-        return _bcsr_spmm_pallas(block_cols, blocks, x, interpret=interp)
+        return _bcsr_spmm_pallas(block_cols, blocks, x, interpret=interp,
+                                 nbc=nbc)
+    if nbc is not None and x.shape[0] != nbc * blocks.shape[3]:
+        raise ValueError(
+            f"x shape {x.shape} incompatible with nbc={nbc}, "
+            f"bn={blocks.shape[3]}: expected ({nbc * blocks.shape[3]}, R)")
     return ref.bcsr_spmm_ref(block_cols, blocks, x)
 
 

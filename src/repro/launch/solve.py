@@ -12,6 +12,16 @@ Add --mesh-shape 2x2 (any grid whose product <= device count) to run the
 distributed AzulEngine; on the CPU container use
 XLA_FLAGS=--xla_force_host_platform_device_count=N.
 
+Storage formats and matrix-free operators:
+
+    # per-matrix format autotuner (skewed rows -> HYB beats padded ELL):
+    PYTHONPATH=src python -m repro.launch.solve --matrix skew_1k \
+        --method pcg_tol --tol 1e-8 --format auto
+
+    # million-row matrix-free solve -- no assembled CSR is ever built:
+    PYTHONPATH=src python -m repro.launch.solve --matrix stencil:lap2d_1024 \
+        --method pcg_tol --tol 1e-6 --precond jacobi
+
 Fault-tolerance demo flags:
 
     # inject a NaN into the streamed values at iteration 15 and let the
@@ -49,6 +59,11 @@ def main(argv=None):
                     help="iteration cap for pcg_tol (default: --iters)")
     ap.add_argument("--fused", default="auto", choices=("auto", "on", "off"),
                     help="fused-substrate knob (auto = on where supported)")
+    ap.add_argument("--format", default="auto", dest="fmt",
+                    choices=("auto", "ell", "sell", "hyb", "bcsr"),
+                    help="operator storage format (auto = per-matrix "
+                         "autotuner; local mode only -- distributed plans "
+                         "stream padded ELL)")
     ap.add_argument("--mode", default="2d", choices=("1d", "2d"))
     ap.add_argument("--mesh-shape", default="",
                     help="e.g. 2x2 -- empty = single device")
@@ -90,10 +105,18 @@ def main(argv=None):
     from ..core.plan import SolveSpec
     from ..data.matrices import suite
 
-    mats = suite("small")
-    if args.matrix not in mats:
-        mats.update(suite("large"))
-    m = mats[args.matrix]
+    if args.matrix.startswith("stencil:"):
+        # matrix-free operator, e.g. stencil:lap2d_1024 or stencil:lap3d_64
+        # -- no assembled CSR, O(n) memory, so n can reach millions
+        from ..core.stencil import lap2d_stencil, lap3d_stencil
+        kind, _, size = args.matrix[len("stencil:"):].partition("_")
+        builder = {"lap2d": lap2d_stencil, "lap3d": lap3d_stencil}[kind]
+        m = builder(int(size))
+    else:
+        mats = suite("small")
+        if args.matrix not in mats:
+            mats.update(suite("large"))
+        m = mats[args.matrix]
 
     mesh = None
     if args.mesh_shape:
@@ -107,10 +130,16 @@ def main(argv=None):
     fused = {"auto": "auto", "on": True, "off": False}[args.fused]
     eng = AzulEngine(m, mesh=mesh, mode=args.mode, precond=args.precond,
                      balance=args.balance, dtype=np.float64, fused=fused,
-                     layout=args.layout, reorder=args.reorder)
-    import scipy.sparse as sp
-    a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
-    b = a @ x_true
+                     layout=args.layout, reorder=args.reorder,
+                     format=args.fmt)
+    if hasattr(m, "indptr"):
+        import scipy.sparse as sp
+        a = sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+        b = a @ x_true
+        nnz = m.nnz
+    else:
+        b = np.asarray(eng.spmv(x_true))   # matrix-free operators have no CSR
+        nnz = m.nnz_equiv
 
     spec = SolveSpec(method=args.method, iters=args.iters,
                      tol=args.tol, max_iters=args.max_iters,
@@ -132,7 +161,7 @@ def main(argv=None):
         x = rep.x
         rel = float(np.linalg.norm(x - x_true) / np.linalg.norm(x_true))
         out = {
-            "matrix": args.matrix, "n": m.shape[0], "nnz": m.nnz,
+            "matrix": args.matrix, "n": m.shape[0], "nnz": nnz,
             "method": args.method, "precond": args.precond,
             "mode": eng.mode, "injected": args.inject,
             "injected_at": args.inject_at,
@@ -150,11 +179,12 @@ def main(argv=None):
     x, norms = plan(b)
     rel = float(np.linalg.norm(x - x_true) / np.linalg.norm(x_true))
     out = {
-        "matrix": args.matrix, "n": m.shape[0], "nnz": m.nnz,
+        "matrix": args.matrix, "n": m.shape[0], "nnz": nnz,
         "method": args.method, "precond": args.precond,
         "iters": args.iters, "mode": eng.mode,
         "substrate": plan.info["substrate"],
         "fused": bool(plan.spec.fused),
+        "format": plan.info["format"],
         "layout": plan.info["layout"],
         "reorder": plan.info["reorder"],
         "final_residual": float(norms[-1] if norms.ndim == 1 else norms[-1, 0]),

@@ -64,7 +64,7 @@ SIGNATURES = {
     "core.AzulEngine.__init__": (
         "self", "a", "mesh", "mode", "row_axes", "col_axes", "precond",
         "balance", "dtype", "row_pad", "width_pad", "fused", "layout",
-        "reorder",
+        "reorder", "format",
     ),
     "core.AzulEngine.plan": ("self", "spec", "kwargs"),
     "core.AzulEngine.solve": (                    # deprecated shim, frozen
@@ -77,7 +77,7 @@ SIGNATURES = {
     "core.AzulEngine.from_device_vec": ("self", "v"),
     "core.SolveSpec.__init__": (
         "self", "method", "precond", "iters", "tol", "max_iters", "batch",
-        "fused", "layout", "reorder", "guard", "injectable",
+        "fused", "layout", "reorder", "guard", "injectable", "format",
     ),
     "core.SolvePlan.__call__": ("self", "b", "x0", "vals"),
     "core.PlanCache.get": ("self", "spec", "build", "env"),

@@ -22,7 +22,7 @@ CURRENT = os.path.join(REPO, "BENCH_pcg.json")
 
 def _payload():
     return {
-        "schema": "bench_pcg/v7",
+        "schema": "bench_pcg/v8",
         "fused_vs_unfused": [{
             "matrix": "m", "us_per_iter_fused": 100.0,
             "us_per_iter_unfused": 120.0, "trace_rel_maxdiff": 0.0,
@@ -83,6 +83,26 @@ def _payload():
             "span_kinds_present": True,
             "span_counts": {"plan_build": 1, "solve": 12},
             "metric_families": 20,
+        }],
+        "formats": [{
+            "kind": "format_autotune", "matrix": "m", "n": 1000, "nnz": 9000,
+            "chosen_format": "hyb",
+            "modeled_words": {"ell": 800000, "sell": 60000, "hyb": 23000,
+                              "hyb_core_width": 6},
+            "modeled_reduction_vs_ell": 34.0,
+            "beats_ell_modeled": True, "beats_ell_wall": True,
+            "wall_gated": True, "wall_speedup_vs_ell": 2.0,
+            "iters_auto": 19, "iters_ell": 19, "iters_match": True,
+            "x_vs_ell_maxdiff": 0.0, "fused_matches_reference": True,
+            "us_per_iter_auto": 300.0, "us_per_iter_ell": 650.0,
+        }, {
+            "kind": "plan_scaling", "matrix": "bidiag_1024",
+            "points": [
+                {"levels": 128, "plan_s_scan": 0.07, "plan_s_unrolled": 1.7},
+                {"levels": 1024, "plan_s_scan": 0.04, "plan_s_unrolled": 12.6},
+            ],
+            "growth_scan": 0.55, "growth_unrolled": 7.4,
+            "scan_sublinear_vs_unrolled": True,
         }],
     }
 
@@ -291,18 +311,71 @@ def test_obs_missing_family_fails():
     assert any("required_families_present" in f for f in g.failures)
 
 
+def test_format_choice_drift_fails():
+    """The autotuner's pick and its model are host-deterministic: a
+    different chosen format (or moved modeled words) is a real heuristic/
+    model behaviour change."""
+    cur = _payload()
+    cur["formats"][0]["chosen_format"] = "sell"
+    cur["formats"][0]["modeled_words"] = dict(
+        _payload()["formats"][0]["modeled_words"], hyb=99999)
+    g = check(cur, _payload())
+    assert any("chosen_format" in f for f in g.failures)
+    assert any("modeled_words" in f for f in g.failures)
+
+
+def test_format_stops_beating_ell_fails():
+    """The portfolio's reason to exist: on the gated skewed matrix the
+    autotuned format must keep beating padded ELL, modeled AND wall."""
+    cur = _payload()
+    cur["formats"][0]["beats_ell_modeled"] = False
+    cur["formats"][0]["beats_ell_wall"] = False
+    g = check(cur, _payload())
+    assert any("beats_ell_modeled" in f for f in g.failures)
+    assert any("beats_ell_wall" in f for f in g.failures)
+    # wall gate only applies where the baseline marked it robust
+    cur = _payload()
+    cur["formats"][0]["wall_gated"] = False
+    base = _payload()
+    base["formats"][0]["wall_gated"] = False
+    cur["formats"][0]["beats_ell_wall"] = False
+    assert not check(cur, base).failures
+
+
+def test_format_fused_divergence_fails():
+    cur = _payload()
+    cur["formats"][0]["fused_matches_reference"] = False
+    cur["formats"][0]["iters_match"] = False
+    g = check(cur, _payload())
+    assert any("fused_matches_reference" in f for f in g.failures)
+    assert any("iters_match" in f for f in g.failures)
+
+
+def test_sptrsv_scan_scaling_loss_fails():
+    """The lax.scan wavefront losing its sublinear plan-time edge over the
+    unrolled baseline is the compile-scaling regression item 4c gates."""
+    cur = _payload()
+    cur["formats"][1]["scan_sublinear_vs_unrolled"] = False
+    g = check(cur, _payload())
+    assert any("scan_sublinear_vs_unrolled" in f for f in g.failures)
+    cur = _payload()
+    cur["formats"][1]["points"][-1]["plan_s_scan"] = 0.04 * 11
+    g = check(cur, _payload(), timing_ratio=10.0)
+    assert any("plan_s_scan" in f for f in g.failures)
+
+
 def test_sections_subset_gates_only_named_sections():
     """--sections serving: a serving-only payload (the serve-smoke job)
     checks against the full baseline without tripping coverage failures
     for the sections it does not carry."""
-    cur = {"schema": "bench_pcg/v7", "serving": _payload()["serving"]}
+    cur = {"schema": "bench_pcg/v8", "serving": _payload()["serving"]}
     g = check(cur, _payload(), sections=("serving",))
     assert not g.failures and g.checks > 5
     cur["serving"][0]["retraces"] = 2
     g = check(cur, _payload(), sections=("serving",))
     assert any("retraces" in f for f in g.failures)
     # the subset gate still notices a dropped load point
-    g = check({"schema": "bench_pcg/v7", "serving": []}, _payload(),
+    g = check({"schema": "bench_pcg/v8", "serving": []}, _payload(),
               sections=("serving",))
     assert any("missing" in f for f in g.failures)
 
@@ -370,7 +443,7 @@ def test_committed_bench_passes_gate():
 
 def test_committed_baseline_is_selfconsistent():
     base = json.load(open(BASELINE))
-    assert base["schema"] == "bench_pcg/v7"
+    assert base["schema"] == "bench_pcg/v8"
     assert base["tol_solves"], "baseline must pin tolerance iteration counts"
     assert base["noc_plans"], "baseline must pin the comm-plan traffic records"
     assert base["pipelined"], "baseline must pin the pipelined-PCG record"

@@ -92,10 +92,11 @@ p3 = eng.plan(SolveSpec(method="pcg", iters=30, fused=True, tol=1e-3))
 assert p3 is p1, "tol must not recompile pcg (spec canonicalization)"
 assert len(eng.plans) == n_plans, "tol change may not add a plan"
 assert p1.spec.tol is None and p1.spec.max_iters is None
+# dist engines pin format="ell" (halo remap needs padded slots)
 assert SolveSpec(method="pcg", precond="jacobi", iters=30, fused=True,
-                 layout="dense", reorder="none") in eng.plans
+                 layout="dense", reorder="none", format="ell") in eng.plans
 assert SolveSpec(method="pcg", precond="jacobi", iters=30, fused=False,
-                 layout="dense", reorder="none") in eng.plans
+                 layout="dense", reorder="none", format="ell") in eng.plans
 x1, _ = p1(b)
 x2, _ = p2(b)
 assert np.allclose(x1, x2, atol=1e-9), "fused == unfused dist"

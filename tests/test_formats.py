@@ -7,7 +7,8 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.formats import (
     bcsr_from_csr, bcsr_to_dense, csr_from_dense, csr_from_scipy,
-    csr_to_dense, ell_from_csr, ell_to_dense, pad_to,
+    csr_to_dense, ell_from_csr, ell_to_dense, hyb_core_width, hyb_from_csr,
+    hyb_to_dense, pad_to, sell_from_csr, sell_to_dense,
 )
 
 
@@ -45,6 +46,54 @@ def test_bcsr_round_trip(n, density, seed, blk):
     d = _rand_sparse(n, n, density, seed)
     b = bcsr_from_csr(csr_from_dense(d), bm=bm, bn=bn, dtype=np.float64)
     assert np.allclose(bcsr_to_dense(b), d)
+
+
+@given(st.integers(1, 32), st.floats(0.05, 0.5), st.integers(0, 10**6),
+       st.sampled_from([2, 4, 8]), st.sampled_from([1, 8]))
+@settings(max_examples=25, deadline=None)
+def test_sell_round_trip(n, density, seed, slice_height, row_pad):
+    d = _rand_sparse(n, n, density, seed)
+    s = sell_from_csr(csr_from_dense(d), slice_height=slice_height,
+                      row_pad=row_pad, dtype=np.float64)
+    assert np.allclose(sell_to_dense(s), d)
+    assert s.rows_padded % slice_height == 0
+    assert s.rows_padded % row_pad == 0
+    # flat storage is exactly slice_height * sum(slice widths)
+    assert s.n_stored == slice_height * int(s.slice_widths.sum())
+
+
+@given(st.integers(1, 32), st.floats(0.05, 0.5), st.integers(0, 10**6),
+       st.sampled_from([None, 1, 2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_hyb_round_trip(n, density, seed, core_width):
+    d = _rand_sparse(n, n, density, seed)
+    h = hyb_from_csr(csr_from_dense(d), core_width=core_width, row_pad=8,
+                     dtype=np.float64)
+    assert np.allclose(hyb_to_dense(h), d)
+    assert h.rows_padded % 8 == 0
+
+
+def test_hyb_round_trip_skewed_hub_row():
+    """A single hub row must spill into the COO tail, not inflate the core."""
+    d = np.diag(np.full(32, 4.0))
+    d[5, :] = -0.25          # hub row: nnz = 32 while every other row has 1
+    d[5, 5] = 4.0
+    h = hyb_from_csr(csr_from_dense(d), row_pad=8, dtype=np.float64)
+    assert h.core_width < 32
+    assert h.n_tail >= 32 - h.core_width
+    assert np.allclose(hyb_to_dense(h), d)
+
+
+def test_hyb_core_width_optimal_and_deterministic():
+    # uniform rows: optimal core is the row width itself, no tail
+    uni = np.full(16, 5)
+    assert hyb_core_width(uni, row_pad=8) == 5
+    # one hub among narrow rows: spilling the hub beats padding everyone
+    skew = np.full(64, 3)
+    skew[0] = 50
+    w = hyb_core_width(skew, row_pad=8)
+    assert w == 3
+    assert hyb_core_width(skew, row_pad=8) == w   # deterministic
 
 
 def test_pad_to():

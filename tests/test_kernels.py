@@ -49,6 +49,33 @@ def test_bcsr_spmm_sweep(bm, bn, r, dtype):
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=2e-4)
 
 
+def test_bcsr_spmm_nbc_validation():
+    """The static nbc operand is the only checkable x-extent channel under
+    jit (block_cols is traced): exact match passes, any other length --
+    including bn-multiples that a modulo check would wave through -- raises."""
+    m = _mat(64, 0.1, 11)
+    b = bcsr_from_csr(m, bm=8, bn=16)
+    nbc = pad_to(64, 16) // 16
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((nbc * 16, 4)), jnp.float32)
+    y = bcsr_spmm(b.block_cols, b.blocks, x, interpret=True, nbc=nbc)
+    y_r = ref.bcsr_spmm_ref(b.block_cols, b.blocks, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), atol=2e-4)
+    # undersized x that still divides bn: caught only via nbc
+    x_short = x[:16]
+    with pytest.raises(ValueError, match="nbc"):
+        bcsr_spmm(b.block_cols, b.blocks, x_short, interpret=True, nbc=nbc)
+    # non-multiple of bn: caught with or without nbc
+    with pytest.raises(ValueError):
+        bcsr_spmm(b.block_cols, b.blocks, x[:17], interpret=True)
+    # dispatch wrapper (ref path on CPU) enforces the same contract
+    from repro.kernels import ops
+    y_ops = ops.bcsr_spmm(b.block_cols, b.blocks, x, nbc=nbc)
+    np.testing.assert_allclose(np.asarray(y_ops), np.asarray(y_r), atol=2e-4)
+    with pytest.raises(ValueError, match="nbc"):
+        ops.bcsr_spmm(b.block_cols, b.blocks, x_short, nbc=nbc)
+
+
 @pytest.mark.parametrize("n", [24, 72])
 def test_sptrsv_level_kernel_full_solve(n):
     from scipy.linalg import solve_triangular

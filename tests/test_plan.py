@@ -49,9 +49,10 @@ def test_plan_cache_spec_keyed_hit_miss():
     p3 = eng.plan(SolveSpec(method="cg", iters=30))
     assert p3 is not p1
     assert len(eng.plans) == 3
-    # canonical spec membership (layout/reorder resolved like the rest)
+    # canonical spec membership (layout/reorder/format resolved alike)
     assert SolveSpec(method="pcg", precond="jacobi", iters=30,
-                     fused=True, layout="dense", reorder="none") in eng.plans
+                     fused=True, layout="dense", reorder="none",
+                     format="ell") in eng.plans
 
 
 def test_tol_changes_never_recompile_fixed_iteration_plans():
@@ -194,7 +195,7 @@ def test_solve_shim_batched_routes_through_batch_plan():
     # membership takes the CANONICAL spec (precond resolved, fused bool)
     canonical = SolveSpec(method="pcg", precond="jacobi", iters=20,
                           batch=3, fused=True, layout="dense",
-                          reorder="none")
+                          reorder="none", format="ell")
     assert canonical in eng.plans
     plan = eng.plan(SolveSpec(method="pcg", iters=20, batch=3))
     assert plan.executions == 1              # the shim's execution
